@@ -1,0 +1,70 @@
+"""MoE dispatch at framework scale: unified crossbar vs alternatives.
+
+The paper's Sec. IV comparison lifted to the framework's flagship use:
+routing T tokens to E experts via
+  (a) the unified crossbar (prefix-sum positions + one-hot matmul),
+  (b) argsort-based dispatch (the ragged/sort lineage),
+  (c) a sequential one-token-per-step loop (the multi-cycle baseline).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import hlo_cost, row, time_fn
+from repro.core import baselines as B
+from repro.core import moe_dispatch as md
+
+T, E, K, D = 1024, 8, 2, 256
+CAP = int(1.25 * T * K / E)
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (T, D))
+    logits = jax.random.normal(key, (T, E))
+
+    def unified(x, logits):
+        r = md.make_routing(logits, num_experts=E, k=K, capacity=CAP)
+        return md.dispatch(x, r)
+
+    def argsort(x, logits):
+        ids = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return B.moe_dispatch_argsort_baseline(x, ids, E, CAP)
+
+    def sequential(x, logits):
+        ids = jnp.argmax(logits, axis=-1)
+        def step(carry, inp):
+            buf, counts = carry
+            xi, ei = inp
+            c = counts[ei]
+            buf = jax.lax.dynamic_update_slice(
+                buf, xi[None, None, :], (ei, c, 0))
+            return (buf, counts.at[ei].add(1)), None
+        buf = jnp.zeros((E, CAP, D), x.dtype)
+        counts = jnp.zeros((E,), jnp.int32)
+        (buf, _), _ = jax.lax.scan(step, (buf, counts), (x, ids))
+        return buf
+
+    for name, fn in [("unified_crossbar", unified),
+                     ("argsort_baseline", argsort),
+                     ("sequential_baseline", sequential)]:
+        us = time_fn(fn, x, logits, iters=5, warmup=2)
+        fl, by = hlo_cost(fn, x, logits)
+        row(f"moe_dispatch/{name}", us=f"{us:.0f}", hlo_flops=int(fl),
+            hlo_bytes=int(by))
+
+    # routing transform only: Pallas kernel vs jnp path
+    from repro.kernels import ops
+    ids = jax.random.randint(key, (T, K), 0, E, dtype=jnp.int32)
+    us_k = time_fn(lambda i: ops.moe_route_transform(
+        i, num_experts=E, capacity=CAP)[1], ids, iters=5, warmup=2)
+    us_j = time_fn(lambda i: md.compute_positions(i, E), ids, iters=5,
+                   warmup=2)
+    row("moe_dispatch/route_transform", pallas_us=f"{us_k:.0f}",
+        jnp_us=f"{us_j:.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Roofline table reader: aggregates experiments/dryrun JSONs (§Roofline)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRYRUN = os.path.join(HERE, "experiments", "dryrun")
+
+
+def load(mesh="16x16"):
+    d = os.path.join(DRYRUN, mesh)
+    out = []
+    if not os.path.isdir(d):
+        return out
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            try:
+                out.extend(json.load(open(os.path.join(d, f))))
+            except Exception:
+                pass
+    return out
+
+
+def run():
+    rows = load("16x16")
+    if not rows:
+        print("roofline/no-dryrun-data,run launch.dryrun_all first")
+        return
+    print("arch,shape,status,peak_hbm_gib,compute_s,memory_s,collective_s,"
+          "dominant,usefulness,roofline_fraction")
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"{r['arch']},{r['shape']},{r['status']},,,,,,,")
+            continue
+        rl = r["roofline"]
+        frac = rl["compute_s"] / max(rl["step_time_bound_s"], 1e-12)
+        print(f"{r['arch']},{r['shape']},ok,"
+              f"{r['per_device']['peak_hbm_gib']},"
+              f"{rl['compute_s']:.4g},{rl['memory_s']:.4g},"
+              f"{rl['collective_s']:.4g},{rl['dominant']},"
+              f"{rl['usefulness']:.3f},{frac:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""Paper Table I / Fig. 9 analogue: unified datapath vs separate datapaths.
+
+The paper compares silicon area of one unified permutation unit against
+three separate units (crossbar gather + log-shifter slide + SEQUENTIAL
+one-element-per-cycle compress).  Our cost model on TPU: compiled HLO
+FLOPs + bytes (the 'area' analogue: how much machine the op occupies) and
+wall-time on this host (the 'latency' analogue; CPU-relative numbers).
+
+The paper's headline result reproduces as: the unified engine executes
+vcompress in ONE fixed-latency crossbar evaluation, while the baseline's
+sequential datapath needs N dependent steps — and the unified engine's
+extra cost over the baseline's *gather-only* crossbar is small.
+
+VL=256 bits at SEW=8 -> N=32 elements (the paper's machine);
+payload D plays the role of total element width.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import hlo_cost, row, time_fn
+from repro.core import baselines as B
+from repro.core import permute as P
+
+N = 32           # VL=256b / SEW=8b
+D = 128          # payload width per element
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (N, D))
+    idx = jax.random.randint(key, (N,), 0, N, dtype=jnp.int32)
+    mask = jax.random.bernoulli(key, 0.5, (N,))
+    off = jnp.asarray(5, jnp.int32)
+
+    cases = {
+        # unified datapath: everything through the one crossbar
+        "unified/vrgather": (lambda x, i: P.vrgather(x, i), (x, idx)),
+        "unified/vcompress": (lambda x, m: P.vcompress(x, m), (x, mask)),
+        "unified/vslideup": (lambda x, o: P.vslideup(x, o), (x, off)),
+        # baseline: separate datapaths (paper Sec. IV)
+        "separate/vrgather(crossbar)": (
+            lambda x, i: B.gather_baseline(x, i), (x, idx)),
+        "separate/vcompress(sequential)": (
+            lambda x, m: B.compress_baseline_sequential(x, m), (x, mask)),
+        "separate/vslide(log-shifter)": (
+            lambda x, o: B.slide_baseline(x, o, up=True), (x, off)),
+    }
+    totals = {"unified": [0.0, 0.0], "separate": [0.0, 0.0]}
+    for name, (fn, args) in cases.items():
+        us = time_fn(fn, *args)
+        fl, by = hlo_cost(fn, *args)
+        row(name, us=f"{us:.1f}", hlo_flops=int(fl), hlo_bytes=int(by))
+        fam = name.split("/")[0]
+        totals[fam][0] += fl
+        totals[fam][1] += by
+    uf, ub = totals["unified"]
+    sf, sb = totals["separate"]
+    row("table1/total", unified_flops=int(uf), separate_flops=int(sf),
+        flops_ratio=f"{uf / max(sf, 1):.3f}",
+        unified_bytes=int(ub), separate_bytes=int(sb))
+    # fixed-latency check: compress wall time must not depend on mask density
+    t_empty = time_fn(lambda m: P.vcompress(x, m), jnp.zeros(N, jnp.bool_))
+    t_full = time_fn(lambda m: P.vcompress(x, m), jnp.ones(N, jnp.bool_))
+    row("table1/fixed_latency", us_mask_empty=f"{t_empty:.1f}",
+        us_mask_full=f"{t_full:.1f}",
+        ratio=f"{t_full / max(t_empty, 1e-9):.2f}")
+
+
+if __name__ == "__main__":
+    run()

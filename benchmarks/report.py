@@ -1,0 +1,81 @@
+"""Generate EXPERIMENTS.md markdown tables from the dry-run JSONs.
+
+Usage: PYTHONPATH=src python -m benchmarks.report [--mesh 16x16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.bench_roofline import load
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.1f}"
+
+
+def dryrun_table(mesh):
+    rows = load(mesh)
+    out = [f"### Mesh {mesh} ({'512' if 'x16x16' in mesh and mesh.startswith('2') else '256'} chips)",
+           "",
+           "| arch | shape | status | peak HBM (GiB/dev) | compile (s) | "
+           "FLOPs/dev | HLO bytes/dev | coll bytes/dev (GiB) | collectives |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | skipped | — | — | — "
+                       f"| — | — | {r.get('reason','')[:60]} |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | **{r['status']}** "
+                       f"| — | — | — | — | — | {r.get('error','')[:60]} |")
+            continue
+        pd = r["per_device"]
+        coll = ", ".join(f"{k.split('-')[-1]}:{fmt_bytes(v)}"
+                         for k, v in sorted(r.get("collectives", {}).items()))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | "
+            f"{pd['peak_hbm_gib']:.1f} | {r['compile_s']:.0f} | "
+            f"{pd['flops']:.3g} | {pd['hlo_bytes']:.3g} | "
+            f"{fmt_bytes(pd['collective_bytes'])} | {coll} |")
+    return "\n".join(out)
+
+
+def roofline_table(mesh="16x16"):
+    rows = [r for r in load(mesh) if r["status"] == "ok"]
+    out = ["| arch | shape | T_comp (s) | T_mem (s) | T_coll (s) | dominant "
+           "| MODEL_FLOPs | usefulness | roofline frac | one-line diagnosis |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        rl = r["roofline"]
+        frac = rl["compute_s"] / max(rl["step_time_bound_s"], 1e-12)
+        dom = rl["dominant"].replace("_s", "")
+        diag = {
+            "compute": "near-roofline; only kernel-level wins remain",
+            "memory": "bandwidth-bound: cut f32 round-trips / fuse / "
+                      "raise arithmetic intensity",
+            "collective": "comm-bound: reduce weight re-gathers, bf16 "
+                          "collectives, overlap with compute",
+        }[dom]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3g} | "
+            f"{rl['memory_s']:.3g} | {rl['collective_s']:.3g} | {dom} | "
+            f"{rl['model_flops']:.3g} | {rl['usefulness']:.3f} | "
+            f"{frac:.3f} | {diag} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--roofline", action="store_true")
+    args = ap.parse_args()
+    if args.roofline:
+        print(roofline_table(args.mesh))
+    else:
+        print(dryrun_table(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

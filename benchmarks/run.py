@@ -1,0 +1,36 @@
+"""Benchmark harness: one module per paper table/figure + the roofline
+reader.  Prints CSV lines (``name,key=value,...``)."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_fig9_power_proxy, bench_moe_dispatch,
+                            bench_roofline, bench_table1_element_width,
+                            bench_table1_unified_vs_separate)
+
+    benches = [
+        ("table1_unified_vs_separate", bench_table1_unified_vs_separate.run),
+        ("table1_element_width", bench_table1_element_width.run),
+        ("fig9_power_proxy", bench_fig9_power_proxy.run),
+        ("moe_dispatch", bench_moe_dispatch.run),
+        ("roofline", bench_roofline.run),
+    ]
+    failed = 0
+    for name, fn in benches:
+        print(f"# ---- {name} ----", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # keep the harness running
+            failed += 1
+            print(f"{name},ERROR,{e!r}")
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

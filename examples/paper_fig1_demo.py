@@ -1,0 +1,41 @@
+"""Reproduce the paper's Fig. 1 + Fig. 3 walkthrough, printing every
+intermediate of the unified datapath for vcompress.
+
+Run:  PYTHONPATH=src python examples/paper_fig1_demo.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import crossbar as xb
+from repro.core import transform as T
+
+# Paper Fig. 3: mask = [1,0,0,1,0,1,0,0] over an 8-element vector.
+mask = jnp.asarray([1, 0, 0, 1, 0, 1, 0, 0], jnp.int32)
+n = mask.shape[0]
+print("mask (vs2):             ", np.asarray(mask))
+
+m = np.asarray(mask)
+idx = np.arange(n)
+ones_below = np.concatenate([[0], np.cumsum(m)[:-1]])
+zeros_below = idx - ones_below
+ones_above = np.cumsum(m[::-1])[::-1] - m
+print("prefix 1s (low->high):  ", ones_below)
+print("prefix 0s:              ", zeros_below)
+print("suffix 1s (high->low):  ", ones_above)
+
+dest = T.compress_destinations(mask)
+print("per-input destinations: ", np.asarray(dest),
+      " (mask=1: i - zeros_below; mask=0: i + ones_above)")
+assert bool(T.destinations_are_bijective(dest)), "must be a permutation!"
+
+plan = xb.vcompress_plan(mask)
+P = np.asarray(xb.build_onehot(plan)).astype(int)
+print("crossbar operator (one-hot rows AND columns — Fig. 4):")
+print(P)
+
+x = jnp.arange(1, n + 1, dtype=jnp.float32)[:, None]
+out = xb.apply_plan(plan, x)
+print("input elements:  ", np.asarray(x)[:, 0])
+print("crossbar output: ", np.asarray(out)[:, 0],
+      " (selected {1,4,6} packed to front, rest to tail)")

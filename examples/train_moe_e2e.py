@@ -1,0 +1,52 @@
+"""End-to-end driver: train a ~100M-param MoE LM for a few hundred steps.
+
+The MoE dispatch/combine runs on the unified permutation engine (the
+paper's technique as a first-class framework feature).  Loss falls well
+below the unigram floor within a few hundred steps on the synthetic
+Markov data.
+
+Run:  PYTHONPATH=src python examples/train_moe_e2e.py [--steps 300]
+"""
+
+import argparse
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.data import SyntheticLM
+from repro.models.model_zoo import build
+from repro.train import TrainOptions, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", type=str, default="/tmp/repro_moe_ckpt")
+    args = ap.parse_args()
+
+    # ~100M active params: 8 layers, d=512, 8 experts top-2
+    cfg = ModelConfig(
+        name="moe-100m", family="moe", num_layers=8, d_model=512,
+        num_heads=8, num_kv_heads=8, d_ff=1408, vocab_size=8192,
+        head_dim=64, num_experts=8, num_experts_per_tok=2,
+        compute_dtype="float32", remat="none", attn_chunk=128)
+    print(f"params: {cfg.param_count()/1e6:.0f}M total, "
+          f"{cfg.active_param_count()/1e6:.0f}M active")
+
+    api = build(cfg)
+    pipe = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=256,
+                       global_batch=8)
+    options = TrainOptions(peak_lr=1e-3, warmup_steps=30,
+                           total_steps=args.steps, grad_accum=2)
+    trainer = Trainer(api, options, pipeline=pipe, ckpt_dir=args.ckpt_dir,
+                      keep=2, donate=False)
+    state = trainer.init_or_restore(jax.random.PRNGKey(0))
+    state, hist = trainer.run(state, steps=args.steps, ckpt_every=100,
+                              log_every=20)
+    print(f"final loss {hist[-1]['loss']:.4f} "
+          f"(start {hist[0]['loss']:.4f}); "
+          f"dropped-token fraction {hist[-1].get('dropped', 0):.3f}")
+
+
+if __name__ == "__main__":
+    main()

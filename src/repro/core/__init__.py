@@ -1,0 +1,53 @@
+"""repro.core — the unified vector-permutation engine (the paper's contribution).
+
+Public API re-exports.  See DESIGN.md for the RISC-V -> TPU mapping.
+"""
+
+from repro.core.transform import (
+    DROP,
+    compress_destinations,
+    compress_keep_count,
+    destinations_are_bijective,
+    exclusive_cumsum,
+    exclusive_suffix_sum,
+    gather_sources_from_destinations,
+    slide_destinations,
+)
+from repro.core.crossbar import (
+    GATHER,
+    SCATTER,
+    PermutePlan,
+    apply_plan,
+    build_onehot,
+    coverage,
+    gather_plan,
+    scatter_plan,
+    transpose_plan,
+    vcompress_plan,
+    vrgather_plan,
+    vslide_plan,
+)
+from repro.core.permute import (
+    vcompress,
+    vexpand,
+    vmerge,
+    vrgather,
+    vslide1down,
+    vslide1up,
+    vslidedown,
+    vslideup,
+)
+from repro.core import baselines, moe_dispatch, sequence
+
+__all__ = [
+    "DROP", "GATHER", "SCATTER", "PermutePlan",
+    "apply_plan", "build_onehot", "coverage",
+    "gather_plan", "scatter_plan", "transpose_plan",
+    "vcompress_plan", "vrgather_plan", "vslide_plan",
+    "compress_destinations", "compress_keep_count",
+    "destinations_are_bijective", "exclusive_cumsum", "exclusive_suffix_sum",
+    "gather_sources_from_destinations", "slide_destinations",
+    "vcompress", "vexpand", "vmerge", "vrgather",
+    "vslide1down", "vslide1up", "vslidedown", "vslideup",
+    "baselines", "moe_dispatch", "sequence",
+]

@@ -1,0 +1,115 @@
+"""The paper's BASELINE vector processor: separate permutation datapaths.
+
+The paper compares its unified unit against a baseline that executes
+(Sec. IV):
+  (a) ``vrgather``  — the same crossbar logic (Fig. 2);
+  (b) ``vslide``    — a *separate* logarithmic shifter at byte level;
+  (c) ``vcompress`` — a *sequential* datapath moving ONE element with an
+      asserted mask bit per cycle (multi-cycle, like Saturn [19]).
+
+These are implemented here faithfully (same observable semantics, the
+baseline *structure*) so benchmarks can reproduce the paper's
+unified-vs-separate comparison at framework scale:
+
+  * the log-shifter is staged power-of-two selects (log2(N) mux stages);
+  * the sequential compress is a ``lax.scan`` carrying a write cursor —
+    one element per step, i.e. latency proportional to N and dependent on
+    the data (the exact property the unified design removes);
+  * gather reuses the crossbar.
+
+Differential tests assert unified == baseline on all inputs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import crossbar as xb
+
+Array = jax.Array
+
+
+def gather_baseline(x: Array, idx: Array) -> Array:
+    """(a) Baseline vrgather: same crossbar structure as the unified unit."""
+    plan = xb.vrgather_plan(idx.astype(jnp.int32), x.shape[0])
+    return xb.apply_plan(plan, x, backend="einsum")
+
+
+def _log_shift_stage(x: Array, amount: int, bit: Array, *, up: bool) -> Array:
+    """One mux stage of the logarithmic shifter: shift by ``amount`` iff bit."""
+    if up:
+        shifted = jnp.concatenate([jnp.zeros_like(x[:amount]), x[:-amount]],
+                                  axis=0) if amount else x
+    else:
+        shifted = jnp.concatenate([x[amount:], jnp.zeros_like(x[:amount])],
+                                  axis=0) if amount else x
+    return jnp.where(bit, shifted, x)
+
+
+def slide_baseline(x: Array, offset, *, up: bool) -> Array:
+    """(b) Baseline vslide: logarithmic shifter (log2 N stages of muxes).
+
+    Stage s shifts by 2**s iff bit s of the offset is set — the classic
+    barrel/log shifter the baseline processor instantiates separately.
+    """
+    n = x.shape[0]
+    off = jnp.asarray(offset, dtype=jnp.int32)
+    out = x
+    s = 0
+    while (1 << s) < n:
+        bit = ((off >> s) & 1).astype(bool)
+        out = _log_shift_stage(out, 1 << s, bit, up=up)
+        s += 1
+    # offsets >= n clear the register entirely
+    out = jnp.where(off >= n, jnp.zeros_like(out), out)
+    return out
+
+
+def compress_baseline_sequential(x: Array, mask: Array) -> Array:
+    """(c) Baseline vcompress: one element per cycle (multi-cycle datapath).
+
+    A ``lax.scan`` over input elements carrying (output_register,
+    write_cursor): each step conditionally writes one masked element and
+    advances the cursor — exactly the Saturn-style sequential engine.  The
+    *number of useful cycles* depends on the mask (data-dependent latency);
+    the scan itself is fixed-trip-count so it remains jittable.
+    """
+    n = x.shape[0]
+    x2 = x.reshape(n, -1)
+    m = mask.astype(jnp.int32)
+
+    def step(carry, inp):
+        out, cursor = carry
+        xi, mi = inp
+        row = jax.nn.one_hot(cursor, n, dtype=x2.dtype)[:, None]  # (n,1)
+        out = out + row * xi[None, :] * mi.astype(x2.dtype)
+        cursor = cursor + mi
+        return (out, cursor), None
+
+    init = (jnp.zeros_like(x2), jnp.asarray(0, jnp.int32))
+    (out, _), _ = jax.lax.scan(step, init, (x2, m))
+    return out.reshape(x.shape)
+
+
+def moe_dispatch_argsort_baseline(x: Array, expert_ids: Array,
+                                  num_experts: int, capacity: int) -> Array:
+    """Sort-based MoE dispatch baseline (the ragged/argsort lineage).
+
+    Tokens are argsorted by (expert, arrival) and sliced into buffers —
+    semantically equal to the unified crossbar dispatch for top-1 routing,
+    but built on a data-dependent sort network instead of a fixed crossbar.
+    """
+    t, d = x.shape
+    e1 = expert_ids[:, 0]  # top-1 only for the baseline
+    order = jnp.argsort(e1 * t + jnp.arange(t, dtype=e1.dtype), stable=True)
+    sorted_ids = e1[order]
+    # position within expert group after the sort
+    onehot = jax.nn.one_hot(sorted_ids, num_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.sum(pos * onehot, axis=-1)
+    buf = jnp.zeros((num_experts, capacity, d), dtype=x.dtype)
+    keep = pos < capacity
+    buf = buf.at[sorted_ids, jnp.clip(pos, 0, capacity - 1)].add(
+        jnp.where(keep[:, None], x[order], 0))
+    return buf

@@ -1,0 +1,284 @@
+"""The one-hot crossbar: the universal executor of the unified datapath.
+
+The paper's crossbar (Sec. III-A, Fig. 2) is a matrix of AND-OR multiplexers:
+output ``o`` receives ``sum_i onehot[o, i] * x[i]``.  On a TPU the natural —
+and fast — form of that computation is a dense matmul against a one-hot
+operator matrix, executed on the MXU.  This module provides:
+
+* ``PermutePlan`` — the compiled control information of a permutation:
+  either *gather* form (per-output source indices — output-driven
+  instructions) or *scatter* form (per-input destination indices —
+  input-driven instructions after core/transform.py pre-processing).
+  Plans support multi-index selections with optional per-select weights,
+  which is what lets the same crossbar implement weighted MoE combine
+  (a crossbar whose AND-OR selects carry gate scalars).
+
+* ``build_onehot``  — materialise the (n_out, n_in) operator (reference /
+  small sizes / tests).
+
+* ``apply_plan``    — execute the crossbar.  Backends:
+    - 'einsum':  XLA dense path — builds one-hot and contracts; XLA fuses
+      the iota-compare into the matmul producer. Default, always available.
+    - 'kernel':  Pallas kernel (kernels/crossbar_permute.py) that builds
+      one-hot *tiles* in VMEM on the fly — the operator never exists in HBM.
+    - 'reference': jnp.take-based oracle (the "separate datapath" world);
+      used for differential testing.
+
+Fixed-latency property: every backend is branch-free and fixed-shape.  Out
+of range indices produce all-zero one-hot rows/columns (the SAD
+out-of-bounds drop), never an error and never a data-dependent branch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import transform as _t
+
+Array = jax.Array
+
+GATHER = "gather"    # output-driven: idx[o, k] = source of output o
+SCATTER = "scatter"  # input-driven:  idx[i, k] = destination of input i
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PermutePlan:
+    """Control information for one crossbar evaluation.
+
+    Attributes:
+      mode: GATHER (output-driven) or SCATTER (input-driven).
+      idx:  int32 (n_ctrl, k) — multi-index selects.  In gather mode
+            n_ctrl == n_out; in scatter mode n_ctrl == n_in.  Entries
+            outside the valid range are dropped (match nothing).
+      weights: optional (n_ctrl, k) — per-select scaling (MoE gates).
+            None means 1.0 everywhere.
+      n_in / n_out: crossbar geometry.
+    """
+
+    mode: str
+    idx: Array
+    n_in: int
+    n_out: int
+    weights: Optional[Array] = None
+
+    def __post_init__(self):
+        if self.mode not in (GATHER, SCATTER):
+            raise ValueError(f"bad mode {self.mode!r}")
+        if self.idx.ndim == 1:
+            self.idx = self.idx[:, None]
+        if self.weights is not None and self.weights.ndim == 1:
+            self.weights = self.weights[:, None]
+
+    # -- pytree plumbing so plans can cross jit boundaries ----------------
+    def tree_flatten(self):
+        children = (self.idx, self.weights)
+        aux = (self.mode, self.n_in, self.n_out)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        idx, weights = children
+        mode, n_in, n_out = aux
+        obj = object.__new__(cls)
+        obj.mode, obj.idx, obj.n_in, obj.n_out, obj.weights = (
+            mode, idx, n_in, n_out, weights)
+        return obj
+
+    @property
+    def k(self) -> int:
+        return self.idx.shape[-1]
+
+
+def gather_plan(src_idx: Array, n_in: int, *, weights: Array | None = None) -> PermutePlan:
+    """Output-driven plan: ``out[o] = sum_k w[o,k] * x[src_idx[o,k]]``."""
+    return PermutePlan(GATHER, src_idx.astype(jnp.int32), n_in,
+                       src_idx.shape[0], weights)
+
+
+def scatter_plan(dest_idx: Array, n_out: int, *, weights: Array | None = None) -> PermutePlan:
+    """Input-driven plan: input i lands at ``dest_idx[i,k]`` (OOB drops)."""
+    return PermutePlan(SCATTER, dest_idx.astype(jnp.int32), dest_idx.shape[0],
+                       n_out, weights)
+
+
+def transpose_plan(plan: PermutePlan) -> PermutePlan:
+    """The inverse-direction crossbar (operator transpose).
+
+    One-hot operators with one-hot rows are partial isometries: the
+    transposed plan routes data back.  Used for MoE combine (= dispatchᵀ
+    with gate weights) and for gradients.
+    """
+    mode = SCATTER if plan.mode == GATHER else GATHER
+    return PermutePlan(mode, plan.idx, plan.n_out, plan.n_in, plan.weights)
+
+
+def build_onehot(plan: PermutePlan, dtype=jnp.float32) -> Array:
+    """Materialise the (n_out, n_in) crossbar operator.
+
+    ``P[o, i] = sum_k w[., k] * [idx[., k] selects (o, i)]``.
+
+    Reference path — the Pallas kernel never materialises this matrix.
+    """
+    if plan.mode == GATHER:
+        # idx: (n_out, k); P[o, i] = sum_k w[o,k] * (idx[o,k] == i)
+        iota = jnp.arange(plan.n_in, dtype=jnp.int32)
+        sel = (plan.idx[:, :, None] == iota[None, None, :])  # (n_out, k, n_in)
+        w = (jnp.ones_like(plan.idx, dtype=dtype) if plan.weights is None
+             else plan.weights.astype(dtype))
+        return jnp.sum(sel.astype(dtype) * w[:, :, None], axis=1)
+    else:
+        # idx: (n_in, k); P[o, i] = sum_k w[i,k] * (idx[i,k] == o)
+        iota = jnp.arange(plan.n_out, dtype=jnp.int32)
+        sel = (plan.idx[:, :, None] == iota[None, None, :])  # (n_in, k, n_out)
+        w = (jnp.ones_like(plan.idx, dtype=dtype) if plan.weights is None
+             else plan.weights.astype(dtype))
+        return jnp.sum(sel.astype(dtype) * w[:, :, None], axis=1).T
+
+
+def coverage(plan: PermutePlan) -> Array:
+    """(n_out,) bool — which outputs receive at least one input.
+
+    Uncovered outputs take the merge value (RVV tail/masked-off policy).
+    Unweighted on purpose: a zero-gate selection still *covers* its output.
+    """
+    if plan.mode == GATHER:
+        valid = (plan.idx >= 0) & (plan.idx < plan.n_in)  # (n_out, k)
+        return jnp.any(valid, axis=-1)
+    iota = jnp.arange(plan.n_out, dtype=jnp.int32)
+    hit = (plan.idx[:, :, None] == iota[None, None, :])  # (n_in, k, n_out)
+    return jnp.any(hit, axis=(0, 1))
+
+
+def _canon_2d(x: Array) -> tuple[Array, tuple]:
+    """Flatten trailing dims: (N, ...) -> (N, D)."""
+    shp = x.shape
+    if x.ndim == 1:
+        return x[:, None], shp
+    return x.reshape(shp[0], -1), shp
+
+
+def apply_plan(
+    plan: PermutePlan,
+    x: Array,
+    *,
+    merge: Array | None = None,
+    backend: str = "einsum",
+    out_mask: Array | None = None,
+    interpret: bool | None = None,
+) -> Array:
+    """Execute the crossbar: ``out = P @ x`` with merge semantics.
+
+    Args:
+      plan:  the control information (gather or scatter form).
+      x:     (n_in, ...) data; trailing dims are the payload ("element
+             width" in the paper — arbitrarily wide here).
+      merge: optional (n_out, ...) old-destination values; outputs not
+             covered by the plan (and outputs masked off by ``out_mask``)
+             take these (RVV undisturbed policy).  Default: zeros.
+      backend: 'einsum' | 'kernel' | 'reference'.
+      out_mask: optional (n_out,) bool — the RVV ``v0`` mask: False rows
+             keep merge values (mask applies to *destination* elements).
+      interpret: Pallas interpret-mode override (kernel backend).
+    Returns:
+      (n_out, ...) permuted data.
+    """
+    x2, xshape = _canon_2d(x)
+    out_trailing = xshape[1:]
+    n_out = plan.n_out
+
+    if merge is not None:
+        merge2, _ = _canon_2d(merge)
+    else:
+        merge2 = None
+
+    if backend == "reference":
+        out2 = _apply_reference(plan, x2)
+    elif backend == "kernel":
+        from repro.kernels import ops as _kops  # local import: kernels optional
+        out2 = _kops.crossbar_permute(plan, x2, interpret=interpret)
+    elif backend == "einsum":
+        out2 = _apply_einsum(plan, x2)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    cov = coverage(plan)
+    if out_mask is not None:
+        cov = cov & out_mask.astype(bool)
+        # masked-off outputs must not expose routed data
+        out2 = jnp.where(out_mask.astype(bool)[:, None], out2, 0)
+    if merge2 is not None:
+        out2 = jnp.where(cov[:, None], out2, merge2.astype(out2.dtype))
+    # else uncovered rows are already exact zeros by construction
+
+    out = out2.reshape((n_out,) + out_trailing) if out_trailing else out2[:, 0]
+    return out.astype(x.dtype)
+
+
+def _apply_einsum(plan: PermutePlan, x2: Array) -> Array:
+    """Dense XLA path: one-hot build + MXU contraction, f32 accumulation.
+
+    Selection matmuls are numerically *exact* for unweighted plans (each
+    output row sums at most k one-hot picks); weighted plans accumulate in
+    f32 via preferred_element_type.
+    """
+    if jnp.issubdtype(x2.dtype, jnp.integer) or x2.dtype == jnp.bool_:
+        p = build_onehot(plan, dtype=jnp.int32)
+        return jax.lax.dot(p, x2.astype(jnp.int32),
+                           preferred_element_type=jnp.int32).astype(x2.dtype)
+    p = build_onehot(plan, dtype=x2.dtype)
+    out = jax.lax.dot(p, x2, preferred_element_type=jnp.float32)
+    return out.astype(x2.dtype)
+
+
+def _apply_reference(plan: PermutePlan, x2: Array) -> Array:
+    """jnp.take oracle — the 'separate datapath' semantics, for testing."""
+    k = plan.k
+    w = plan.weights
+    if plan.mode == GATHER:
+        acc = jnp.zeros((plan.n_out, x2.shape[1]), dtype=jnp.float32)
+        for j in range(k):
+            src = plan.idx[:, j]
+            valid = (src >= 0) & (src < plan.n_in)
+            vals = jnp.take(x2, jnp.clip(src, 0, plan.n_in - 1), axis=0)
+            wj = 1.0 if w is None else w[:, j].astype(jnp.float32)[:, None]
+            acc = acc + jnp.where(valid[:, None], vals.astype(jnp.float32) * wj, 0.0)
+        return acc.astype(x2.dtype)
+    acc = jnp.zeros((plan.n_out, x2.shape[1]), dtype=jnp.float32)
+    for j in range(k):
+        dest = plan.idx[:, j]
+        valid = (dest >= 0) & (dest < plan.n_out)
+        wj = 1.0 if w is None else w[:, j].astype(jnp.float32)[:, None]
+        contrib = jnp.where(valid[:, None], x2.astype(jnp.float32) * wj, 0.0)
+        acc = acc.at[jnp.clip(dest, 0, plan.n_out - 1)].add(
+            contrib, mode="drop", unique_indices=False)
+        # clip+where keeps OOB rows from landing anywhere real:
+        # contributions for invalid dests were zeroed above.
+    return acc.astype(x2.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Plan constructors for the three RVV instruction classes (Sec. II-A)
+# ---------------------------------------------------------------------------
+
+def vrgather_plan(src_idx: Array, n_in: int) -> PermutePlan:
+    """Output-driven: per-output source indices straight to the crossbar."""
+    return gather_plan(src_idx, n_in)
+
+
+def vcompress_plan(mask: Array) -> PermutePlan:
+    """Input-driven: mask bits -> bijective destinations -> crossbar."""
+    dest = _t.compress_destinations(mask)
+    n = mask.shape[-1]
+    return scatter_plan(dest, n)
+
+
+def vslide_plan(n: int, offset, *, up: bool) -> PermutePlan:
+    """Input-driven, degenerate transform: index +- offset (no prefix sums)."""
+    dest = _t.slide_destinations(n, offset, up=up)
+    return scatter_plan(dest, n)

@@ -1,0 +1,197 @@
+"""MoE token routing as unified-datapath permutations.
+
+Token dispatch IS ``vcompress``: for each expert ``e`` the set of tokens
+routed to it is a mask over the token axis, the position of a token inside
+the expert's buffer is the paper's prefix-sum-of-1s (Sec. III-B.1), and
+capacity overflow is the SAD out-of-bounds drop (Sec. III-C): a destination
+past the buffer end decodes to an all-zero one-hot row, so the token simply
+"slides out" — fixed shapes, no sorting, no data-dependent control flow.
+
+Dispatch executes as a *scatter-mode* crossbar into the flattened
+``(E*C, D)`` buffer; combine is the *transposed* crossbar with the router
+gates as per-select weights (a weighted AND-OR multiplexer).  Both run as
+dense one-hot contractions on the MXU — the GShard dense-dispatch lineage,
+here derived from and unified with the full RVV permutation semantics.
+
+The expert axis is model-parallel: sharding the ``E*C`` output dimension of
+the dispatch crossbar over the ``model`` mesh axis makes XLA schedule the
+token all-to-all automatically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import crossbar as xb
+from repro.core import transform as _t
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Routing:
+    """Routing decision for one batch of T tokens.
+
+    expert_ids: (T, K) int32 — chosen experts per token.
+    gates:      (T, K) f32   — combine weights (post-normalisation).
+    positions:  (T, K) int32 — rank within each expert's queue.
+    dest:       (T, K) int32 — flattened buffer slot e*C + pos, or DROP.
+    probs:      (T, E) f32   — full router probabilities (for aux losses).
+    num_experts / capacity: geometry.
+    """
+
+    expert_ids: Array
+    gates: Array
+    positions: Array
+    dest: Array
+    probs: Array
+    num_experts: int
+    capacity: int
+
+    def tree_flatten(self):
+        return ((self.expert_ids, self.gates, self.positions, self.dest,
+                 self.probs), (self.num_experts, self.capacity))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        e, g, p, d, pr = children
+        return cls(e, g, p, d, pr, aux[0], aux[1])
+
+
+def compute_positions(expert_ids: Array, num_experts: int) -> Array:
+    """Rank of each (token, slot) assignment within its expert's queue.
+
+    The paper's prefix-sum-of-1s, run for all experts at once: flatten the
+    (T, K) assignments row-major (earlier tokens, then earlier slots, win
+    lower positions), one-hot against the expert axis, exclusive-cumsum
+    down the flattened axis, and read back each assignment's own column.
+
+    Parallel (log-depth) — the carry-save-counter analogue: no serial chain.
+    """
+    t, k = expert_ids.shape
+    flat = expert_ids.reshape(t * k)
+    onehot = (flat[:, None] == jnp.arange(num_experts, dtype=flat.dtype)[None, :])
+    onehot = onehot.astype(jnp.int32)
+    before = _t.exclusive_cumsum(onehot, axis=0)  # (T*K, E)
+    pos = jnp.sum(before * onehot, axis=-1)       # own-column read-back
+    return pos.reshape(t, k)
+
+
+def topk_route(
+    router_logits: Array,
+    k: int,
+    *,
+    renormalize: bool = True,
+) -> tuple[Array, Array, Array]:
+    """Top-k routing (Mixtral-style: softmax over the selected k logits).
+
+    Returns (expert_ids (T,K) int32, gates (T,K) f32, probs (T,E) f32).
+    """
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    top_logits, expert_ids = jax.lax.top_k(router_logits, k)
+    if renormalize:
+        gates = jax.nn.softmax(top_logits.astype(jnp.float32), axis=-1)
+    else:
+        gates = jnp.take_along_axis(probs, expert_ids, axis=-1)
+    return expert_ids.astype(jnp.int32), gates, probs
+
+
+def make_routing(
+    router_logits: Array,
+    *,
+    num_experts: int,
+    k: int,
+    capacity: int,
+    renormalize: bool = True,
+) -> Routing:
+    """Full routing decision: top-k -> positions -> capacity-checked dests."""
+    expert_ids, gates, probs = topk_route(router_logits, k,
+                                          renormalize=renormalize)
+    pos = compute_positions(expert_ids, num_experts)
+    dest = expert_ids * capacity + pos
+    # Capacity overflow = slide-out: push the destination out of range and
+    # let the crossbar's OOB decode drop it (all-zeros one-hot row).
+    dest = jnp.where(pos < capacity, dest, _t.DROP)
+    # Gates of dropped assignments are zeroed so combine ignores them.
+    gates = jnp.where(pos < capacity, gates, 0.0)
+    return Routing(expert_ids, gates.astype(jnp.float32), pos,
+                   dest.astype(jnp.int32), probs, num_experts, capacity)
+
+
+def dispatch_plan(routing: Routing) -> xb.PermutePlan:
+    """Scatter-mode crossbar plan: token t -> buffer slots dest[t, :]."""
+    return xb.scatter_plan(routing.dest,
+                           routing.num_experts * routing.capacity)
+
+
+def combine_plan(routing: Routing) -> xb.PermutePlan:
+    """Gather-mode (transposed) plan with gate weights."""
+    return xb.gather_plan(routing.dest,
+                          routing.num_experts * routing.capacity,
+                          weights=routing.gates)
+
+
+def dispatch(x: Array, routing: Routing, *, backend: str = "einsum") -> Array:
+    """(T, D) tokens -> (E, C, D) expert buffers (dropped tokens vanish)."""
+    out = xb.apply_plan(dispatch_plan(routing), x, backend=backend)
+    return out.reshape(routing.num_experts, routing.capacity, x.shape[-1])
+
+
+def combine(y: Array, routing: Routing, *, backend: str = "einsum") -> Array:
+    """(E, C, D) expert outputs -> (T, D) gate-weighted token outputs."""
+    e, c, d = y.shape
+    out = xb.apply_plan(combine_plan(routing), y.reshape(e * c, d),
+                        backend=backend)
+    return out
+
+
+# -- auxiliary losses ---------------------------------------------------------
+
+def load_balance_loss(routing: Routing) -> Array:
+    """Switch/Mixtral auxiliary loss: E * sum_e f_e * p_e.
+
+    f_e — fraction of assignments routed to expert e (pre-drop);
+    p_e — mean router probability for e.
+    """
+    e = routing.num_experts
+    onehot = jax.nn.one_hot(routing.expert_ids, e, dtype=jnp.float32)  # (T,K,E)
+    f = jnp.mean(jnp.sum(onehot, axis=1), axis=0)          # (E,)
+    p = jnp.mean(routing.probs, axis=0)                    # (E,)
+    return e * jnp.sum(f * p)
+
+
+def router_z_loss(router_logits: Array) -> Array:
+    """Penalise large router logits (ST-MoE): mean(logsumexp(logits)^2)."""
+    z = jax.nn.logsumexp(router_logits.astype(jnp.float32), axis=-1)
+    return jnp.mean(z ** 2)
+
+
+def dropped_fraction(routing: Routing) -> Array:
+    """Telemetry: fraction of (token, slot) assignments that slid out."""
+    return jnp.mean((routing.dest == _t.DROP).astype(jnp.float32))
+
+
+# -- dense reference (for differential tests) ---------------------------------
+
+def dense_reference(x: Array, routing: Routing, expert_fn) -> Array:
+    """O(T*E*C) einsum reference of dispatch->expert->combine.
+
+    Builds the (T, E, C) one-hot dispatch/combine tensors explicitly
+    (GShard formulation) and contracts densely.  Used to validate the
+    crossbar path bit-for-bit in tests.
+    """
+    t, d = x.shape
+    e, c = routing.num_experts, routing.capacity
+    slot = jax.nn.one_hot(routing.positions, c, dtype=jnp.float32)       # (T,K,C)
+    exp = jax.nn.one_hot(routing.expert_ids, e, dtype=jnp.float32)       # (T,K,E)
+    keep = (routing.dest != _t.DROP).astype(jnp.float32)[..., None, None]
+    disp = jnp.einsum("tke,tkc->tec", exp, slot * keep[..., 0, :])       # (T,E,C)
+    comb = jnp.einsum("tk,tke,tkc->tec", routing.gates, exp, slot)       # (T,E,C)
+    buf = jnp.einsum("tec,td->ecd", disp, x.astype(jnp.float32))
+    y = expert_fn(buf)
+    return jnp.einsum("tec,ecd->td", comb, y.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,192 @@
+"""RVV-semantics permutation API on the unified crossbar datapath.
+
+Public, model-facing entry points mirroring the RISC-V vector permutation
+instructions (paper Sec. II-A), all executing on the *same* crossbar
+(core/crossbar.py) regardless of whether their control information is
+output-driven (``vrgather``) or input-driven (``vcompress``, ``vslide*``):
+
+    vrgather    out[o] = x[idx[o]]                   (idx OOB -> 0)
+    vcompress   selected elements packed to front, order preserved
+    vslideup    out[i+off] = x[i]; out[:off] undisturbed (merge)
+    vslidedown  out[i] = x[i+off]; tail reads as zero
+    vslide1up/1down  single-position fast path (pad-shift, outside the
+                unified datapath — per the paper's own Sec. IV guidance)
+    vexpand     inverse of vcompress (front elements scattered to mask=1
+                positions) — not an RVV instruction but the natural
+                transpose; used by MoE combine.
+    vmerge      mask-select between two vectors.
+
+Element width ("SEW") is generalised two ways:
+  * the payload (trailing dims of ``x``) is arbitrary — a "byte" in the
+    paper is a feature vector here;
+  * ``group=g`` permutes g consecutive rows as one unit, shrinking the
+    crossbar N -> N/g.  This reproduces the paper's Table-I observation
+    (cost collapses as the minimum movable element grows) and is swept by
+    benchmarks/bench_table1_element_width.py.
+
+Every op is fixed-shape and branch-free (data-independent latency).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import crossbar as xb
+from repro.core import transform as _t
+
+Array = jax.Array
+
+
+def _group(x: Array, g: int) -> tuple[Array, tuple]:
+    """(N, ...) -> (N//g, g*prod(...)) treating g rows as one element."""
+    shape = x.shape
+    n = shape[0]
+    if n % g:
+        raise ValueError(f"group {g} does not divide N={n}")
+    return x.reshape(n // g, -1), shape
+
+
+def _ungroup(y: Array, shape: tuple) -> Array:
+    return y.reshape(shape)
+
+
+def vrgather(
+    x: Array,
+    idx: Array,
+    *,
+    mask: Array | None = None,
+    merge: Array | None = None,
+    group: int = 1,
+    backend: str = "einsum",
+) -> Array:
+    """Output-driven gather: ``out[o] = x[idx[o]]`` (OOB index -> 0).
+
+    ``mask`` is the RVV v0 destination mask: masked-off outputs keep
+    ``merge`` (default zeros).
+    """
+    xg, shape = _group(x, group)
+    plan = xb.vrgather_plan(idx.astype(jnp.int32), xg.shape[0])
+    mg = _group(merge, group)[0] if merge is not None else None
+    out = xb.apply_plan(plan, xg, merge=mg, out_mask=mask, backend=backend)
+    return _ungroup(out, shape)
+
+
+def vcompress(
+    x: Array,
+    mask: Array,
+    *,
+    tail: str = "zero",
+    merge: Array | None = None,
+    group: int = 1,
+    backend: str = "einsum",
+) -> Array:
+    """Input-driven compress: selected elements packed to the front.
+
+    tail policies for the output positions past the packed prefix:
+      'bijective' — the paper datapath's native behaviour: unselected
+                    elements packed (order-preserving) at the tail.  This
+                    is RVV tail-agnostic compliant and is what the unified
+                    hardware produces.
+      'zero'      — tail zeroed.
+      'keep'      — tail takes ``merge`` (tail-undisturbed).
+    """
+    xg, shape = _group(x, group)
+    n = xg.shape[0]
+    plan = xb.vcompress_plan(mask)
+    if tail == "bijective":
+        out_mask = None
+    elif tail in ("zero", "keep"):
+        k = _t.compress_keep_count(mask)
+        out_mask = jnp.arange(n, dtype=jnp.int32) < k
+    else:
+        raise ValueError(f"unknown tail policy {tail!r}")
+    mg = _group(merge, group)[0] if (merge is not None and tail == "keep") else None
+    out = xb.apply_plan(plan, xg, merge=mg, out_mask=out_mask, backend=backend)
+    return _ungroup(out, shape)
+
+
+def vexpand(
+    x: Array,
+    mask: Array,
+    *,
+    merge: Array | None = None,
+    group: int = 1,
+    backend: str = "einsum",
+) -> Array:
+    """Inverse compress: front elements scattered back to mask=1 slots.
+
+    ``out[i] = x[rank(i)]`` where rank(i) counts 1-bits below i, for
+    mask[i]=1; other outputs take merge (default zeros).  Exactly the
+    transposed compress crossbar.
+    """
+    xg, shape = _group(x, group)
+    plan = xb.transpose_plan(xb.vcompress_plan(mask))
+    mg = _group(merge, group)[0] if merge is not None else None
+    out = xb.apply_plan(plan, xg, merge=mg,
+                        out_mask=mask.astype(bool), backend=backend)
+    return _ungroup(out, shape)
+
+
+def vslideup(
+    x: Array,
+    offset,
+    *,
+    mask: Array | None = None,
+    merge: Array | None = None,
+    group: int = 1,
+    backend: str = "einsum",
+) -> Array:
+    """``out[i+offset] = x[i]``; out[:offset] undisturbed (merge)."""
+    xg, shape = _group(x, group)
+    plan = xb.vslide_plan(xg.shape[0], offset, up=True)
+    mg = _group(merge, group)[0] if merge is not None else None
+    out = xb.apply_plan(plan, xg, merge=mg, out_mask=mask, backend=backend)
+    return _ungroup(out, shape)
+
+
+def vslidedown(
+    x: Array,
+    offset,
+    *,
+    mask: Array | None = None,
+    merge: Array | None = None,
+    group: int = 1,
+    backend: str = "einsum",
+) -> Array:
+    """``out[i] = x[i+offset]``; reads past the end give zero."""
+    xg, shape = _group(x, group)
+    plan = xb.vslide_plan(xg.shape[0], offset, up=False)
+    mg = _group(merge, group)[0] if merge is not None else None
+    out = xb.apply_plan(plan, xg, merge=mg, out_mask=mask, backend=backend)
+    return _ungroup(out, shape)
+
+
+def vslide1up(x: Array, scalar=0) -> Array:
+    """Single-position slide — pad-shift fast path.
+
+    The paper (Sec. IV) observes that 1-position slides are better executed
+    *outside* the unified datapath; this is that path: a static pad+crop,
+    free of any crossbar work.  Used for RWKV/Mamba token-shift.
+    """
+    fill = jnp.full_like(x[:1], scalar)
+    return jnp.concatenate([fill, x[:-1]], axis=0)
+
+
+def vslide1down(x: Array, scalar=0) -> Array:
+    fill = jnp.full_like(x[:1], scalar)
+    return jnp.concatenate([x[1:], fill], axis=0)
+
+
+def vmerge(on_true: Array, on_false: Array, mask: Array) -> Array:
+    """RVV vmerge: per-element select by v0 mask."""
+    m = mask.astype(bool)
+    m = m.reshape(m.shape + (1,) * (on_true.ndim - m.ndim))
+    return jnp.where(m, on_true, on_false)
+
+
+# -- batched convenience ----------------------------------------------------
+
+def batched(fn, *, in_axes=0):
+    """vmap wrapper: lift an (N, D) permutation op over leading batch dims."""
+    return jax.vmap(fn, in_axes=in_axes)

@@ -1,0 +1,70 @@
+"""Slide-based sequence operations for model layers.
+
+``vslide`` generalised to model tensors: token shifting for RWKV/Mamba,
+halo exchange for context parallelism, and sliding-window alignment for
+SWA attention.  Per the paper's Sec. IV guidance, single-position slides
+bypass the unified crossbar (a static pad-shift is cheaper than any
+crossbar); general slides and gathers use the engine.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def token_shift(x: Array, *, axis: int = -2) -> Array:
+    """Shift the sequence axis one step toward the future: y[t] = x[t-1].
+
+    y[0] = 0.  This is ``vslide1up`` lifted over batch/feature axes — the
+    pad-shift fast path (paper Sec. IV: 1-position slides outside the
+    unified datapath).  Used by RWKV token-shift and Mamba conv edges.
+    """
+    axis = axis % x.ndim
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (1, 0)
+    padded = jnp.pad(x, pad)
+    idx = [slice(None)] * x.ndim
+    idx[axis] = slice(0, x.shape[axis])
+    return padded[tuple(idx)]
+
+
+def shift_right(x: Array, *, axis: int = -2, fill=0) -> Array:
+    """Alias of token_shift with explicit fill value (decoder teacher-force)."""
+    axis = axis % x.ndim
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (1, 0)
+    padded = jnp.pad(x, pad, constant_values=fill)
+    idx = [slice(None)] * x.ndim
+    idx[axis] = slice(0, x.shape[axis])
+    return padded[tuple(idx)]
+
+
+def ring_halo(x: Array, axis_name: str, *, shift: int = 1) -> Array:
+    """Context-parallel halo exchange: fetch the neighbour shard's edge.
+
+    Inside ``shard_map`` over a sequence-sharded axis, this is the
+    distributed form of ``vslide``: a ``ppermute`` ring step moving each
+    shard's tail to its successor.  Used to stitch sliding-window
+    attention across context-parallel shards.
+    """
+    n = jax.lax.axis_size(axis_name)
+    perm = [(i, (i + shift) % n) for i in range(n)]
+    return jax.lax.ppermute(x, axis_name, perm=perm)
+
+
+def sliding_window_mask(q_len: int, kv_len: int, window: int,
+                        *, q_offset: int = 0) -> Array:
+    """Boolean (q_len, kv_len) mask: causal AND within ``window`` lookback.
+
+    ``q_offset`` positions the query block inside the full sequence
+    (chunked prefill).  window <= 0 means plain causal.
+    """
+    q_pos = jnp.arange(q_len, dtype=jnp.int32)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len, dtype=jnp.int32)[None, :]
+    causal = k_pos <= q_pos
+    if window > 0:
+        causal &= k_pos > (q_pos - window)
+    return causal

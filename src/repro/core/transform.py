@@ -1,0 +1,150 @@
+"""Control-information transforms for the unified permutation engine.
+
+This module is the JAX port of the paper's pre-processing algorithm
+(Sec. III-B.1, Fig. 3): it converts *input-driven* control information
+(per-input mask bits, slide offsets) into *per-input output destinations*
+that can drive the same one-hot crossbar used by *output-driven*
+instructions (``vrgather``).
+
+Hardware-adaptation notes
+-------------------------
+The paper computes the two prefix sums with carry-save parallel counters and
+fuses the final add+decode in a Sum-Addressed Decoder (SAD) so that no carry
+ever propagates.  The TPU analogue of "no serial carry chain" is "no serial
+data dependence": both prefix sums are parallel ``cumsum``s (log-depth on the
+VPU), and the add+decode fusion happens inside the Pallas crossbar kernel,
+which compares ``index +- sum`` against the output iota directly in registers
+(see kernels/crossbar_permute.py) instead of materialising destinations in
+HBM first.
+
+Out-of-range destinations are *dropped* by construction — the decoded one-hot
+row is all zeros — exactly the SAD out-of-bounds behaviour the paper uses to
+implement slide-out.  The MoE layer reuses the same mechanism for capacity
+overflow (core/moe_dispatch.py).
+
+All functions are branch-free and fixed-shape: execution cost depends only on
+shapes, never on data values (the paper's data-independent-latency
+requirement, which doubles as timing-side-channel hygiene).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Destination value used to mean "dropped / routes nowhere".  Any value
+# outside [0, n_out) works (the crossbar decode matches nothing); -1 is
+# conventional and survives int32 arithmetic.
+DROP = -1
+
+
+def exclusive_cumsum(x: Array, axis: int = -1) -> Array:
+    """Exclusive prefix sum along ``axis`` (low -> high indices)."""
+    return jnp.cumsum(x, axis=axis) - x
+
+
+def exclusive_suffix_sum(x: Array, axis: int = -1) -> Array:
+    """Exclusive suffix sum along ``axis`` (high -> low indices).
+
+    ``out[i] = sum(x[i+1:])`` — the paper's second prefix-sum direction.
+    """
+    total = jnp.sum(x, axis=axis, keepdims=True)
+    return total - jnp.cumsum(x, axis=axis)
+
+
+def compress_destinations(mask: Array) -> Array:
+    """Per-input output destinations for ``vcompress`` (paper Fig. 3).
+
+    Two prefix sums are computed over the mask bits:
+
+    * ``zeros_below[i]`` — number of 0-bits strictly below position ``i``
+      (accumulated from the low end; the paper's count-of-0s sum),
+    * ``ones_above[i]``  — number of 1-bits strictly above position ``i``
+      (accumulated from the high end; the paper's count-of-1s sum).
+
+    Then, exactly as in the paper:
+
+    * if ``mask[i] == 1`` the count of zeros is *subtracted* from the
+      position index:  ``dest[i] = i - zeros_below[i]``
+      (selected elements pack toward index 0, order preserved);
+    * if ``mask[i] == 0`` the count of ones is *added* to the position
+      index:  ``dest[i] = i + ones_above[i]``
+      (unselected elements pack toward the tail, order preserved).
+
+    The result is a **bijection** on [0, N): mask-0 elements are deliberately
+    moved to the tail so that no two inputs share a destination — the
+    property that makes every crossbar row one-hot (Sec. III-B.2).
+
+    Args:
+      mask: (..., N) bool/int — vcompress mask bits (vs2 register).
+    Returns:
+      (..., N) int32 permutation: destination index of each input element.
+    """
+    m = mask.astype(jnp.int32)
+    n = m.shape[-1]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    ones_below = exclusive_cumsum(m, axis=-1)
+    zeros_below = idx - ones_below  # i elements below i, of which ones_below are 1s
+    ones_above = exclusive_suffix_sum(m, axis=-1)
+    return jnp.where(m == 1, idx - zeros_below, idx + ones_above).astype(jnp.int32)
+
+
+def compress_keep_count(mask: Array) -> Array:
+    """Number of selected elements K (the boundary of the packed prefix)."""
+    return jnp.sum(mask.astype(jnp.int32), axis=-1)
+
+
+def slide_destinations(n: int, offset: Array | int, *, up: bool) -> Array:
+    """Per-input destinations for ``vslideup``/``vslidedown`` (Sec. III-C).
+
+    No prefix sums are needed: the (possibly negative) offset is added to
+    every input index.  Destinations that fall outside [0, n) are the
+    elements that "slide out"; they keep their out-of-range value and the
+    crossbar decode drops them (SAD all-zeros behaviour).
+
+    * up:   ``out[i + offset] = in[i]``  -> dest = i + offset
+    * down: ``out[i - offset] = in[i]``  -> dest = i - offset
+    """
+    idx = jnp.arange(n, dtype=jnp.int32)
+    off = jnp.asarray(offset, dtype=jnp.int32)
+    return idx + off if up else idx - off
+
+
+def gather_sources_from_destinations(dest: Array, n_out: int) -> tuple[Array, Array]:
+    """Transpose a per-input destination vector into per-output sources.
+
+    This is the software form of the paper's "wire reshuffling" step
+    (Sec. III-B.2 / Fig. 4): the vertical one-hot vectors (per-input
+    destinations) are re-read as horizontal one-hot vectors (per-output
+    selects).  Implemented as a fixed-shape one-hot contraction — no
+    data-dependent scatter.
+
+    Args:
+      dest: (N_in,) int32 destinations (entries outside [0, n_out) drop).
+      n_out: size of the output register group.
+    Returns:
+      (src, covered): src (n_out,) int32 per-output source index (DROP where
+      no input routes there); covered (n_out,) bool.
+    """
+    n_in = dest.shape[-1]
+    out_iota = jnp.arange(n_out, dtype=jnp.int32)
+    # onehot[o, i] = 1 iff input i routes to output o.
+    onehot = (dest[None, :] == out_iota[:, None]).astype(jnp.int32)
+    covered = jnp.sum(onehot, axis=-1) > 0
+    src = jnp.sum(onehot * jnp.arange(n_in, dtype=jnp.int32)[None, :], axis=-1)
+    return jnp.where(covered, src, DROP).astype(jnp.int32), covered
+
+
+def destinations_are_bijective(dest: Array) -> Array:
+    """Check (symbolically) that a destination vector is a permutation.
+
+    Used by tests/properties; returns a scalar bool array.
+    """
+    n = dest.shape[-1]
+    onehot = (dest[..., None, :] == jnp.arange(n, dtype=dest.dtype)[:, None]).astype(
+        jnp.int32
+    )
+    row_sums = jnp.sum(onehot, axis=-1)
+    return jnp.all(row_sums == 1)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import (DataCursor, SyntheticLM, make_pipeline)
+
+__all__ = ["DataCursor", "SyntheticLM", "make_pipeline"]

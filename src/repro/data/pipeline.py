@@ -1,0 +1,90 @@
+"""Deterministic synthetic LM data pipeline with a sharded host loader.
+
+Design goals (per DESIGN.md §6):
+  * **deterministic & cursor-addressable** — batch(step) is a pure function
+    of (seed, step), so exact-resume after checkpoint restore needs only
+    the step counter (the "data cursor"), and every host can generate its
+    own shard without coordination;
+  * **learnable** — tokens follow an order-2 Markov chain over a small
+    latent alphabet lifted into the vocab, so cross-entropy demonstrably
+    falls below the unigram floor within a few hundred steps (the
+    loss-goes-down integration test);
+  * **sharded** — ``host_batch`` slices the global batch by
+    (host_index, host_count); under pjit the global array is assembled
+    from per-host shards (jax.make_array_from_process_local_data in real
+    multi-host runs; single-process here).
+
+The generator is jit-compatible (threefry counters, no python state), so
+the trainer can fold data generation into the compiled step when desired.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DataCursor:
+    """Exact-resume cursor: the only state the pipeline needs."""
+    seed: int
+    step: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLM:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    latent: int = 61          # latent alphabet size (prime, < vocab)
+
+    def _markov_logits(self) -> Array:
+        """Fixed order-2 transition table over the latent alphabet."""
+        key = jax.random.PRNGKey(self.seed ^ 0x5EED)
+        t = jax.random.normal(key, (self.latent, self.latent, self.latent))
+        return 2.0 * t  # peaked but not deterministic
+
+    def batch(self, step) -> dict:
+        """Global batch at ``step``: {tokens (B, S) int32}."""
+        return self._gen(jnp.asarray(step, jnp.uint32), 0, self.global_batch)
+
+    def host_batch(self, step, host_index: int, host_count: int) -> dict:
+        """This host's slice of the global batch (contiguous block)."""
+        per = self.global_batch // host_count
+        return self._gen(jnp.asarray(step, jnp.uint32), host_index * per, per)
+
+    def _gen(self, step, row0: int, rows: int) -> dict:
+        table = self._markov_logits()
+        base = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+
+        def gen_row(r):
+            key = jax.random.fold_in(base, row0 + r)
+            k0, kseq = jax.random.split(key)
+            init = jax.random.randint(k0, (2,), 0, self.latent)
+
+            def body(carry, k):
+                a, b = carry
+                logits = table[a, b]
+                c = jax.random.categorical(k, logits)
+                return (b, c), c
+
+            keys = jax.random.split(kseq, self.seq_len)
+            _, seq = jax.lax.scan(body, (init[0], init[1]), keys)
+            # lift latent ids into the vocab (spread across the table so
+            # vocab-sharded embeddings see realistic index dispersion)
+            stride = max(self.vocab_size // self.latent, 1)
+            return (seq * stride) % self.vocab_size
+
+        tokens = jax.vmap(gen_row)(jnp.arange(rows)).astype(jnp.int32)
+        return {"tokens": tokens}
+
+
+def make_pipeline(cfg, shape, *, seed: int = 0) -> SyntheticLM:
+    """Pipeline for a (model config, shape cell) pair."""
+    return SyntheticLM(vocab_size=cfg.vocab_size, seq_len=shape.seq_len,
+                       global_batch=shape.global_batch, seed=seed)

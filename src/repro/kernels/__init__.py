@@ -1,0 +1,23 @@
+"""repro.kernels — Pallas TPU kernels for the unified permutation datapath.
+
+Kernels (each with a pure-jnp oracle in ref.py and a padded jit wrapper in
+ops.py; validated in interpret mode on CPU, Mosaic-compiled on TPU):
+
+  crossbar_permute — the unified crossbar: fused one-hot decode + MXU
+                     matmul tiles, gather & scatter modes, weights, merge.
+  fused_compress   — whole vcompress pipeline (bidirectional prefix sums +
+                     SAD-style fused decode + crossbar) in one pallas_call.
+  moe_route        — MoE routing transform with tile-carried expert
+                     occupancy (the carry-save trick at tile granularity).
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.crossbar_permute import crossbar_permute_pallas
+from repro.kernels.fused_compress import fused_vcompress_pallas
+from repro.kernels.moe_route import moe_route_transform_pallas
+
+__all__ = [
+    "ops", "ref",
+    "crossbar_permute_pallas", "fused_vcompress_pallas",
+    "moe_route_transform_pallas",
+]

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: fused MoE routing transform (positions + destinations).
+
+The MoE form of the paper's mask->destination pre-processing (Sec. III-B.1):
+given top-k expert assignments, compute each token's rank inside its
+expert's queue and its flattened buffer destination ``e*C + rank`` (DROP
+when over capacity — the SAD slide-out).
+
+The token axis is gridded; a ``(1, E)`` running-count scratch carries each
+expert's occupancy across grid steps.  This is the carry-save trick at the
+tile level: the cross-tile prefix state is a tiny local carry, never a
+global re-scan, and the within-tile prefix sums are parallel cumsums.
+
+Grid must be sequential over tokens (it is: TPU grids iterate in order).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DROP = -1
+
+
+def _kernel(ids_ref, pos_ref, dest_ref, running_ref, *,
+            num_experts, capacity, bt, k):
+    t_i = pl.program_id(0)
+
+    @pl.when(t_i == 0)
+    def _init():
+        running_ref[...] = jnp.zeros(running_ref.shape, running_ref.dtype)
+
+    ids = ids_ref[...].reshape(bt * k)                       # row-major (t, k)
+    e_iota = jax.lax.broadcasted_iota(jnp.int32, (bt * k, num_experts), 1)
+    onehot = (ids[:, None] == e_iota).astype(jnp.int32)      # (BT*K, E)
+    incl = jnp.cumsum(onehot, axis=0)
+    before = incl - onehot + running_ref[...]                # carry added
+    pos = jnp.sum(before * onehot, axis=-1)                  # (BT*K,)
+    running_ref[...] += incl[-1:, :]
+
+    dest = ids * capacity + pos
+    dest = jnp.where((pos < capacity) & (ids >= 0) & (ids < num_experts),
+                     dest, DROP)
+    pos_ref[...] = pos.reshape(bt, k).astype(jnp.int32)
+    dest_ref[...] = dest.reshape(bt, k).astype(jnp.int32)
+
+
+def moe_route_transform_pallas(
+    expert_ids: jax.Array,
+    *,
+    num_experts: int,
+    capacity: int,
+    block_t: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """expert_ids (T, K) int32 -> (positions (T, K), dest (T, K)) int32.
+
+    T must be a multiple of block_t (pad with ids=-1: padded rows take
+    positions that never count — -1 matches no expert column — and DROP
+    destinations).
+    """
+    t, k = expert_ids.shape
+    assert t % block_t == 0, "pad T before calling the raw kernel"
+    kernel = functools.partial(_kernel, num_experts=num_experts,
+                               capacity=capacity, bt=block_t, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(t // block_t,),
+        in_specs=[pl.BlockSpec((block_t, k), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_t, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, k), jnp.int32),
+            jax.ShapeDtypeStruct((t, k), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, num_experts), jnp.int32)],
+        interpret=interpret,
+    )(expert_ids.astype(jnp.int32))

@@ -1,0 +1,104 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Responsibilities:
+  * pad every axis to kernel block multiples (padding is semantically
+    inert by construction: padded control indices are DROP, padded input
+    rows route nowhere, padded outputs are sliced off);
+  * pick interpret mode automatically (CPU backend -> interpret=True, so
+    the whole suite runs on this container; on TPU the same call sites
+    compile to Mosaic);
+  * accept ``PermutePlan``s from repro.core so the crossbar engine can be
+    switched to the kernel path with ``backend='kernel'``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.crossbar_permute import crossbar_permute_pallas
+from repro.kernels.fused_compress import fused_vcompress_pallas
+from repro.kernels.moe_route import moe_route_transform_pallas
+
+DROP = -1
+
+
+def _default_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult, axis, value=0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def crossbar_permute(plan, x, *, merge=None, interpret=None,
+                     block_o=128, block_n=128, block_d=128):
+    """Execute a repro.core PermutePlan via the Pallas crossbar kernel.
+
+    x: (n_in, D). Returns (n_out, D).
+    """
+    from repro.core import crossbar as xb  # avoid import cycle at load time
+
+    interpret = _default_interpret(interpret)
+    n_in, n_out = plan.n_in, plan.n_out
+    mode = "gather" if plan.mode == xb.GATHER else "scatter"
+
+    # Integer payloads route via f32 (selection is exact; token ids < 2^24).
+    orig_dtype = x.dtype
+    if jnp.issubdtype(x.dtype, jnp.integer) or x.dtype == jnp.bool_:
+        x = x.astype(jnp.float32)
+
+    xp = _pad_to(_pad_to(x, block_n, 0), block_d, 1)
+    # Padded control rows select nothing (DROP).
+    ctrl_block = block_o if mode == "gather" else block_n
+    idxp = _pad_to(plan.idx, ctrl_block, 0, value=DROP)
+    wp = (None if plan.weights is None
+          else _pad_to(plan.weights, ctrl_block, 0))
+    mp = None
+    if merge is not None:
+        merge = merge.astype(xp.dtype)
+        mp = _pad_to(_pad_to(merge, block_o, 0), block_d, 1)
+
+    n_out_pad = n_out + ((-n_out) % block_o)
+    out = crossbar_permute_pallas(
+        idxp, xp, mode=mode, n_out=n_out_pad, weights=wp, merge=mp,
+        n_in_valid=n_in,
+        block_o=block_o, block_n=block_n, block_d=block_d,
+        interpret=interpret)
+    out = out[:n_out, :x.shape[1]]
+    return out.astype(orig_dtype)
+
+
+def fused_vcompress(mask, x, *, tail="zero", interpret=None, block_d=128):
+    """Fused mask->transform->crossbar compress. x: (N, D) -> (N, D)."""
+    interpret = _default_interpret(interpret)
+    orig_dtype = x.dtype
+    if jnp.issubdtype(x.dtype, jnp.integer) or x.dtype == jnp.bool_:
+        x = x.astype(jnp.float32)
+    d = x.shape[1]
+    xp = _pad_to(x, block_d, 1)
+    out = fused_vcompress_pallas(mask, xp, tail=tail, block_d=block_d,
+                                 interpret=interpret)
+    return out[:, :d].astype(orig_dtype)
+
+
+def moe_route_transform(expert_ids, *, num_experts, capacity,
+                        interpret=None, block_t=256):
+    """Fused MoE position/destination transform. (T,K) -> (pos, dest)."""
+    interpret = _default_interpret(interpret)
+    t = expert_ids.shape[0]
+    idp = _pad_to(expert_ids, block_t, 0, value=DROP)
+    pos, dest = moe_route_transform_pallas(
+        idp, num_experts=num_experts, capacity=capacity, block_t=block_t,
+        interpret=interpret)
+    return pos[:t], dest[:t]

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (independent implementations).
+
+These deliberately use index-space semantics (takes / at-scatters / python
+loops over k), NOT the one-hot matmul formulation, so kernel bugs cannot
+cancel against oracle bugs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DROP = -1
+
+
+def crossbar_permute_ref(idx, x, *, mode, n_out, weights=None, merge=None):
+    """Oracle for kernels/crossbar_permute.py.
+
+    idx (n_ctrl, K) int32; x (n_in, D); weights like idx or None;
+    merge (n_out, D) or None -> (n_out, D).
+    """
+    n_in, d = x.shape
+    k = idx.shape[1]
+    xf = x.astype(jnp.float32)
+    acc = jnp.zeros((n_out, d), jnp.float32)
+    covered = jnp.zeros((n_out,), jnp.int32)
+    if mode == "gather":
+        for j in range(k):
+            src = idx[:, j]
+            valid = (src >= 0) & (src < n_in)
+            rows = jnp.take(xf, jnp.clip(src, 0, n_in - 1), axis=0)
+            w = 1.0 if weights is None else weights[:, j].astype(jnp.float32)[:, None]
+            acc = acc + jnp.where(valid[:, None], rows * w, 0.0)
+            covered = covered + valid.astype(jnp.int32)
+    else:
+        for j in range(k):
+            dst = idx[:, j]
+            valid = (dst >= 0) & (dst < n_out)
+            w = 1.0 if weights is None else weights[:, j].astype(jnp.float32)[:, None]
+            contrib = jnp.where(valid[:, None], xf * w, 0.0)
+            acc = acc.at[jnp.clip(dst, 0, n_out - 1)].add(contrib)
+            covered = covered.at[jnp.clip(dst, 0, n_out - 1)].add(
+                valid.astype(jnp.int32))
+    if merge is not None:
+        acc = jnp.where((covered > 0)[:, None], acc, merge.astype(jnp.float32))
+    return acc.astype(x.dtype)
+
+
+def fused_vcompress_ref(mask, x, *, tail="zero"):
+    """Oracle for kernels/fused_compress.py (argwhere-free, order-checked)."""
+    n = x.shape[0]
+    m = mask.astype(jnp.int32)
+    # stable order of selected indices: sort by (1 - m) keeps mask=1 first,
+    # original order inside each class (jnp.argsort stable kind).
+    order = jnp.argsort(1 - m, stable=True)
+    packed = jnp.take(x, order, axis=0)
+    if tail == "bijective":
+        return packed
+    k = jnp.sum(m)
+    keep = jnp.arange(n) < k
+    return jnp.where(keep[:, None], packed, 0).astype(x.dtype)
+
+
+def moe_route_transform_ref(expert_ids, *, num_experts, capacity):
+    """Oracle for kernels/moe_route.py: sequential python-semantics rank."""
+    t, k = expert_ids.shape
+    flat = expert_ids.reshape(t * k)
+    onehot = jax.nn.one_hot(jnp.clip(flat, 0, num_experts - 1), num_experts,
+                            dtype=jnp.int32)
+    onehot = onehot * ((flat >= 0) & (flat < num_experts))[:, None]
+    before = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.sum(before * onehot, axis=-1)
+    dest = flat * capacity + pos
+    dest = jnp.where((pos < capacity) & (flat >= 0) & (flat < num_experts),
+                     dest, DROP)
+    return pos.reshape(t, k).astype(jnp.int32), dest.reshape(t, k).astype(jnp.int32)

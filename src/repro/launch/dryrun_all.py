@@ -1,0 +1,91 @@
+"""Resumable dry-run sweep driver: one subprocess per cell (isolates jax
+state + XLA flags), results as experiments/dryrun/<mesh>/<arch>__<shape>.json.
+
+Single-pod cells run the full three-compile roofline extraction; multi-pod
+cells run --skip-cost (the multi-pod pass proves the 'pod' axis shards;
+the roofline table is single-pod only, per the brief).
+
+Usage:  python -m repro.launch.dryrun_all [--multi-pod] [--only arch[,arch]]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+HERE = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))  # repo root
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--only", type=str, default="")
+    ap.add_argument("--timeout", type=int, default=3000)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import SHAPES, list_archs
+    mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+    outdir = os.path.join(HERE, "experiments", "dryrun", mesh_tag)
+    os.makedirs(outdir, exist_ok=True)
+
+    archs = args.only.split(",") if args.only else list_archs()
+    cells = [(a, s) for a in archs for s in SHAPES]
+    t_start = time.time()
+    n_ok = n_skip = n_fail = 0
+    for i, (arch, shape) in enumerate(cells):
+        out = os.path.join(outdir, f"{arch}__{shape}.json")
+        if os.path.exists(out) and not args.force:
+            try:
+                st = json.load(open(out))[0]["status"]
+                if st in ("ok", "skipped"):
+                    n_ok += st == "ok"
+                    n_skip += st == "skipped"
+                    continue
+            except Exception:
+                pass
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--out", out]
+        if args.multi_pod:
+            cmd += ["--multi-pod", "--skip-cost"]
+        t0 = time.time()
+        try:
+            proc = subprocess.run(cmd, capture_output=True, text=True,
+                                  timeout=args.timeout,
+                                  env={**os.environ,
+                                       "PYTHONPATH": os.path.join(HERE, "src")})
+            rc = proc.returncode
+        except subprocess.TimeoutExpired:
+            rc = -9
+            proc = None
+        dt = time.time() - t0
+        status = "?"
+        if os.path.exists(out):
+            try:
+                status = json.load(open(out))[0]["status"]
+            except Exception:
+                status = "corrupt"
+        if rc != 0 and status not in ("ok", "skipped"):
+            n_fail += 1
+            err = (proc.stderr[-800:] if proc else "TIMEOUT")
+            with open(out, "w") as f:
+                json.dump([{"arch": arch, "shape": shape, "mesh": mesh_tag,
+                            "status": "FAILED", "error": err}], f, indent=1)
+            print(f"[{i+1}/{len(cells)}] FAIL {arch} x {shape} ({dt:.0f}s)",
+                  flush=True)
+        else:
+            n_ok += status == "ok"
+            n_skip += status == "skipped"
+            print(f"[{i+1}/{len(cells)}] {status:7s} {arch} x {shape} "
+                  f"({dt:.0f}s)", flush=True)
+    print(f"done in {time.time()-t_start:.0f}s: ok={n_ok} skipped={n_skip} "
+          f"failed={n_fail}")
+
+
+if __name__ == "__main__":
+    main()

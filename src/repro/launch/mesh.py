@@ -1,0 +1,31 @@
+"""Production meshes (DESIGN.md §6).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before any jax
+initialization, and tests/benches must keep seeing 1 device.
+
+Axes:
+    single-pod:  (16, 16)      -> ("data", "model")   = 256 chips
+    multi-pod:   (2, 16, 16)   -> ("pod", "data", "model") = 512 chips
+
+Logical mapping: batch -> ("pod", "data"); fsdp -> "data"; tp -> "model".
+The "pod" axis is the slowest (DCN between pods); only batch-parallel
+traffic (gradient all-reduce) crosses it.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, data: int | None = None, model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = data if data is not None else max(n // model, 1)
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,215 @@
+"""GQA attention: chunked training/prefill path + cached decode path.
+
+Training/prefill never materialises the full (S, S) score matrix: queries
+are processed in chunks of ``cfg.attn_chunk`` (a ``lax.scan``), bounding
+the transient to (B, H, chunk, S) — the fixed-shape, branch-free analogue
+of flash attention's row blocking (full-row softmax per chunk; a running-
+softmax Pallas kernel is a recorded perf-iteration candidate).
+
+Sliding-window attention reuses the same path with a window mask
+(core.sequence.sliding_window_mask); at decode time SWA uses a ring-buffer
+cache whose slot arithmetic is the paper's slide-out: positions older than
+the window map out of range and drop.
+
+Decode supports two cache layouts:
+  * full cache (B, S_max, KV, hd), written at ``pos`` — full-attention archs;
+  * ring cache (B, W, KV, hd), written at ``pos % W`` — SWA archs, giving
+    O(W) memory for 500k-token contexts.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sequence import sliding_window_mask
+from repro.dist.annotate import active_mesh as _ann_active
+from repro.dist.annotate import annotate, annotate_heads
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+def annotate_grouped_q(qh):
+    """Annotate a grouped-decode query (B, C, KV, rep, hd) to MIRROR the
+    KV-cache sharding rule (dist.cache_shardings): kv-heads over 'model'
+    when divisible, else head_dim.  Without this, the reshape that splits
+    the tp-sharded (H*hd) projection across (KV, rep) leaves q sharded
+    incompatibly with the cache and GSPMD falls back to involuntary full
+    rematerialisation — a measured 1 GiB/layer f32 all-gather of the
+    cache at 32k context."""
+    mesh = _ann_active()
+    if mesh is None:
+        return qh
+    model_sz = mesh.shape["model"]
+    b, c, kv, rep, hd = qh.shape
+    if kv % model_sz == 0:
+        return annotate(qh, "batch", None, "tp", None, None)
+    if hd % model_sz == 0:
+        return annotate(qh, "batch", None, None, None, "tp")
+    return annotate(qh, "batch")
+
+
+def _repeat_kv(k, rep):
+    """(B, S, KV, hd) -> (B, S, KV*rep, hd).  A broadcast XLA fuses into
+    the consuming matmul; materialised only when resharding requires it."""
+    if rep == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :],
+                            (b, s, kv, rep, hd)).reshape(b, s, kv * rep, hd)
+
+
+def attn_init(key, cfg):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(k1, d, h * hd, bias=cfg.qkv_bias),
+        "wk": L.dense_init(k2, d, kv * hd, bias=cfg.qkv_bias),
+        "wv": L.dense_init(k3, d, kv * hd, bias=cfg.qkv_bias),
+        "wo": L.dense_init(k4, h * hd, d),
+    }
+
+
+def _project_qkv(p, x, cfg, positions, dtype):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = L.dense(p["wq"], x, dtype).reshape(b, s, h, hd)
+    k = L.dense(p["wk"], x, dtype).reshape(b, s, kv, hd)
+    v = L.dense(p["wv"], x, dtype).reshape(b, s, kv, hd)
+    q = L.apply_rope(q, positions, theta=cfg.rope_theta, rotary_pct=cfg.rotary_pct)
+    k = L.apply_rope(k, positions, theta=cfg.rope_theta, rotary_pct=cfg.rotary_pct)
+    return q, k, v
+
+
+def _sdpa_chunk(q_c, k, v, mask, cfg):
+    """One query chunk against full K/V. q_c (B,C,H,hd); k,v (B,S,KV,hd).
+
+    GQA is flattened to full heads (K/V broadcast ``rep`` times) so that
+    the head axis — H, not the awkward (KV, rep) pair — shards over
+    'model'.  Without explicit annotations GSPMD loses head sharding at
+    the reshape-split boundary and *replicates* the (B, H, C, S) score
+    tensor over the model axis (16x temp-memory blowup measured in the
+    dry-run).  When H doesn't divide the model axis (minicpm's 36 heads)
+    the score sequence axis shards instead — context-parallel attention;
+    GSPMD psums the partial softmax.
+    """
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    rep = h // kv
+    b, c, _, hd = q_c.shape
+    k = annotate_heads(_repeat_kv(k, rep))            # (B,S,H,hd)
+    v = annotate_heads(_repeat_kv(v, rep))
+    q_c = annotate_heads(q_c)
+    scores = jnp.einsum("bchd,bshd->bhcs", q_c, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    scores = annotate_heads(scores, heads=1, seq=3)   # (B,H,C,S)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhcs,bshd->bchd", probs.astype(q_c.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, c, h * hd).astype(q_c.dtype)
+
+
+def attn_apply(p, x, cfg, *, positions=None, causal=True):
+    """Training / prefill attention. x (B, S, D) -> (B, S, D)."""
+    dtype = x.dtype
+    b, s, d = x.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    q, k, v = _project_qkv(p, x, cfg, positions, dtype)
+
+    chunk = min(cfg.attn_chunk, s)
+    if s % chunk:
+        chunk = s  # fall back to single chunk for ragged smoke shapes
+    n_chunks = s // chunk
+
+    def body(carry, q_off):
+        q_c = jax.lax.dynamic_slice_in_dim(q, q_off, chunk, axis=1)
+        if causal:
+            m = sliding_window_mask(chunk, s, cfg.sliding_window,
+                                    q_offset=q_off)
+        else:
+            m = jnp.ones((chunk, s), dtype=bool)
+        o = _sdpa_chunk(q_c, k, v, m, cfg)
+        return carry, o
+
+    offs = jnp.arange(n_chunks, dtype=jnp.int32) * chunk
+    _, outs = L.scan(cfg, body, None, offs)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, cfg.num_heads * cfg.hd)
+    return L.dense(p["wo"], out, dtype)
+
+
+def cross_attn_apply(p, x, kv_src, cfg, *, positions=None):
+    """Encoder-decoder cross attention (no mask, no rope on kv)."""
+    dtype = x.dtype
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = L.dense(p["wq"], x, dtype).reshape(b, s, h, hd)
+    k = L.dense(p["wk"], kv_src, dtype).reshape(b, -1, kv, hd)
+    v = L.dense(p["wv"], kv_src, dtype).reshape(b, -1, kv, hd)
+    m = jnp.ones((s, k.shape[1]), dtype=bool)
+    out = _sdpa_chunk(q, k, v, m, cfg)
+    return L.dense(p["wo"], out, dtype)
+
+
+# -- decode path --------------------------------------------------------------
+
+def init_cache(cfg, batch, max_seq, dtype=jnp.bfloat16):
+    """Per-layer KV cache. SWA archs get a ring buffer of window size."""
+    w = cfg.sliding_window if cfg.sliding_window > 0 else max_seq
+    w = min(w, max_seq)
+    kv, hd = cfg.num_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, w, kv, hd), dtype),
+        "v": jnp.zeros((batch, w, kv, hd), dtype),
+    }
+
+
+def decode_attn_apply(p, x1, cache, pos, cfg):
+    """One-token decode. x1 (B, 1, D); pos scalar int32 (current index).
+
+    Returns (out (B,1,D), new_cache).  Ring-buffer slot = pos % W — the
+    slide-out drop realised as modular cache addressing.
+    """
+    dtype = x1.dtype
+    b = x1.shape[0]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q, k1, v1 = _project_qkv(p, x1, cfg, positions, dtype)
+
+    w = cache["k"].shape[1]
+    slot = jnp.mod(pos, w)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                                  k1.astype(cache["k"].dtype),
+                                                  slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                                  v1.astype(cache["v"].dtype),
+                                                  slot, axis=1)
+
+    # Decode keeps the GROUPED (KV, rep) einsum — NOT the flattened-head
+    # form used by the chunked train path: the cache shards on kv-heads
+    # (or head_dim when kv < model axis; see dist.cache_shardings), and a
+    # repeat-to-H would materialise an unsharded (B, W, H, hd) copy
+    # (measured +8.5 GiB/device at 32k).  With hd sharded, the score
+    # einsum contracts the sharded dim -> GSPMD psums the tiny partial
+    # scores instead.
+    rep = h // kv
+    qh = annotate_grouped_q(q.reshape(b, 1, kv, rep, hd))
+    scores = jnp.einsum("bckrh,bskh->bkrcs", qh, k_cache,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    # validity: slot s holds absolute position p_s; valid iff p_s <= pos
+    # and within the window.  For the ring buffer, slots beyond the number
+    # of tokens written are invalid.
+    slot_idx = jnp.arange(w, dtype=jnp.int32)
+    written = jnp.where(pos + 1 >= w, w, pos + 1)
+    valid = slot_idx < written
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkrcs,bskh->bckrh", probs.astype(dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, h * hd).astype(dtype)
+    return L.dense(p["wo"], out, dtype), {"k": k_cache, "v": v_cache}

@@ -1,0 +1,206 @@
+"""SeamlessM4T-large-v2 (arXiv:2308.11596) text decoder path: speech/text
+encoder + autoregressive text decoder with cross-attention.
+
+Per the brief the modality frontend is a STUB: ``input_specs()`` provides
+precomputed speech frame embeddings (B, F, d_model) — the w2v-BERT 2.0
+feature extractor lives upstream.  This module implements the 24L encoder
+over those frames and the 24L decoder (self-attn + cross-attn + MLP),
+which is the assigned transformer backbone.
+
+Unified-engine connections:
+  * pad frames are compressed out (``vcompress``) before encoding —
+    sequence packing as the paper's compress;
+  * decode-time cross-attention K/V are computed once at encode and then
+    *gathered* per step — the output-driven ``vrgather`` pattern;
+  * teacher forcing uses ``shift_right`` (1-slide fast path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import permute as P
+from repro.core.sequence import shift_right
+from repro.dist.annotate import annotate
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import transformer as T
+
+Array = jax.Array
+
+
+# -- encoder ------------------------------------------------------------------
+
+def enc_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.norm_init(cfg.d_model, cfg.norm),
+        "attn": A.attn_init(k1, cfg),
+        "ln2": L.norm_init(cfg.d_model, cfg.norm),
+        "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, act=cfg.act),
+    }
+
+
+def enc_block_apply(p, x, cfg):
+    h = A.attn_apply(p["attn"], L.apply_norm(p["ln1"], x, cfg.norm), cfg,
+                     causal=False)
+    x = x + h
+    h = L.mlp_apply(p["mlp"], L.apply_norm(p["ln2"], x, cfg.norm),
+                    act=cfg.act, compute_dtype=x.dtype)
+    return x + h
+
+
+def encode(params, frames, cfg, *, frame_valid=None):
+    """frames (B, F, D) precomputed embeddings -> encoder states (B, F, D)."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(dtype)
+    if frame_valid is not None:
+        x = jax.vmap(lambda xx, m: P.vcompress(xx, m, tail="zero"))(
+            x, frame_valid)
+
+    body = functools.partial(enc_block_apply, cfg=cfg)
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+
+    def scan_body(h, blk):
+        h = annotate(h, "batch", "tp", None)  # sequence-parallel carry
+        return body(blk, h), None
+
+    x, _ = L.scan(cfg, scan_body, x, params["enc_blocks"])
+    return L.apply_norm(params["enc_norm"], x, cfg.norm)
+
+
+# -- decoder ------------------------------------------------------------------
+
+def dec_block_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": L.norm_init(cfg.d_model, cfg.norm),
+        "self_attn": A.attn_init(k1, cfg),
+        "lnx": L.norm_init(cfg.d_model, cfg.norm),
+        "cross_attn": A.attn_init(k2, cfg),
+        "ln2": L.norm_init(cfg.d_model, cfg.norm),
+        "mlp": L.mlp_init(k3, cfg.d_model, cfg.d_ff, act=cfg.act),
+    }
+
+
+def dec_block_apply(p, x, enc_out, cfg):
+    h = A.attn_apply(p["self_attn"], L.apply_norm(p["ln1"], x, cfg.norm), cfg)
+    x = x + h
+    h = A.cross_attn_apply(p["cross_attn"],
+                           L.apply_norm(p["lnx"], x, cfg.norm), enc_out, cfg)
+    x = x + h
+    h = L.mlp_apply(p["mlp"], L.apply_norm(p["ln2"], x, cfg.norm),
+                    act=cfg.act, compute_dtype=x.dtype)
+    return x + h
+
+
+def lm_init(key, cfg):
+    ke, kenc, kdec, kh = jax.random.split(key, 4)
+    return {
+        "embed": L.embed_init(ke, cfg.padded_vocab, cfg.d_model),
+        "enc_blocks": L.stack_layer_params(
+            functools.partial(enc_block_init, cfg=cfg), kenc,
+            cfg.encoder_layers),
+        "enc_norm": L.norm_init(cfg.d_model, cfg.norm),
+        "dec_blocks": L.stack_layer_params(
+            functools.partial(dec_block_init, cfg=cfg), kdec, cfg.num_layers),
+        "final_norm": L.norm_init(cfg.d_model, cfg.norm),
+        "lm_head": L.embed_init(kh, cfg.padded_vocab, cfg.d_model),
+    }
+
+
+def lm_loss(params, batch, cfg):
+    """batch: frontend_embeds (B, F, D) frames, tokens (B, S) targets."""
+    tokens = batch["tokens"]
+    enc_out = encode(params, batch["frontend_embeds"], cfg,
+                     frame_valid=batch.get("frame_valid"))
+    dtype = jnp.dtype(cfg.compute_dtype)
+    inp = shift_right(tokens, axis=-1, fill=0)  # BOS = 0
+    x = L.embed_lookup(params["embed"], inp, dtype)
+
+    body = functools.partial(dec_block_apply, cfg=cfg)
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+
+    def scan_body(h, blk):
+        h = annotate(h, "batch", "tp", None)  # sequence-parallel carry
+        return body(blk, h, enc_out), None
+
+    x, _ = L.scan(cfg, scan_body, x, params["dec_blocks"])
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.logits_projection(params["lm_head"], x, x.dtype)
+    loss = L.cross_entropy(logits, tokens, mask=batch.get("loss_mask"))
+    return loss, {"loss": loss}
+
+
+# -- serving ------------------------------------------------------------------
+
+def init_caches(cfg, batch, max_seq, dtype=jnp.bfloat16):
+    """Self-attn KV per decoder layer (cross K/V primed by prime_cross)."""
+    one = A.init_cache(cfg, batch, max_seq, dtype)
+    return {
+        "self": jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None],
+                                       (cfg.num_layers,) + t.shape), one),
+    }
+
+
+def prime_cross(params, enc_out, cfg, dtype=jnp.bfloat16):
+    """Precompute per-layer cross-attention K/V from encoder states."""
+    b, f, _ = enc_out.shape
+    kv, hd = cfg.num_kv_heads, cfg.hd
+
+    def one_layer(blk):
+        k = L.dense(blk["cross_attn"]["wk"], enc_out,
+                    jnp.dtype(cfg.compute_dtype)).reshape(b, f, kv, hd)
+        v = L.dense(blk["cross_attn"]["wv"], enc_out,
+                    jnp.dtype(cfg.compute_dtype)).reshape(b, f, kv, hd)
+        return {"k": k.astype(dtype), "v": v.astype(dtype)}
+
+    return jax.vmap(one_layer)(params["dec_blocks"])
+
+
+def _cross_decode(p, x1, ck, cv, cfg):
+    b = x1.shape[0]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = L.dense(p["wq"], x1, x1.dtype).reshape(b, 1, h, hd)
+    rep = h // kv
+    qh = A.annotate_grouped_q(q.reshape(b, 1, kv, rep, hd))
+    scores = jnp.einsum("bckrh,bskh->bkrcs", qh, ck,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkrcs,bskh->bckrh", probs.astype(x1.dtype), cv,
+                   preferred_element_type=jnp.float32)
+    return L.dense(p["wo"], o.reshape(b, 1, h * hd).astype(x1.dtype),
+                   x1.dtype)
+
+
+def decode_step(params, tokens1, caches, pos, cfg, *, cross):
+    """One decoder token. cross = prime_cross(...) (stacked per layer)."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = L.embed_lookup(params["embed"], tokens1, dtype)
+
+    def scan_body(h, layer):
+        blk, self_cache, cr = layer
+        hh, self_cache = A.decode_attn_apply(
+            blk["self_attn"], L.apply_norm(blk["ln1"], h, cfg.norm),
+            self_cache, pos, cfg)
+        h = h + hh
+        hh = _cross_decode(blk["cross_attn"],
+                           L.apply_norm(blk["lnx"], h, cfg.norm),
+                           cr["k"], cr["v"], cfg)
+        h = h + hh
+        hh = L.mlp_apply(blk["mlp"], L.apply_norm(blk["ln2"], h, cfg.norm),
+                         act=cfg.act, compute_dtype=h.dtype)
+        return h + hh, self_cache
+
+    x, new_self = L.scan(
+        cfg, scan_body, x, (params["dec_blocks"], caches["self"], cross))
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.logits_projection(params["lm_head"], x, x.dtype)
+    return logits, {"self": new_self}

@@ -1,0 +1,246 @@
+"""Zamba2 hybrid (arXiv:2411.15242): Mamba2 backbone + ONE shared attention
+block applied every ``shared_attn_period`` layers.
+
+The shared block's parameters are reused at every application (Zamba's
+parameter-sharing trick); applications are distinguished by a small
+per-invocation LoRA on the output projection.  The shared block consumes
+``concat(hidden, original_embeddings)`` (2*d wide), per the Zamba design.
+
+Layout: layers are grouped; each group = [shared attention] followed by
+``period`` Mamba2 blocks.  Both levels run as ``lax.scan`` (outer over
+groups with group-stacked Mamba params + LoRA slices, inner over the
+period) to keep HLO size flat in depth.
+
+Decode: per-layer Mamba2 states (O(1) memory) + one KV cache per shared
+application.  For 500k-token decode the shared-attention cache is a
+window-4096 ring buffer (slide-out via modular slots) — the Mamba2 states
+carry long-range information; see DESIGN.md §5 for this documented
+adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.annotate import annotate
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import ssm as S
+
+Array = jax.Array
+
+LORA_RANK = 8
+
+
+def n_groups(cfg):
+    period = cfg.shared_attn_period or cfg.num_layers
+    assert cfg.num_layers % period == 0, "period must divide num_layers"
+    return cfg.num_layers // period, period
+
+
+def shared_attn_init(key, cfg):
+    """The single shared block: attention over concat(h, x0) + MLP."""
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 6)
+    return {
+        "ln1": L.norm_init(2 * d, cfg.norm),
+        "wq": L.dense_init(ks[0], 2 * d, h * hd),
+        "wk": L.dense_init(ks[1], 2 * d, kv * hd),
+        "wv": L.dense_init(ks[2], 2 * d, kv * hd),
+        "wo": L.dense_init(ks[3], h * hd, d),
+        "ln2": L.norm_init(d, cfg.norm),
+        "mlp": L.mlp_init(ks[4], cfg.d_model, cfg.d_ff, act=cfg.act),
+    }
+
+
+def lora_init(key, cfg, count):
+    """Per-invocation output LoRA (stacked over applications)."""
+    d = cfg.d_model
+    k1, _ = jax.random.split(key)
+    return {
+        "a": L.truncated_normal(k1, (count, d, LORA_RANK), 0.01),
+        "b": jnp.zeros((count, LORA_RANK, d), jnp.float32),
+    }
+
+
+def mamba_block_init(key, cfg):
+    k1, _ = jax.random.split(key)
+    return {"ln": L.norm_init(cfg.d_model, cfg.norm),
+            "mamba": S.mamba2_init(k1, cfg)}
+
+
+def lm_init(key, cfg):
+    groups, period = n_groups(cfg)
+    ke, km, ksh, klo, kh = jax.random.split(key, 5)
+    mamba = L.stack_layer_params(
+        functools.partial(mamba_block_init, cfg=cfg), km, cfg.num_layers)
+    # regroup the stacked layer axis: (L, ...) -> (G, period, ...)
+    mamba = jax.tree.map(
+        lambda t: t.reshape((groups, period) + t.shape[1:]), mamba)
+    params = {
+        "embed": L.embed_init(ke, cfg.padded_vocab, cfg.d_model),
+        "shared": shared_attn_init(ksh, cfg),
+        "lora": lora_init(klo, cfg, groups),
+        "mamba": mamba,
+        "final_norm": L.norm_init(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.embed_init(kh, cfg.padded_vocab, cfg.d_model)
+    return params
+
+
+def _shared_qkv(p, cat, cfg, positions, dtype):
+    b, s, _ = cat.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = L.dense(p["wq"], cat, dtype).reshape(b, s, h, hd)
+    k = L.dense(p["wk"], cat, dtype).reshape(b, s, kv, hd)
+    v = L.dense(p["wv"], cat, dtype).reshape(b, s, kv, hd)
+    q = L.apply_rope(q, positions, theta=cfg.rope_theta)
+    k = L.apply_rope(k, positions, theta=cfg.rope_theta)
+    return q, k, v
+
+
+def shared_attn_apply(p, lora_g, x, x0, cfg):
+    """One application of the shared block. x, x0 (B,S,D)."""
+    b, s, d = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    cat = jnp.concatenate([x, x0.astype(x.dtype)], axis=-1)
+    cat = L.apply_norm(p["ln1"], cat, cfg.norm)
+    q, k, v = _shared_qkv(p, cat, cfg, positions, x.dtype)
+
+    from repro.core.sequence import sliding_window_mask
+    m = sliding_window_mask(s, s, 0)
+    o = A._sdpa_chunk(q, k, v, m, cfg)
+    o = L.dense(p["wo"], o, x.dtype)
+    # per-invocation LoRA correction on the output
+    o = o + jnp.einsum("bsd,dr,re->bse", o.astype(jnp.float32),
+                       lora_g["a"], lora_g["b"]).astype(o.dtype)
+    x = x + o
+    h = L.mlp_apply(p["mlp"], L.apply_norm(p["ln2"], x, cfg.norm),
+                    act=cfg.act, compute_dtype=x.dtype)
+    return x + h
+
+
+def lm_hidden(params, tokens, cfg):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x0 = L.embed_lookup(params["embed"], tokens, dtype)
+    groups, period = n_groups(cfg)
+
+    def mamba_body(h, blk):
+        y, _ = S.mamba2_apply(blk["mamba"],
+                              L.apply_norm(blk["ln"], h, cfg.norm), cfg)
+        return h + y, None
+
+    def group_body(h, group):
+        blocks_g, lora_g = group
+        h = annotate(h, "batch", "tp", None)  # sequence-parallel carry
+        h = shared_attn_apply(params["shared"], lora_g, h, x0, cfg)
+        h, _ = L.scan(cfg, mamba_body, h, blocks_g)
+        return h, None
+
+    body = group_body
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = L.scan(cfg, body, x0, (params["mamba"], params["lora"]))
+    return L.apply_norm(params["final_norm"], x, cfg.norm)
+
+
+def lm_loss(params, batch, cfg):
+    tokens = batch["tokens"]
+    hidden = lm_hidden(params, tokens, cfg)
+    head = params.get("lm_head", params["embed"])
+    logits = L.logits_projection(head, hidden, hidden.dtype)
+    loss = L.cross_entropy(logits[:, :-1], tokens[:, 1:],
+                           mask=batch.get("loss_mask"))
+    return loss, {"loss": loss}
+
+
+# -- decode -------------------------------------------------------------------
+
+def init_caches(cfg, batch, max_seq, dtype=jnp.bfloat16, *, window=0):
+    """Mamba states per layer + one KV ring per shared application.
+
+    window > 0 caps the shared-attention cache (long_500k: window=4096).
+    """
+    groups, period = n_groups(cfg)
+    w = min(window, max_seq) if window > 0 else max_seq
+    kv, hd = cfg.num_kv_heads, cfg.hd
+    ssm = S.init_state(cfg, batch)
+    return {
+        "ssm": jax.tree.map(
+            lambda t: jnp.broadcast_to(
+                t[None, None], (groups, period) + t.shape), ssm),
+        "attn_k": jnp.zeros((groups, batch, w, kv, hd), dtype),
+        "attn_v": jnp.zeros((groups, batch, w, kv, hd), dtype),
+        "x0": jnp.zeros((batch, 1, cfg.d_model), jnp.float32),
+    }
+
+
+def _shared_attn_decode(p, lora_g, x1, x0, k_cache, v_cache, pos, cfg):
+    b = x1.shape[0]
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    cat = jnp.concatenate([x1, x0.astype(x1.dtype)], axis=-1)
+    cat = L.apply_norm(p["ln1"], cat, cfg.norm)
+    q, k1, v1 = _shared_qkv(p, cat, cfg, positions, x1.dtype)
+
+    w = k_cache.shape[1]
+    slot = jnp.mod(pos, w)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k1.astype(k_cache.dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v1.astype(v_cache.dtype), slot, axis=1)
+
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    rep = h // kv
+    qh = A.annotate_grouped_q(q.reshape(b, 1, kv, rep, hd))
+    scores = jnp.einsum("bckrh,bskh->bkrcs", qh, k_cache,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    written = jnp.where(pos + 1 >= w, w, pos + 1)
+    valid = jnp.arange(w, dtype=jnp.int32) < written
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkrcs,bskh->bckrh", probs.astype(x1.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, 1, h * hd).astype(x1.dtype)
+    o = L.dense(p["wo"], o, x1.dtype)
+    o = o + jnp.einsum("bsd,dr,re->bse", o.astype(jnp.float32),
+                       lora_g["a"], lora_g["b"]).astype(o.dtype)
+    x1 = x1 + o
+    hmlp = L.mlp_apply(p["mlp"], L.apply_norm(p["ln2"], x1, cfg.norm),
+                       act=cfg.act, compute_dtype=x1.dtype)
+    return x1 + hmlp, k_cache, v_cache
+
+
+def decode_step(params, tokens1, caches, pos, cfg):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x0 = L.embed_lookup(params["embed"], tokens1, dtype)
+    x = x0
+
+    def mamba_body(h, layer):
+        blk, st = layer
+        y, st = S.mamba2_decode(blk["mamba"],
+                                L.apply_norm(blk["ln"], h, cfg.norm),
+                                st, cfg)
+        return h + y, st
+
+    def group_body(h, group):
+        blocks_g, lora_g, ssm_g, kc, vc = group
+        h, kc, vc = _shared_attn_decode(params["shared"], lora_g, h, x0,
+                                        kc, vc, pos, cfg)
+        h, ssm_g = L.scan(cfg, mamba_body, h, (blocks_g, ssm_g))
+        return h, (ssm_g, kc, vc)
+
+    x, (ssm, ks, vs) = L.scan(
+        cfg, group_body, x,
+        (params["mamba"], params["lora"], caches["ssm"],
+         caches["attn_k"], caches["attn_v"]))
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    head = params.get("lm_head", params["embed"])
+    logits = L.logits_projection(head, x, x.dtype)
+    new_caches = {"ssm": ssm, "attn_k": ks, "attn_v": vs,
+                  "x0": caches["x0"]}
+    return logits, new_caches

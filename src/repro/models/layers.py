@@ -1,0 +1,169 @@
+"""Shared model building blocks (pure functional: init dicts + apply fns).
+
+Conventions:
+  * params are nested dicts of jnp arrays; layer stacks carry a leading
+    L axis and are consumed by ``jax.lax.scan``;
+  * weights are stored in ``param_dtype`` (f32 master) and cast to
+    ``compute_dtype`` (bf16) at use — mixed-precision training;
+  * every matmul sets ``preferred_element_type=float32``.
+
+Embedding lookup and logits projection are deliberately formulated as
+one-hot contractions — the same crossbar-gather structure as the paper's
+permutation unit — which is also the GSPMD-friendly form when the vocab
+axis is model-sharded (each shard contracts its slice, then psums).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.annotate import annotate
+
+Array = jax.Array
+PyTree = Any
+
+
+def truncated_normal(key, shape, scale, dtype=jnp.float32):
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape) * scale
+
+
+def dense_init(key, d_in, d_out, *, bias=False, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": truncated_normal(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x, compute_dtype=jnp.bfloat16):
+    w = p["w"].astype(compute_dtype)
+    y = jnp.einsum("...d,df->...f", x.astype(compute_dtype), w,
+                   preferred_element_type=jnp.float32)
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    return y.astype(compute_dtype)
+
+
+def norm_init(d, kind="rmsnorm"):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p, x, kind="rmsnorm", eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+def embed_init(key, vocab, d, scale=0.02):
+    return {"table": truncated_normal(key, (vocab, d), scale)}
+
+
+def embed_lookup(p, tokens, compute_dtype=jnp.bfloat16):
+    """Embedding lookup as an XLA gather (``jnp.take``).
+
+    The crossbar-gather (one-hot matmul) formulation is semantically
+    identical but costs 2*T*V*D MXU FLOPs — at a 150k vocab that exceeds
+    the entire forward pass, so the table row *gather* is the right
+    production form (memory-bound T*D instead).  GSPMD partitions the
+    gather against the (tp, fsdp)-sharded table with index-masked local
+    gathers + psum; verified in the dry-run's memory analysis.
+    """
+    table = p["table"].astype(compute_dtype)
+    return jnp.take(table, tokens, axis=0)
+
+
+def logits_projection(p, x, compute_dtype=jnp.bfloat16):
+    """x @ table^T -> (..., vocab); vocab stays model-sharded."""
+    table = p["table"].astype(compute_dtype)
+    out = jnp.einsum("...d,vd->...v", x.astype(compute_dtype), table,
+                     preferred_element_type=jnp.float32)
+    return annotate(out, "batch", *([None] * (out.ndim - 2)), "tp")
+
+
+# -- rotary position embedding -----------------------------------------------
+
+def rope_freqs(hd_rot: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd_rot, 2, dtype=jnp.float32) / hd_rot))
+
+
+def apply_rope(x: Array, positions: Array, *, theta: float,
+               rotary_pct: float = 1.0) -> Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    hd_rot = int(hd * rotary_pct)
+    hd_rot -= hd_rot % 2
+    if hd_rot == 0:
+        return x
+    freqs = rope_freqs(hd_rot, theta)                       # (hd_rot/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd_rot/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    xr, xp = x[..., :hd_rot], x[..., hd_rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr.astype(x.dtype), xp], axis=-1)
+
+
+# -- MLPs ---------------------------------------------------------------------
+
+def mlp_init(key, d, f, *, act="swiglu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {"wi": dense_init(k1, d, f), "wg": dense_init(k2, d, f),
+                "wo": dense_init(k3, f, d)}
+    return {"wi": dense_init(k1, d, f), "wo": dense_init(k2, f, d)}
+
+
+def mlp_apply(p, x, *, act="swiglu", compute_dtype=jnp.bfloat16):
+    ann = lambda h: annotate(h, "batch", *([None] * (h.ndim - 2)), "tp")
+    if act == "swiglu":
+        h = jax.nn.silu(ann(dense(p["wg"], x, compute_dtype)).astype(jnp.float32))
+        h = (h * ann(dense(p["wi"], x, compute_dtype)).astype(jnp.float32))
+        return dense(p["wo"], h.astype(compute_dtype), compute_dtype)
+    h = jax.nn.gelu(ann(dense(p["wi"], x, compute_dtype)).astype(jnp.float32))
+    return dense(p["wo"], h.astype(compute_dtype), compute_dtype)
+
+
+def stack_layer_params(init_fn, key, n_layers):
+    """Initialise n_layers identical-structure layers, stacked on axis 0."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(init_fn)(keys)
+
+
+def scan(cfg, body, init, xs, **kw):
+    """lax.scan honouring cfg.scan_unroll (see base.ModelConfig)."""
+    return jax.lax.scan(body, init, xs,
+                        unroll=True if cfg.scan_unroll else 1, **kw)
+
+
+def cross_entropy(logits: Array, labels: Array, *, mask: Array | None = None):
+    """Token-level CE with optional validity mask; logits (..., V) f32.
+
+    The gold logit is picked with ``take_along_axis`` (a gather), NOT a
+    one-hot contraction: a materialised (B, S, V) f32 one-hot is ~100 GiB
+    per device at 150k vocab and XLA does not reliably fuse it away (dry-
+    run temp-memory evidence).  GSPMD partitions the gather against a
+    vocab-sharded logits tensor with a masked local gather + psum.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,208 @@
+"""Mixture-of-Experts decoder LM (mixtral-8x22b, phi3.5-moe).
+
+The MoE layer routes tokens through the unified permutation engine
+(core/moe_dispatch.py): top-k routing -> paper prefix-sum positions ->
+capacity-checked destinations (overflow = SAD slide-out) -> scatter-mode
+crossbar dispatch into (E, C, D) -> expert SwiGLU -> transposed weighted
+crossbar combine.  Fixed shapes, no sort, no data-dependent control flow.
+
+Expert FFNs evaluate as a single batched einsum over the (E, C, D) buffer.
+Sharding: E over 'model' when divisible (pure EP, all-to-all on dispatch),
+else expert d_ff over 'model' (TP-MoE) — chosen in dist/sharding.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import moe_dispatch as md
+from repro.dist.annotate import active_mesh, annotate
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import transformer as T
+
+Array = jax.Array
+
+
+def _expert_axis(cfg):
+    """'tp' when experts divide the model axis (pure EP: all-to-all on
+    dispatch), else None (per-expert tensor parallelism over d_ff)."""
+    mesh = active_mesh()
+    if mesh is None:
+        return None
+    return "tp" if cfg.num_experts % mesh.shape["model"] == 0 else None
+
+
+def moe_mlp_init(key, cfg):
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    return {
+        "router": L.dense_init(kr, d, e, scale=0.02),
+        "wi": L.truncated_normal(k1, (e, d, f), scale),
+        "wg": L.truncated_normal(k2, (e, d, f), scale),
+        "wo": L.truncated_normal(k3, (e, f, d), 1.0 / jnp.sqrt(jnp.float32(f))),
+    }
+
+
+def _experts_apply(p, buf, dtype, cfg):
+    """buf (G, E, C, D) -> (G, E, C, D): batched SwiGLU over expert buffers."""
+    ea = _expert_axis(cfg)
+    ff = None if ea == "tp" else "tp"  # EP shards E; TP-MoE shards d_ff
+    wi, wg, wo = (p["wi"].astype(dtype), p["wg"].astype(dtype),
+                  p["wo"].astype(dtype))
+    g = jnp.einsum("gecd,edf->gecf", buf, wg,
+                   preferred_element_type=jnp.float32)
+    h = jnp.einsum("gecd,edf->gecf", buf, wi,
+                   preferred_element_type=jnp.float32)
+    g = annotate(g, "batch", ea, None, ff)
+    h = annotate(h, "batch", ea, None, ff)
+    h = (jax.nn.silu(g) * h).astype(dtype)
+    out = jnp.einsum("gecf,efd->gecd", h, wo,
+                     preferred_element_type=jnp.float32).astype(dtype)
+    return annotate(out, "batch", ea, None, None)
+
+
+def capacity_of(cfg, tokens_per_group: int) -> int:
+    """Expert buffer capacity per routing group, 128-aligned for the MXU."""
+    c = int(cfg.capacity_factor * tokens_per_group *
+            cfg.num_experts_per_tok / cfg.num_experts)
+    if tokens_per_group >= 512:
+        return max(128, ((c + 127) // 128) * 128)
+    return max(cfg.num_experts_per_tok, c)
+
+
+def moe_mlp_apply(p, x, cfg):
+    """x (B, S, D) -> (y (B, S, D), aux {lb_loss, z_loss, dropped}).
+
+    GShard-style GROUP-WISE dispatch: each sequence is a routing group
+    with its own capacity, so dispatch/combine crossbars are *local* to
+    the data shard that owns the sequence (no global-token crossbar — a
+    global buffer cannot shard).  The (G, E, C, D) buffer then shards
+    G -> batch axes and E -> 'model' (pure EP when E divides the model
+    axis); GSPMD schedules the G->E token all-to-all at the annotation
+    boundary.  Per-group capacity overflow is the paper's slide-out.
+    """
+    b, s, d = x.shape
+    cap = capacity_of(cfg, s)
+
+    router_logits = L.dense(p["router"], x, jnp.bfloat16).astype(jnp.float32)
+    routing = jax.vmap(
+        lambda lg: md.make_routing(lg, num_experts=cfg.num_experts,
+                                   k=cfg.num_experts_per_tok, capacity=cap)
+    )(router_logits)                                   # fields lead with B
+    buf = jax.vmap(
+        lambda xg, rg: md.dispatch(xg, rg, backend=cfg.dispatch_backend)
+    )(x, routing)                                      # (B, E, C, D)
+    buf = annotate(buf, "batch", _expert_axis(cfg), None, None)
+    buf = _experts_apply(p, buf, x.dtype, cfg)
+    y = jax.vmap(
+        lambda bg, rg: md.combine(bg, rg, backend=cfg.dispatch_backend)
+    )(buf, routing)                                    # (B, S, D)
+    y = annotate(y, "batch", None, None)
+    aux = {
+        "lb_loss": jnp.mean(jax.vmap(md.load_balance_loss)(routing)),
+        "z_loss": md.router_z_loss(router_logits),
+        "dropped": jnp.mean(jax.vmap(md.dropped_fraction)(routing)),
+    }
+    return y.astype(x.dtype), aux
+
+
+def block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.norm_init(cfg.d_model, cfg.norm),
+        "attn": A.attn_init(k1, cfg),
+        "ln2": L.norm_init(cfg.d_model, cfg.norm),
+        "moe": moe_mlp_init(k2, cfg),
+    }
+
+
+def block_apply(p, x, cfg, *, positions=None):
+    h = A.attn_apply(p["attn"], L.apply_norm(p["ln1"], x, cfg.norm), cfg,
+                     positions=positions)
+    x = x + h
+    h, aux = moe_mlp_apply(p["moe"], L.apply_norm(p["ln2"], x, cfg.norm), cfg)
+    return x + h, aux
+
+
+def lm_init(key, cfg):
+    ke, kb, kh = jax.random.split(key, 3)
+    params = {
+        "embed": L.embed_init(ke, cfg.padded_vocab, cfg.d_model),
+        "blocks": L.stack_layer_params(
+            functools.partial(block_init, cfg=cfg), kb, cfg.num_layers),
+        "final_norm": L.norm_init(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.embed_init(kh, cfg.padded_vocab, cfg.d_model)
+    return params
+
+
+def lm_hidden(params, tokens, cfg):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = L.embed_lookup(params["embed"], tokens, dtype)
+
+    def body(h, layer_params):
+        h = annotate(h, "batch", "tp", None)  # sequence-parallel carry
+        h, aux = block_apply(layer_params, h, cfg)
+        return h, aux
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, auxes = L.scan(cfg, body, x, params["blocks"])
+    aux = jax.tree.map(jnp.mean, auxes)  # average over layers
+    return L.apply_norm(params["final_norm"], x, cfg.norm), aux
+
+
+def lm_loss(params, batch, cfg, *, lb_coef=0.01, z_coef=1e-3):
+    tokens = batch["tokens"]
+    hidden, aux = lm_hidden(params, tokens, cfg)
+    logits = T.lm_logits(params, hidden, cfg)
+    ce = L.cross_entropy(logits[:, :-1], tokens[:, 1:],
+                         mask=batch.get("loss_mask"))
+    loss = ce + lb_coef * aux["lb_loss"] + z_coef * aux["z_loss"]
+    metrics = {"loss": loss, "ce": ce, **aux}
+    return loss, metrics
+
+
+# -- serving ------------------------------------------------------------------
+
+def block_decode(p, x1, cache, pos, cfg):
+    h, cache = A.decode_attn_apply(p["attn"],
+                                   L.apply_norm(p["ln1"], x1, cfg.norm),
+                                   cache, pos, cfg)
+    x1 = x1 + h
+    h, _ = moe_mlp_apply(p["moe"], L.apply_norm(p["ln2"], x1, cfg.norm), cfg)
+    return x1 + h, cache
+
+
+init_caches = T.init_caches
+
+
+def decode_step(params, tokens1, caches, pos, cfg):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = L.embed_lookup(params["embed"], tokens1, dtype)
+
+    def scan_body(carry, layer):
+        # cache-in-carry (see transformer.decode_step): no xs/ys double
+        # buffering of the KV cache through the while loop.
+        h, cc = carry
+        blk, i = layer
+        cache_i = jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, i, 0, keepdims=False),
+            cc)
+        h, new_i = block_decode(blk, h, cache_i, pos, cfg)
+        cc = jax.tree.map(
+            lambda c, nc: jax.lax.dynamic_update_index_in_dim(
+                c, nc.astype(c.dtype), i, 0), cc, new_i)
+        return (h, cc), None
+
+    idx = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+    (x, new_caches), _ = L.scan(cfg, scan_body, (x, caches),
+                                (params["blocks"], idx))
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    return T.lm_logits(params, x, cfg), new_caches

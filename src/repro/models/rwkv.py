@@ -1,0 +1,327 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): attention-free LM with data-dependent
+decay (rwkv6-7b assigned config: 32L, d=4096, d_ff=14336, vocab=65536).
+
+Structure per layer: time-mix (the WKV linear-attention recurrence) +
+channel-mix, both preceded by LayerNorm and a 1-position token shift.
+
+Unified-permutation-engine connections (DESIGN.md §3):
+  * token shift is ``vslide1up`` — executed on the pad-shift fast path,
+    exactly the paper's Sec. IV guidance that 1-position slides bypass the
+    unified crossbar;
+  * the WKV recurrence is evaluated in fixed-size chunks: a ``lax.scan``
+    over chunks carrying the (B, H, N, N) state, with all within-chunk work
+    parallel (decay-weighted intra-chunk attention).  Fixed shapes,
+    branch-free: the same data-independent-latency discipline as the paper.
+
+The recurrence (per head, N = head dim):
+    S_t   = diag(w_t) S_{t-1} + k_t^T v_t
+    out_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with w_t in (0,1)^N computed from the input via a LoRA (the Finch
+data-dependent decay) and u the per-head "bonus" for the current token.
+
+Chunked closed form (chunk positions 0..C-1, lw = log w, f32):
+    lp_t  = inclusive cumsum of lw            (decay up to and incl. t)
+    out_t = (r_t . exp(lp_{t-1})) S_prev                      [state term]
+          + sum_{j<t} (r_t . exp(lp_{t-1} - lp_j)) k_j  v_j   [intra]
+          + (r_t . u . k_t) v_t                               [bonus]
+    S_new = diag(exp(lp_{C-1})) S_prev
+          + sum_j (exp(lp_{C-1} - lp_j) . k_j)^T v_j
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sequence import token_shift
+from repro.dist.annotate import annotate, annotate_heads
+from repro.models import layers as L
+
+Array = jax.Array
+
+LORA_MIX = 32     # TIME_MIX_EXTRA_DIM
+LORA_DECAY = 64   # TIME_DECAY_EXTRA_DIM
+
+
+def _head_geometry(cfg):
+    """RWKV6 fixes head size 64; reduced configs use what divides."""
+    n = min(64, cfg.d_model)
+    while cfg.d_model % n:
+        n //= 2
+    return cfg.d_model // n, n  # (H, N)
+
+
+def time_mix_init(key, cfg):
+    d = cfg.d_model
+    h, n = _head_geometry(cfg)
+    ks = jax.random.split(key, 8)
+    p = {
+        "maa_x": jnp.zeros((d,), jnp.float32),
+        # r,k,v,w,g stacked: (5, d)
+        "maa_rkvwg": jnp.zeros((5, d), jnp.float32),
+        "maa_w1": L.truncated_normal(ks[0], (d, 5 * LORA_MIX), 0.01),
+        "maa_w2": L.truncated_normal(ks[1], (5, LORA_MIX, d), 0.01),
+        "decay": jnp.zeros((d,), jnp.float32) - 4.0,  # w ~ exp(-exp(-4)) ≈ .98
+        "decay_w1": L.truncated_normal(ks[2], (d, LORA_DECAY), 0.01),
+        "decay_w2": L.truncated_normal(ks[3], (LORA_DECAY, d), 0.01),
+        "bonus": L.truncated_normal(ks[4], (h, n), 0.1),  # time_faaaa (u)
+        "wr": L.dense_init(ks[5], d, d),
+        "wk": L.dense_init(ks[6], d, d),
+        "wv": L.dense_init(ks[7], d, d),
+        "wg": L.dense_init(jax.random.fold_in(key, 8), d, d),
+        "wo": L.dense_init(jax.random.fold_in(key, 9), d, d),
+        "ln_x": L.norm_init(d, "layernorm"),  # per-head group norm
+    }
+    return p
+
+
+def channel_mix_init(key, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "maa_k": jnp.zeros((d,), jnp.float32),
+        "maa_r": jnp.zeros((d,), jnp.float32),
+        "wk": L.dense_init(k1, d, f),
+        "wv": L.dense_init(k2, f, d),
+        "wr": L.dense_init(k3, d, d),
+    }
+
+
+def block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.norm_init(cfg.d_model, "layernorm"),
+        "tmix": time_mix_init(k1, cfg),
+        "ln2": L.norm_init(cfg.d_model, "layernorm"),
+        "cmix": channel_mix_init(k2, cfg),
+    }
+
+
+def _ddlerp(p, x, sx):
+    """Finch data-dependent token-shift interpolation.
+
+    x (B,S,D), sx = shifted(x) - x.  Returns 5 mixed streams (r,k,v,w,g).
+    """
+    base = x + sx * p["maa_x"]
+    lora = jnp.tanh(jnp.einsum("bsd,de->bse", base.astype(jnp.float32),
+                               p["maa_w1"].reshape(x.shape[-1], -1)))
+    lora = lora.reshape(lora.shape[:-1] + (5, LORA_MIX))
+    dyn = jnp.einsum("bsme,med->mbsd", lora, p["maa_w2"])  # (5,B,S,D)
+    mix = p["maa_rkvwg"][:, None, None, :] + dyn           # (5,B,S,D)
+    return x[None] + sx[None] * mix.astype(x.dtype)        # (5,B,S,D)
+
+
+def _decay_logw(p, xw):
+    """Data-dependent decay: lw = -exp(decay + tanh(xw @ w1) @ w2) < 0."""
+    dyn = jnp.einsum(
+        "bsk,kd->bsd",
+        jnp.tanh(jnp.einsum("bsd,dk->bsk", xw.astype(jnp.float32),
+                            p["decay_w1"])),
+        p["decay_w2"])
+    # Upper clip bounds |log w| <= e^1.5 ~= 4.48 so that the factorized
+    # intra-chunk term exp(-lp) stays finite in f32 for WKV_CHUNK=16
+    # (worst exponent 16 * 4.48 = 71.7 < 88).  w <= exp(-e^-1.5) covers the
+    # useful decay range; faster decays are indistinguishable from 0 after
+    # two steps anyway.
+    return -jnp.exp(jnp.clip(p["decay"] + dyn, -8.0, 1.5))
+
+
+def _wkv_chunk(r, k, v, lw, u, state):
+    """One chunk of the WKV recurrence (all-parallel within the chunk).
+
+    r,k,v: (B,C,H,N); lw: (B,C,H,N) log-decay; u: (H,N);
+    state: (B,H,N,N) [key x value].  Returns (out (B,C,H,N), new_state).
+    """
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    lp = jnp.cumsum(lw, axis=1)                       # inclusive (B,C,H,N)
+    lp_prev = lp - lw                                 # exclusive
+    # State term: (r_t * exp(lp_{t-1})) @ S_prev
+    r_eff = rf * jnp.exp(lp_prev)
+    out = jnp.einsum("bchk,bhkv->bchv", r_eff, state)
+    # Intra-chunk: scores[t,j] = sum_n r_t[n] exp(lp_{t-1}[n]-lp_j[n]) k_j[n]
+    # Computed stably as (r_t e^{lp_{t-1}}) . (k_j e^{-lp_j}); both factors
+    # bounded by the chunk length (decays only shrink within a chunk).
+    k_eff = kf * jnp.exp(-lp)
+    scores = jnp.einsum("bchn,bjhn->bhcj", r_eff, k_eff)
+    c = r.shape[1]
+    tri = jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)  # strictly lower
+    scores = scores * tri[None, None]
+    out = out + jnp.einsum("bhcj,bjhv->bchv", scores, vf)
+    # Bonus (current token): (r_t . u . k_t) v_t
+    bonus = jnp.einsum("bchn,bchn->bch", rf * u[None, None], kf)
+    out = out + bonus[..., None] * vf
+    # State update
+    lp_last = lp[:, -1:, :, :]                        # (B,1,H,N)
+    k_carry = kf * jnp.exp(lp_last - lp)              # decay from j to end
+    new_state = (state * jnp.exp(lp_last.squeeze(1))[..., None]
+                 + jnp.einsum("bjhk,bjhv->bhkv", k_carry, vf))
+    return out, new_state
+
+
+def time_mix_apply(p, x, cfg, *, state=None, x_prev=None, chunk=None):
+    """x (B,S,D) -> (out (B,S,D), (last_x, new_state)).
+
+    state (B,H,N,N) and x_prev (B,1,D) carry decode/streaming context.
+    """
+    b, s, d = x.shape
+    h, n = _head_geometry(cfg)
+    # WKV chunks are deliberately short (16): the factorized intra-chunk
+    # decay term is numerically safe only for bounded chunk length (see
+    # _decay_logw), matching the official RWKV6 kernel's chunking.
+    chunk = chunk or min(16, s)
+    if s % chunk:
+        chunk = s
+
+    shifted = token_shift(x, axis=1)
+    if x_prev is not None:
+        shifted = shifted.at[:, 0].set(x_prev[:, 0].astype(x.dtype))
+    sx = shifted - x
+    xr, xk, xv, xw, xg = _ddlerp(p, x, sx)
+
+    # Head axis ('tp') shards the WKV recurrence: per-head states and all
+    # intra-chunk einsums are embarrassingly parallel over heads.
+    r = annotate_heads(L.dense(p["wr"], xr, x.dtype).reshape(b, s, h, n))
+    k = annotate_heads(L.dense(p["wk"], xk, x.dtype).reshape(b, s, h, n))
+    v = annotate_heads(L.dense(p["wv"], xv, x.dtype).reshape(b, s, h, n))
+    g = L.dense(p["wg"], xg, x.dtype)
+    lw = annotate_heads(_decay_logw(p, xw).reshape(b, s, h, n))
+
+    if state is None:
+        state = jnp.zeros((b, h, n, n), jnp.float32)
+    state = annotate(state, "batch", "tp", None, None)
+
+    n_chunks = s // chunk
+    def body(st, inp):
+        rc, kc, vc, lwc = inp
+        out_c, st = _wkv_chunk(rc, kc, vc, lwc, p["bonus"], st)
+        return st, out_c
+
+    resh = lambda t: jnp.moveaxis(
+        t.reshape(b, n_chunks, chunk, h, n), 1, 0)
+    state, outs = L.scan(cfg, body, state, (resh(r), resh(k), resh(v),
+                                            resh(lw)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h * n)
+
+    # per-head group norm then gate
+    out = out.reshape(b, s, h, n)
+    mu = jnp.mean(out, axis=-1, keepdims=True)
+    var = jnp.var(out, axis=-1, keepdims=True)
+    out = ((out - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(b, s, d)
+    out = out * p["ln_x"]["scale"] + p["ln_x"]["bias"]
+    out = out.astype(x.dtype) * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    return L.dense(p["wo"], out, x.dtype), (x[:, -1:], state)
+
+
+def channel_mix_apply(p, x, cfg, *, x_prev=None):
+    """RWKV channel mix: k = relu(Wk xk)^2; out = sigmoid(Wr xr) * Wv k."""
+    shifted = token_shift(x, axis=1)
+    if x_prev is not None:
+        shifted = shifted.at[:, 0].set(x_prev[:, 0].astype(x.dtype))
+    sx = shifted - x
+    xk = x + sx * p["maa_k"].astype(x.dtype)
+    xr = x + sx * p["maa_r"].astype(x.dtype)
+    k = L.dense(p["wk"], xk, x.dtype)
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    r = jax.nn.sigmoid(L.dense(p["wr"], xr, x.dtype).astype(jnp.float32))
+    return (r.astype(x.dtype) * L.dense(p["wv"], k, x.dtype)), x[:, -1:]
+
+
+def block_apply(p, x, cfg):
+    h, _ = time_mix_apply(p["tmix"], L.apply_norm(p["ln1"], x, "layernorm"),
+                          cfg)
+    x = x + h
+    h, _ = channel_mix_apply(p["cmix"], L.apply_norm(p["ln2"], x, "layernorm"),
+                             cfg)
+    return x + h
+
+
+def lm_init(key, cfg):
+    ke, kb, kh = jax.random.split(key, 3)
+    params = {
+        "embed": L.embed_init(ke, cfg.padded_vocab, cfg.d_model),
+        "ln0": L.norm_init(cfg.d_model, "layernorm"),
+        "blocks": L.stack_layer_params(
+            functools.partial(block_init, cfg=cfg), kb, cfg.num_layers),
+        "final_norm": L.norm_init(cfg.d_model, "layernorm"),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.embed_init(kh, cfg.padded_vocab, cfg.d_model)
+    return params
+
+
+def lm_hidden(params, tokens, cfg):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = L.embed_lookup(params["embed"], tokens, dtype)
+    x = L.apply_norm(params["ln0"], x, "layernorm")
+
+    body = functools.partial(block_apply, cfg=cfg)
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+
+    def scan_body(h, layer_params):
+        h = annotate(h, "batch", "tp", None)  # sequence-parallel carry
+        return body(layer_params, h), None
+
+    x, _ = L.scan(cfg, scan_body, x, params["blocks"])
+    return L.apply_norm(params["final_norm"], x, "layernorm")
+
+
+def lm_loss(params, batch, cfg):
+    tokens = batch["tokens"]
+    hidden = lm_hidden(params, tokens, cfg)
+    head = params.get("lm_head", params["embed"])
+    logits = L.logits_projection(head, hidden, hidden.dtype)
+    loss = L.cross_entropy(logits[:, :-1], tokens[:, 1:],
+                           mask=batch.get("loss_mask"))
+    return loss, {"loss": loss}
+
+
+# -- decode -------------------------------------------------------------------
+
+def init_caches(cfg, batch, max_seq, dtype=jnp.bfloat16):
+    """Recurrent state: O(1) in sequence length (the long_500k enabler)."""
+    h, n = _head_geometry(cfg)
+    d = cfg.d_model
+    one = {
+        "tmix_x": jnp.zeros((batch, 1, d), jnp.float32),
+        "wkv": jnp.zeros((batch, h, n, n), jnp.float32),
+        "cmix_x": jnp.zeros((batch, 1, d), jnp.float32),
+    }
+    return jax.tree.map(
+        lambda leaf: jnp.broadcast_to(leaf[None],
+                                      (cfg.num_layers,) + leaf.shape),
+        one)
+
+
+def block_decode(p, x1, cache, cfg):
+    xn = L.apply_norm(p["ln1"], x1, "layernorm")
+    h, (last_x, wkv) = time_mix_apply(p["tmix"], xn, cfg,
+                                      state=cache["wkv"],
+                                      x_prev=cache["tmix_x"], chunk=1)
+    x1 = x1 + h
+    xn = L.apply_norm(p["ln2"], x1, "layernorm")
+    h, last_c = channel_mix_apply(p["cmix"], xn, cfg, x_prev=cache["cmix_x"])
+    x1 = x1 + h
+    new_cache = {"tmix_x": last_x.astype(jnp.float32), "wkv": wkv,
+                 "cmix_x": last_c.astype(jnp.float32)}
+    return x1, new_cache
+
+
+def decode_step(params, tokens1, caches, pos, cfg):
+    """pos is unused (state is positionless) but kept for API uniformity."""
+    del pos
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = L.embed_lookup(params["embed"], tokens1, dtype)
+    x = L.apply_norm(params["ln0"], x, "layernorm")
+
+    def scan_body(h, layer):
+        blk, cache = layer
+        h, cache = block_decode(blk, h, cache, cfg)
+        return h, cache
+
+    x, new_caches = L.scan(cfg, scan_body, x, (params["blocks"], caches))
+    x = L.apply_norm(params["final_norm"], x, "layernorm")
+    head = params.get("lm_head", params["embed"])
+    return L.logits_projection(head, x, x.dtype), new_caches

@@ -1,0 +1,165 @@
+"""Mamba2 (SSD — structured state-space duality) blocks for zamba2.
+
+State recurrence per head h (P = head dim, N = state size):
+    h_t = a_t * h_{t-1} + dt_t * x_t (x) B_t          a_t = exp(-dt_t e^{A_h})
+    y_t = h_t C_t + D_h * x_t
+with scalar-per-head decay a_t (the Mamba2 simplification), dt from a
+softplus, and a width-4 causal depthwise conv on the (x, B, C) streams.
+
+Chunked evaluation (the SSD block-decomposition): scalar decay means the
+pairwise decay matrix ``exp(lp_t - lp_j)`` (lp = cumsum log a) is exact and
+stable in f32 for arbitrary chunk sizes (all exponents <= 0) — so chunks
+follow ``cfg.attn_chunk``.  A ``lax.scan`` carries the (B, H, P, N) state
+across chunks: fixed shapes, branch-free, data-independent latency.
+
+The conv edge and the single-step decode path use ``vslide``-style shifts
+from core.sequence (1-position pad-shift fast path, per paper Sec. IV).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.annotate import annotate, annotate_heads
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+def geometry(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    p = cfg.ssm_head_dim
+    h = d_inner // p
+    n = cfg.ssm_state
+    return d_inner, h, p, n
+
+
+def mamba2_init(key, cfg):
+    d = cfg.d_model
+    d_inner, h, p, n = geometry(cfg)
+    conv_ch = d_inner + 2 * n  # x, B, C share the conv
+    ks = jax.random.split(key, 4)
+    return {
+        # in_proj -> [z, x, B, C, dt]
+        "in_proj": L.dense_init(ks[0], d, 2 * d_inner + 2 * n + h),
+        "conv_w": L.truncated_normal(ks[1], (cfg.conv_width, conv_ch),
+                                     1.0 / cfg.conv_width),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),      # a = exp(-dt * e^{A_log})
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": L.norm_init(d_inner, "rmsnorm"),    # gated RMSNorm
+        "out_proj": L.dense_init(ks[2], d_inner, d),
+    }
+
+
+def _split_proj(proj, cfg):
+    d_inner, h, p, n = geometry(cfg)
+    z, xbc, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, *, edge=None):
+    """Depthwise causal conv, width W. xbc (B,S,C); edge (B,W-1,C) carry.
+
+    Returns (y (B,S,C), new_edge (B,W-1,C)).
+    """
+    width = w.shape[0]
+    if edge is None:
+        edge = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[-1]), xbc.dtype)
+    xpad = jnp.concatenate([edge.astype(xbc.dtype), xbc], axis=1)
+    # sum_k w[k] * x[t - (W-1) + k]  — a stack of vslide fast paths.
+    y = sum(xpad[:, k:k + xbc.shape[1]] * w[k].astype(xbc.dtype)
+            for k in range(width))
+    y = jax.nn.silu(y.astype(jnp.float32) + b).astype(xbc.dtype)
+    new_edge = xpad[:, xbc.shape[1]:]
+    return y, new_edge
+
+
+def _ssd_chunk(xh, bt, ct, la, dt, state):
+    """One SSD chunk.  xh (B,C,H,P); bt,ct (B,C,N); la,dt (B,C,H);
+    state (B,H,P,N) -> (y (B,C,H,P), new_state)."""
+    xf = xh.astype(jnp.float32)
+    bf, cf = bt.astype(jnp.float32), ct.astype(jnp.float32)
+    lp = jnp.cumsum(la, axis=1)                         # (B,C,H) inclusive
+    # state term: y_t += exp(lp_t) * (h_prev @ C_t)
+    y = jnp.einsum("bhpn,bcn->bchp", state, cf) * jnp.exp(lp)[..., None]
+    # intra: y_t += sum_{j<=t} exp(lp_t - lp_j) dt_j (B_j . C_t) x_j
+    dec = lp[:, :, None, :] - lp[:, None, :, :]         # (B,C_t,C_j,H) <= 0
+    dec = annotate(dec, "batch", None, None, "tp")
+    c = xh.shape[1]
+    tri = jnp.tril(jnp.ones((c, c), jnp.float32))       # j <= t (incl. diag)
+    gate = jnp.exp(dec) * tri[None, :, :, None]
+    bc = jnp.einsum("bcn,bjn->bcj", cf, bf)             # (B,C_t,C_j)
+    w = gate * bc[..., None] * dt[:, None, :, :]        # (B,Ct,Cj,H)
+    w = annotate(w, "batch", None, None, "tp")
+    y = y + jnp.einsum("bcjh,bjhp->bchp", w, xf)
+    # state update: h_new = exp(lp_C) h_prev + sum_j exp(lp_C - lp_j) dt_j x_j (x) B_j
+    lp_last = lp[:, -1:, :]                             # (B,1,H)
+    carry = jnp.exp(lp_last - lp) * dt                  # (B,C,H)
+    new_state = (state * jnp.exp(lp_last.squeeze(1))[..., None, None]
+                 + jnp.einsum("bch,bchp,bcn->bhpn", carry, xf, bf))
+    return y, new_state
+
+
+def mamba2_apply(p, x, cfg, *, state=None, conv_edge=None, chunk=None):
+    """x (B,S,D) -> (out (B,S,D), (new_state, new_conv_edge))."""
+    b, s, d = x.shape
+    d_inner, h, pp, n = geometry(cfg)
+    chunk = chunk or min(cfg.attn_chunk, s)
+    if s % chunk:
+        chunk = s
+
+    proj = L.dense(p["in_proj"], x, x.dtype)
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    xbc, new_edge = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                 edge=conv_edge)
+    xs, bt, ct = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    la = -dt * jnp.exp(p["A_log"])                                   # log a_t
+
+    # SSM heads shard over 'model' (B/C streams are per-group: replicated).
+    xh = annotate_heads(xs.reshape(b, s, h, pp))
+    dt = annotate(dt, "batch", None, "tp")
+    la = annotate(la, "batch", None, "tp")
+    if state is None:
+        state = jnp.zeros((b, h, pp, n), jnp.float32)
+    state = annotate(state, "batch", "tp", None, None)
+
+    n_chunks = s // chunk
+    resh3 = lambda t: jnp.moveaxis(
+        t.reshape((b, n_chunks, chunk) + t.shape[2:]), 1, 0)
+
+    def body(st, inp):
+        xc, bc_, cc, lac, dtc = inp
+        y_c, st = _ssd_chunk(xc, bc_, cc, lac, dtc, st)
+        return st, y_c
+
+    state, ys = L.scan(
+        cfg, body, state, (resh3(xh), resh3(bt), resh3(ct), resh3(la), resh3(dt)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, pp)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+
+    # gated RMSNorm then out-projection
+    y = L.apply_norm(p["norm"], y, "rmsnorm")
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    return L.dense(p["out_proj"], y, x.dtype), (state, new_edge)
+
+
+def init_state(cfg, batch):
+    d_inner, h, p, n = geometry(cfg)
+    conv_ch = d_inner + 2 * n
+    return {
+        "ssm": jnp.zeros((batch, h, p, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), jnp.float32),
+    }
+
+
+def mamba2_decode(p, x1, cache, cfg):
+    """Single-token step. x1 (B,1,D) -> (out, new_cache). O(1) in seq len."""
+    out, (state, edge) = mamba2_apply(
+        p, x1, cfg, state=cache["ssm"],
+        conv_edge=cache["conv"].astype(x1.dtype), chunk=1)
+    return out, {"ssm": state, "conv": edge.astype(jnp.float32)}

@@ -1,0 +1,90 @@
+"""InternVL2-26B (arXiv:2404.16821): InternViT frontend + InternLM2 backbone.
+
+Per the brief, the vision frontend is a STUB: ``input_specs()`` provides
+precomputed patch embeddings (B, F, d_model) — the InternViT-6B +
+pixel-shuffle + MLP projector pipeline is upstream of this framework.  The
+assigned config describes the 48-layer language backbone, which is the
+dense transformer (models/transformer.py) consuming the patch prefix via
+``extra_embeds``.
+
+Unified-engine connection: variable-length patch sequences are packed with
+``vcompress`` (pad patches dropped, real patches front-packed) before the
+prefix is concatenated — sequence packing as the paper's compress
+instruction (see core/permute.vcompress with batched()).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import permute as P
+from repro.models import layers as L
+from repro.models import transformer as T
+
+Array = jax.Array
+
+lm_init = T.lm_init
+init_caches = T.init_caches
+decode_step = T.decode_step
+
+
+def pack_patches(patch_embeds: Array, patch_valid: Array) -> Array:
+    """Front-pack valid patch embeddings (vcompress per batch row).
+
+    patch_embeds (B, F, D); patch_valid (B, F) bool.  Invalid (pad) patch
+    slots are compressed out to the tail and zeroed — fixed shapes, no
+    data-dependent control flow.
+    """
+    return jax.vmap(lambda x, m: P.vcompress(x, m, tail="zero"))(
+        patch_embeds, patch_valid)
+
+
+def lm_loss(params, batch, cfg):
+    """batch: tokens (B, S_text), frontend_embeds (B, F, D),
+    optional patch_valid (B, F)."""
+    embeds = batch["frontend_embeds"]
+    if "patch_valid" in batch:
+        embeds = pack_patches(embeds, batch["patch_valid"])
+    return T.lm_loss(params, {**batch, "frontend_embeds": embeds}, cfg)
+
+
+def prefill(params, tokens, cfg, *, frontend_embeds=None, max_seq=None,
+            cache_dtype=jnp.bfloat16):
+    """Multimodal prefill: image prefix + prompt text -> primed caches."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    if frontend_embeds is None:
+        return T.prefill(params, tokens, cfg, max_seq=max_seq,
+                         cache_dtype=cache_dtype)
+    b, s_text = tokens.shape
+    f = frontend_embeds.shape[1]
+    x_text = L.embed_lookup(params["embed"], tokens, dtype)
+    x = jnp.concatenate([frontend_embeds.astype(dtype), x_text], axis=1)
+    # Reuse the dense prefill machinery on the concatenated stream by
+    # running the block stack manually (positions cover prefix + text).
+    s = f + s_text
+    max_seq = max_seq or s
+    import functools
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    from repro.models import attention as A
+
+    w = cfg.sliding_window if cfg.sliding_window > 0 else max_seq
+    w = min(w, max_seq)
+
+    def _to_cache(k):
+        if w >= s:
+            pad = [(0, 0), (0, w - s), (0, 0), (0, 0)]
+            return jnp.pad(k, pad).astype(cache_dtype)
+        tail = k[:, -w:]
+        return jnp.roll(tail, s % w, axis=1).astype(cache_dtype)
+
+    def scan_body(h, blk):
+        normed = L.apply_norm(blk["ln1"], h, cfg.norm)
+        _, k, v = A._project_qkv(blk["attn"], normed, cfg, positions, dtype)
+        h = T.block_apply(blk, h, cfg, positions=positions)
+        return h, {"k": _to_cache(k), "v": _to_cache(v)}
+
+    x, caches = L.scan(cfg, scan_body, x, params["blocks"])
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = T.lm_logits(params, x[:, -1:], cfg)
+    return logits, caches

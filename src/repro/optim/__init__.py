@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, global_norm
+from repro.optim.schedules import make_schedule
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "global_norm",
+           "make_schedule"]

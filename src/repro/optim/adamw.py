@@ -1,0 +1,98 @@
+"""AdamW from scratch on pytrees (no optax dependency).
+
+Decoupled weight decay, bias-corrected moments, global-norm clipping.
+Moments are stored in f32 regardless of param dtype; the update preserves
+param dtype.  All pure functions of (state, grads) — checkpoint-friendly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class AdamWState:
+    step: jax.Array          # () int32
+    mu: PyTree               # first moment
+    nu: PyTree               # second moment
+    master: PyTree = None    # f32 master params when the live params are
+                             # bf16 (mixed-precision state; §Perf row 12)
+
+    def tree_flatten(self):
+        return (self.step, self.mu, self.nu, self.master), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def adamw_init(params: PyTree, *, keep_master: bool = False) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+              if keep_master else None)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros), master=master)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(
+    params: PyTree,
+    grads: PyTree,
+    state: AdamWState,
+    lr: jax.Array,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: float = 1.0,
+) -> tuple[PyTree, AdamWState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, master, g, m, v):
+        gf = g.astype(jnp.float32)
+        pf = p.astype(jnp.float32) if master is None else master
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * gf * gf
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * pf
+        new_master = pf - lr * delta
+        return new_master.astype(p.dtype), m, v, new_master
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    flat_ms = (jax.tree.leaves(state.master) if state.master is not None
+               else [None] * len(flat_p))
+    out = [upd(p, ms, g, m, v) for p, ms, g, m, v
+           in zip(flat_p, flat_ms, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    new_master = (jax.tree.unflatten(tdef, [o[3] for o in out])
+                  if state.master is not None else None)
+    return new_p, AdamWState(step, new_m, new_v, new_master), \
+        {"grad_norm": gnorm}

@@ -1,0 +1,47 @@
+"""LR schedules: linear-warmup cosine and WSD (Warmup-Stable-Decay).
+
+WSD is the MiniCPM schedule (arXiv:2404.06395): warmup -> long constant
+plateau -> short (10%) exponential-ish decay tail.  Both are pure
+step -> lr functions usable inside jit.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr, warmup_steps, total_steps,
+                    min_ratio=0.1):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak_lr * s / max(warmup_steps, 1)
+    prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                    0.0, 1.0)
+    cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 *
+                     (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(s < warmup_steps, warm, cos)
+
+
+def wsd_schedule(step, *, peak_lr, warmup_steps, total_steps,
+                 decay_fraction=0.1, min_ratio=0.01):
+    """MiniCPM Warmup-Stable-Decay: plateau at peak, 10% tail decay."""
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    decay_steps = max(int(total_steps * decay_fraction), 1)
+    decay_start = total_steps - decay_steps
+    warm = peak_lr * s / max(warmup_steps, 1)
+    # exponential decay tail: lr = peak * min_ratio ** (progress_in_tail)
+    tail_prog = jnp.clip((s - decay_start) / decay_steps, 0.0, 1.0)
+    tail = peak_lr * jnp.power(min_ratio, tail_prog)
+    lr = jnp.where(s < warmup_steps, warm,
+                   jnp.where(s < decay_start, peak_lr, tail))
+    return lr
+
+
+def make_schedule(kind: str, *, peak_lr=3e-4, warmup_steps=100,
+                  total_steps=10_000):
+    if kind == "wsd":
+        return lambda step: wsd_schedule(step, peak_lr=peak_lr,
+                                         warmup_steps=warmup_steps,
+                                         total_steps=total_steps)
+    return lambda step: cosine_schedule(step, peak_lr=peak_lr,
+                                        warmup_steps=warmup_steps,
+                                        total_steps=total_steps)

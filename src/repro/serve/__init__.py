@@ -1,0 +1,3 @@
+from repro.serve.engine import ServeOptions, ServingEngine, sample_token
+
+__all__ = ["ServeOptions", "ServingEngine", "sample_token"]

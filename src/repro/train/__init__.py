@@ -1,0 +1,4 @@
+from repro.train.trainer import (TrainOptions, TrainState, Trainer,
+                                 make_train_step)
+
+__all__ = ["TrainOptions", "TrainState", "Trainer", "make_train_step"]

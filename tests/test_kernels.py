@@ -1,0 +1,161 @@
+"""Pallas kernels (interpret mode) vs pure-jnp oracles, shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import crossbar as xb
+from repro.kernels import ops, ref
+from repro.kernels.crossbar_permute import crossbar_permute_pallas
+from repro.kernels.fused_compress import fused_vcompress_pallas
+from repro.kernels.moe_route import moe_route_transform_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-5, atol=1e-6)
+
+
+class TestCrossbarKernelRaw:
+    """Raw (block-aligned) kernel vs oracle."""
+
+    @pytest.mark.parametrize("mode", ["gather", "scatter"])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_basic(self, mode, dtype):
+        n, d = 128, 128
+        x = jax.random.normal(KEY, (n, d), dtype)
+        idx = jax.random.randint(KEY, (n, 1), -8, n + 8, dtype=jnp.int32)
+        got = crossbar_permute_pallas(idx, x, mode=mode, n_out=n,
+                                      interpret=True)
+        want = ref.crossbar_permute_ref(idx, x, mode=mode, n_out=n)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **tol(dtype))
+
+    @pytest.mark.parametrize("k", [1, 2, 4])
+    def test_multi_index_weighted(self, k):
+        n, d = 128, 128
+        x = jax.random.normal(KEY, (n, d))
+        idx = jax.random.randint(KEY, (n, k), 0, n, dtype=jnp.int32)
+        w = jax.random.normal(KEY, (n, k)).astype(jnp.float32)
+        got = crossbar_permute_pallas(idx, x, mode="gather", n_out=n,
+                                      weights=w, interpret=True)
+        want = ref.crossbar_permute_ref(idx, x, mode="gather", n_out=n,
+                                        weights=w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_merge_semantics(self):
+        n, d = 128, 128
+        x = jax.random.normal(KEY, (n, d))
+        merge = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+        idx = jnp.full((n, 1), -1, jnp.int32).at[:4].set(
+            jnp.arange(4, dtype=jnp.int32)[:, None])
+        got = crossbar_permute_pallas(idx, x, mode="gather", n_out=n,
+                                      merge=merge, interpret=True)
+        want = ref.crossbar_permute_ref(idx, x, mode="gather", n_out=n,
+                                        merge=merge)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_multiblock_grid(self):
+        """Cross-block routing: reduction over n_in tiles, multi-tile out."""
+        n_in, n_out, d = 384, 256, 256
+        x = jax.random.normal(KEY, (n_in, d))
+        idx = jax.random.randint(KEY, (n_in, 1), 0, n_out, dtype=jnp.int32)
+        got = crossbar_permute_pallas(idx, x, mode="scatter", n_out=n_out,
+                                      interpret=True)
+        want = ref.crossbar_permute_ref(idx, x, mode="scatter", n_out=n_out)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestCrossbarKernelPadded:
+    """ops.crossbar_permute: arbitrary (non-aligned) shapes via padding."""
+
+    @pytest.mark.parametrize("n,d", [(5, 3), (17, 9), (100, 50), (130, 257)])
+    def test_unaligned_gather(self, n, d):
+        x = jax.random.normal(KEY, (n, d))
+        idx = jax.random.randint(KEY, (n,), -2, n + 2, dtype=jnp.int32)
+        plan = xb.vrgather_plan(idx, n)
+        got = ops.crossbar_permute(plan, x)
+        want = ref.crossbar_permute_ref(idx[:, None], x, mode="gather",
+                                        n_out=n)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+    def test_dtypes(self, dtype):
+        n, d = 20, 10
+        if dtype == jnp.int32:
+            x = jax.random.randint(KEY, (n, d), 0, 100, dtype=jnp.int32)
+        else:
+            x = jax.random.normal(KEY, (n, d), dtype)
+        mask = jax.random.bernoulli(KEY, 0.5, (n,))
+        from repro.core import permute as P
+        got = P.vcompress(x, mask, backend="kernel")
+        want = P.vcompress(x, mask, backend="einsum")
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **tol(dtype))
+
+
+class TestFusedCompress:
+    @pytest.mark.parametrize("n", [8, 64, 100, 256])
+    @pytest.mark.parametrize("tail", ["zero", "bijective"])
+    def test_vs_ref(self, n, tail):
+        x = jax.random.normal(KEY, (n, 128))
+        mask = jax.random.bernoulli(jax.random.PRNGKey(n), 0.5, (n,))
+        got = fused_vcompress_pallas(mask, x, tail=tail, interpret=True)
+        want = ref.fused_vcompress_ref(mask, x, tail=tail)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_padded_wrapper_unaligned_d(self):
+        x = jax.random.normal(KEY, (32, 37))
+        mask = jax.random.bernoulli(KEY, 0.3, (32,))
+        got = ops.fused_vcompress(mask, x)
+        want = ref.fused_vcompress_ref(mask, x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("density", [0.0, 1.0])
+    def test_degenerate_masks(self, density):
+        x = jax.random.normal(KEY, (64, 128))
+        mask = jnp.full((64,), density >= 0.5, jnp.bool_)
+        got = fused_vcompress_pallas(mask, x, interpret=True)
+        want = ref.fused_vcompress_ref(mask, x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5)
+
+
+class TestMoERouteKernel:
+    @pytest.mark.parametrize("t,k,e,cap", [
+        (256, 2, 8, 16), (256, 1, 4, 300), (512, 2, 16, 8), (256, 4, 4, 64)])
+    def test_vs_ref(self, t, k, e, cap):
+        ids = jax.random.randint(KEY, (t, k), 0, e, dtype=jnp.int32)
+        pos, dest = moe_route_transform_pallas(ids, num_experts=e,
+                                               capacity=cap, block_t=256,
+                                               interpret=True)
+        pos_r, dest_r = ref.moe_route_transform_ref(ids, num_experts=e,
+                                                    capacity=cap)
+        np.testing.assert_array_equal(np.asarray(pos), np.asarray(pos_r))
+        np.testing.assert_array_equal(np.asarray(dest), np.asarray(dest_r))
+
+    def test_cross_tile_carry(self):
+        """Occupancy must carry across token tiles (the carry-save trick)."""
+        t, e, cap = 512, 2, 1000
+        ids = jnp.zeros((t, 1), jnp.int32)  # everyone to expert 0
+        pos, dest = moe_route_transform_pallas(ids, num_experts=e,
+                                               capacity=cap, block_t=256,
+                                               interpret=True)
+        np.testing.assert_array_equal(np.asarray(pos[:, 0]), np.arange(t))
+
+    def test_padded_wrapper(self):
+        ids = jax.random.randint(KEY, (100, 2), 0, 4, dtype=jnp.int32)
+        pos, dest = ops.moe_route_transform(ids, num_experts=4, capacity=40)
+        pos_r, dest_r = ref.moe_route_transform_ref(ids, num_experts=4,
+                                                    capacity=40)
+        np.testing.assert_array_equal(np.asarray(pos), np.asarray(pos_r))
+        np.testing.assert_array_equal(np.asarray(dest), np.asarray(dest_r))

@@ -1,0 +1,194 @@
+"""RVV permutation semantics vs numpy oracles (paper Sec. II-A)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import permute as P
+from repro.core import transform as T
+from repro.core import crossbar as xb
+
+
+def np_vrgather(x, idx):
+    out = np.zeros_like(x)
+    for o, i in enumerate(idx):
+        if 0 <= i < x.shape[0]:
+            out[o] = x[i]
+    return out
+
+
+def np_vcompress(x, mask, tail="zero"):
+    sel = x[mask.astype(bool)]
+    rest = x[~mask.astype(bool)]
+    if tail == "bijective":
+        return np.concatenate([sel, rest], axis=0)
+    out = np.zeros_like(x)
+    out[:len(sel)] = sel
+    return out
+
+
+class TestVrgather:
+    def test_identity(self, rng):
+        x = rng.normal(size=(16, 4)).astype(np.float32)
+        idx = np.arange(16)
+        np.testing.assert_allclose(P.vrgather(jnp.asarray(x), jnp.asarray(idx)),
+                                   x, rtol=1e-6)
+
+    def test_random_indices(self, rng):
+        x = rng.normal(size=(16, 4)).astype(np.float32)
+        idx = rng.integers(0, 16, size=16)
+        got = P.vrgather(jnp.asarray(x), jnp.asarray(idx))
+        np.testing.assert_allclose(got, np_vrgather(x, idx), rtol=1e-6)
+
+    def test_oob_gives_zero(self, rng):
+        """Paper: OOB index decodes to all-zeros one-hot (RVV: reads 0)."""
+        x = rng.normal(size=(8, 2)).astype(np.float32)
+        idx = np.array([0, 99, 3, -1, 7, 8, 2, 100])
+        got = np.asarray(P.vrgather(jnp.asarray(x), jnp.asarray(idx)))
+        np.testing.assert_allclose(got, np_vrgather(x, idx), rtol=1e-6)
+
+    def test_duplicate_sources_allowed(self, rng):
+        """vrgather may copy one input to many outputs."""
+        x = rng.normal(size=(8, 2)).astype(np.float32)
+        idx = np.zeros(8, dtype=np.int64)
+        got = np.asarray(P.vrgather(jnp.asarray(x), jnp.asarray(idx)))
+        np.testing.assert_allclose(got, np.broadcast_to(x[0], (8, 2)),
+                                   rtol=1e-6)
+
+    def test_masked_merge(self, rng):
+        x = rng.normal(size=(8, 2)).astype(np.float32)
+        merge = rng.normal(size=(8, 2)).astype(np.float32)
+        idx = rng.integers(0, 8, size=8)
+        mask = np.array([1, 0, 1, 0, 1, 0, 1, 0], dtype=bool)
+        got = np.asarray(P.vrgather(jnp.asarray(x), jnp.asarray(idx),
+                                    mask=jnp.asarray(mask),
+                                    merge=jnp.asarray(merge)))
+        want = np.where(mask[:, None], np_vrgather(x, idx), merge)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+class TestVcompress:
+    @pytest.mark.parametrize("density", [0.0, 0.3, 0.7, 1.0])
+    def test_order_preserved(self, rng, density):
+        x = rng.normal(size=(32, 3)).astype(np.float32)
+        mask = rng.random(32) < density
+        got = np.asarray(P.vcompress(jnp.asarray(x), jnp.asarray(mask)))
+        np.testing.assert_allclose(got, np_vcompress(x, mask), rtol=1e-6)
+
+    def test_bijective_tail(self, rng):
+        """The unified datapath's native output: unselected packed at tail."""
+        x = rng.normal(size=(16, 2)).astype(np.float32)
+        mask = rng.random(16) < 0.5
+        got = np.asarray(P.vcompress(jnp.asarray(x), jnp.asarray(mask),
+                                     tail="bijective"))
+        np.testing.assert_allclose(got, np_vcompress(x, mask, "bijective"),
+                                   rtol=1e-6)
+
+    def test_keep_tail_merge(self, rng):
+        x = rng.normal(size=(8, 2)).astype(np.float32)
+        merge = rng.normal(size=(8, 2)).astype(np.float32)
+        mask = np.array([1, 0, 0, 1, 0, 1, 0, 0], dtype=bool)
+        got = np.asarray(P.vcompress(jnp.asarray(x), jnp.asarray(mask),
+                                     tail="keep", merge=jnp.asarray(merge)))
+        k = int(mask.sum())
+        np.testing.assert_allclose(got[:k], x[mask], rtol=1e-6)
+        np.testing.assert_allclose(got[k:], merge[k:], rtol=1e-6)
+
+    def test_vexpand_inverts_vcompress(self, rng):
+        x = rng.normal(size=(16, 2)).astype(np.float32)
+        mask = rng.random(16) < 0.5
+        packed = P.vcompress(jnp.asarray(x), jnp.asarray(mask))
+        back = np.asarray(P.vexpand(packed, jnp.asarray(mask)))
+        want = np.where(mask[:, None], x, 0.0)
+        np.testing.assert_allclose(back, want, rtol=1e-6)
+
+
+class TestVslide:
+    @pytest.mark.parametrize("off", [0, 1, 3, 7, 8, 100])
+    def test_slideup(self, rng, off):
+        x = rng.normal(size=(8, 2)).astype(np.float32)
+        got = np.asarray(P.vslideup(jnp.asarray(x), off))
+        want = np.zeros_like(x)
+        if off < 8:
+            want[off:] = x[:8 - off]
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    @pytest.mark.parametrize("off", [0, 1, 3, 7, 8, 100])
+    def test_slidedown(self, rng, off):
+        x = rng.normal(size=(8, 2)).astype(np.float32)
+        got = np.asarray(P.vslidedown(jnp.asarray(x), off))
+        want = np.zeros_like(x)
+        if off < 8:
+            want[:8 - off] = x[off:]
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_slide1_fast_paths(self, rng):
+        x = rng.normal(size=(8, 2)).astype(np.float32)
+        np.testing.assert_allclose(
+            np.asarray(P.vslide1up(jnp.asarray(x)))[1:], x[:-1], rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(P.vslide1down(jnp.asarray(x)))[:-1], x[1:], rtol=1e-6)
+
+    def test_slideup_merge_prefix(self, rng):
+        """RVV vslideup: out[:offset] is undisturbed (merge)."""
+        x = rng.normal(size=(8, 2)).astype(np.float32)
+        merge = rng.normal(size=(8, 2)).astype(np.float32)
+        got = np.asarray(P.vslideup(jnp.asarray(x), 3,
+                                    merge=jnp.asarray(merge)))
+        np.testing.assert_allclose(got[:3], merge[:3], rtol=1e-6)
+        np.testing.assert_allclose(got[3:], x[:5], rtol=1e-6)
+
+
+class TestElementWidth:
+    """SEW groups: permute g consecutive rows as one unit (Table I axis)."""
+
+    @pytest.mark.parametrize("g", [1, 2, 4])
+    def test_group_gather(self, rng, g):
+        x = rng.normal(size=(16, 2)).astype(np.float32)
+        n = 16 // g
+        idx = rng.integers(0, n, size=n)
+        got = np.asarray(P.vrgather(jnp.asarray(x), jnp.asarray(idx), group=g))
+        want = x.reshape(n, -1)[idx].reshape(16, 2)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    @pytest.mark.parametrize("g", [1, 2, 4])
+    def test_group_compress(self, rng, g):
+        x = rng.normal(size=(16, 2)).astype(np.float32)
+        n = 16 // g
+        mask = rng.random(n) < 0.5
+        got = np.asarray(P.vcompress(jnp.asarray(x), jnp.asarray(mask),
+                                     group=g))
+        want = np_vcompress(x.reshape(n, -1), mask).reshape(16, 2)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+class TestVmerge:
+    def test_select(self, rng):
+        a = rng.normal(size=(8, 2)).astype(np.float32)
+        b = rng.normal(size=(8, 2)).astype(np.float32)
+        m = rng.random(8) < 0.5
+        got = np.asarray(P.vmerge(jnp.asarray(a), jnp.asarray(b),
+                                  jnp.asarray(m)))
+        np.testing.assert_allclose(got, np.where(m[:, None], a, b), rtol=1e-6)
+
+
+class TestFixedLatencyProperty:
+    """Data-independent execution: identical jaxpr for any mask/idx values."""
+
+    def test_jaxpr_independent_of_values(self):
+        x = jnp.zeros((16, 4))
+        j1 = jax.make_jaxpr(lambda m: P.vcompress(x, m))(
+            jnp.zeros(16, jnp.int32))
+        j2 = jax.make_jaxpr(lambda m: P.vcompress(x, m))(
+            jnp.ones(16, jnp.int32))
+        assert str(j1) == str(j2)
+
+    def test_no_data_dependent_shapes(self):
+        """Every intermediate in the compress jaxpr has a static shape."""
+        x = jnp.zeros((16, 4))
+        jaxpr = jax.make_jaxpr(lambda m: P.vcompress(x, m))(
+            jnp.zeros(16, jnp.int32)).jaxpr
+        for eqn in jaxpr.eqns:
+            for var in eqn.outvars:
+                assert hasattr(var.aval, "shape")

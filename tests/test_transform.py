@@ -1,0 +1,147 @@
+"""Properties of the control-information transform (paper Sec. III-B) —
+hypothesis-driven invariants of the unified datapath."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines as B
+from repro.core import crossbar as xb
+from repro.core import transform as T
+from repro.core import permute as P
+
+MASKS = st.lists(st.integers(0, 1), min_size=1, max_size=64)
+
+
+class TestCompressDestinations:
+    @given(MASKS)
+    @settings(max_examples=200, deadline=None)
+    def test_bijective_for_every_mask(self, mask):
+        """The paper's key invariant (Sec. III-B.2): the destination vector
+        is a permutation — mask-0 elements pack to the tail so no two
+        inputs collide.  This is what makes every crossbar row one-hot."""
+        dest = T.compress_destinations(jnp.asarray(mask, jnp.int32))
+        assert bool(T.destinations_are_bijective(dest))
+        assert sorted(np.asarray(dest).tolist()) == list(range(len(mask)))
+
+    @given(MASKS)
+    @settings(max_examples=100, deadline=None)
+    def test_selected_pack_to_front_in_order(self, mask):
+        m = np.asarray(mask)
+        dest = np.asarray(T.compress_destinations(jnp.asarray(mask,
+                                                              jnp.int32)))
+        sel_dests = dest[m == 1]
+        assert list(sel_dests) == list(range(len(sel_dests)))
+
+    @given(MASKS)
+    @settings(max_examples=100, deadline=None)
+    def test_unselected_pack_to_tail_in_order(self, mask):
+        m = np.asarray(mask)
+        dest = np.asarray(T.compress_destinations(jnp.asarray(mask,
+                                                              jnp.int32)))
+        un = dest[m == 0]
+        k = int(m.sum())
+        assert list(un) == list(range(k, len(mask)))
+
+
+class TestSlideDestinations:
+    @given(st.integers(1, 64), st.integers(0, 80))
+    @settings(max_examples=100, deadline=None)
+    def test_up_down_are_mirrors(self, n, off):
+        up = np.asarray(T.slide_destinations(n, off, up=True))
+        dn = np.asarray(T.slide_destinations(n, off, up=False))
+        np.testing.assert_array_equal(up, np.arange(n) + off)
+        np.testing.assert_array_equal(dn, np.arange(n) - off)
+
+    @given(st.integers(1, 32), st.integers(0, 10), st.integers(0, 10))
+    @settings(max_examples=100, deadline=None)
+    def test_slide_composition(self, n, a, b):
+        """slidedown(a) . slidedown(b) == slidedown(a+b) (zero-fill)."""
+        x = jnp.arange(n * 2, dtype=jnp.float32).reshape(n, 2)
+        one = P.vslidedown(P.vslidedown(x, a), b)
+        two = P.vslidedown(x, a + b)
+        np.testing.assert_allclose(np.asarray(one), np.asarray(two))
+
+
+class TestCrossbarStructure:
+    @given(MASKS)
+    @settings(max_examples=60, deadline=None)
+    def test_compress_operator_rows_onehot(self, mask):
+        """Every row of the compress crossbar operator is one-hot
+        (functional-correctness prerequisite, Sec. III-B.2)."""
+        plan = xb.vcompress_plan(jnp.asarray(mask, jnp.int32))
+        p = np.asarray(xb.build_onehot(plan))
+        assert ((p.sum(axis=1) == 1).all())
+        assert ((p.sum(axis=0) == 1).all())  # bijection: columns too
+
+    @given(MASKS)
+    @settings(max_examples=60, deadline=None)
+    def test_compress_operator_orthogonal(self, mask):
+        """Bijective one-hot operators are permutation matrices: P P^T = I."""
+        plan = xb.vcompress_plan(jnp.asarray(mask, jnp.int32))
+        p = np.asarray(xb.build_onehot(plan))
+        np.testing.assert_allclose(p @ p.T, np.eye(len(mask)), atol=1e-6)
+
+    def test_transpose_plan_is_inverse(self, rng):
+        mask = rng.random(16) < 0.5
+        x = rng.normal(size=(16, 3)).astype(np.float32)
+        plan = xb.vcompress_plan(jnp.asarray(mask, jnp.int32))
+        y = xb.apply_plan(plan, jnp.asarray(x))
+        back = xb.apply_plan(xb.transpose_plan(plan), y)
+        np.testing.assert_allclose(np.asarray(back), x, rtol=1e-5)
+
+    def test_gather_sources_roundtrip(self, rng):
+        mask = (rng.random(16) < 0.5).astype(np.int32)
+        dest = T.compress_destinations(jnp.asarray(mask))
+        src, covered = T.gather_sources_from_destinations(dest, 16)
+        assert bool(jnp.all(covered))
+        # gathering by src == scattering by dest
+        x = rng.normal(size=(16, 2)).astype(np.float32)
+        via_gather = np.asarray(x)[np.asarray(src)]
+        via_scatter = np.zeros_like(x)
+        via_scatter[np.asarray(dest)] = x
+        np.testing.assert_allclose(via_gather, via_scatter)
+
+
+class TestUnifiedEqualsSeparate:
+    """Differential: unified datapath == the paper's baseline datapaths."""
+
+    @given(MASKS)
+    @settings(max_examples=60, deadline=None)
+    def test_compress_vs_sequential_baseline(self, mask):
+        n = len(mask)
+        x = jnp.arange(n * 2, dtype=jnp.float32).reshape(n, 2) + 1
+        unified = P.vcompress(x, jnp.asarray(mask, jnp.int32))
+        sequential = B.compress_baseline_sequential(x, jnp.asarray(mask,
+                                                                   jnp.int32))
+        np.testing.assert_allclose(np.asarray(unified),
+                                   np.asarray(sequential), rtol=1e-6)
+
+    @given(st.integers(1, 32), st.integers(0, 40))
+    @settings(max_examples=80, deadline=None)
+    def test_slide_vs_log_shifter(self, n, off):
+        x = jnp.arange(n * 2, dtype=jnp.float32).reshape(n, 2) + 1
+        for up in (True, False):
+            unified = (P.vslideup if up else P.vslidedown)(x, off)
+            shifter = B.slide_baseline(x, off, up=up)
+            np.testing.assert_allclose(np.asarray(unified),
+                                       np.asarray(shifter), rtol=1e-6,
+                                       err_msg=f"up={up} off={off}")
+
+    def test_gather_vs_baseline(self, rng):
+        x = rng.normal(size=(16, 2)).astype(np.float32)
+        idx = rng.integers(-2, 20, size=16)
+        np.testing.assert_allclose(
+            np.asarray(P.vrgather(jnp.asarray(x), jnp.asarray(idx))),
+            np.asarray(B.gather_baseline(jnp.asarray(x), jnp.asarray(idx))),
+            rtol=1e-6)
+
+    def test_all_three_backends_agree(self, rng):
+        x = rng.normal(size=(24, 8)).astype(np.float32)
+        mask = rng.random(24) < 0.4
+        outs = [np.asarray(P.vcompress(jnp.asarray(x),
+                                       jnp.asarray(mask), backend=b))
+                for b in ("einsum", "reference", "kernel")]
+        np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5)
+        np.testing.assert_allclose(outs[0], outs[2], rtol=1e-4, atol=1e-5)
