@@ -9,7 +9,8 @@ import time
 
 def main() -> None:
     from benchmarks import (bench_fig9_power_proxy, bench_moe_dispatch,
-                            bench_roofline, bench_table1_element_width,
+                            bench_roofline, bench_sparse_crossbar,
+                            bench_table1_element_width,
                             bench_table1_unified_vs_separate)
 
     benches = [
@@ -17,6 +18,7 @@ def main() -> None:
         ("table1_element_width", bench_table1_element_width.run),
         ("fig9_power_proxy", bench_fig9_power_proxy.run),
         ("moe_dispatch", bench_moe_dispatch.run),
+        ("sparse_crossbar", bench_sparse_crossbar.run),
         ("roofline", bench_roofline.run),
     ]
     failed = 0

@@ -72,7 +72,8 @@ class ModelConfig:
     # training-time attention chunk (bounds the S x S transient)
     attn_chunk: int = 1024
 
-    # MoE dispatch backend: 'einsum' (XLA crossbar) | 'kernel' (Pallas)
+    # MoE dispatch backend: 'einsum' (XLA crossbar) | 'kernel' (dense
+    # Pallas) | 'sparse' (tile-skipping Pallas) | 'auto' (density heuristic)
     dispatch_backend: str = "einsum"
 
     # Unroll every lax.scan (layer stacks, attention chunks, WKV/SSD

@@ -16,11 +16,23 @@ operator matrix, executed on the MXU.  This module provides:
 * ``build_onehot``  — materialise the (n_out, n_in) operator (reference /
   small sizes / tests).
 
+* ``CompiledPlan``  — the *schedule* of a plan: which (output-tile,
+  input-tile) blocks of the crossbar operator are actually occupied, and
+  a compacted o-major list of those active pairs.  Compiling a plan is
+  itself branch-free log-depth work (scatter-add + stable argsort), so it
+  stays jittable; an LRU cache keyed on plan identity makes repeated
+  executions (serving, training steps with static routing geometry) pay
+  compilation once.
+
 * ``apply_plan``    — execute the crossbar.  Backends:
     - 'einsum':  XLA dense path — builds one-hot and contracts; XLA fuses
       the iota-compare into the matmul producer. Default, always available.
     - 'kernel':  Pallas kernel (kernels/crossbar_permute.py) that builds
       one-hot *tiles* in VMEM on the fly — the operator never exists in HBM.
+    - 'sparse':  tile-skipping Pallas kernel driven by the CompiledPlan
+      schedule — cost scales with the number of *occupied* tiles (N·K
+      selects), not the full n_out×n_in grid.
+    - 'auto':    measured-density heuristic picking between the above.
     - 'reference': jnp.take-based oracle (the "separate datapath" world);
       used for differential testing.
 
@@ -32,8 +44,9 @@ out-of-bounds drop), never an error and never a data-dependent branch.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from functools import partial
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -150,9 +163,201 @@ def coverage(plan: PermutePlan) -> Array:
     if plan.mode == GATHER:
         valid = (plan.idx >= 0) & (plan.idx < plan.n_in)  # (n_out, k)
         return jnp.any(valid, axis=-1)
-    iota = jnp.arange(plan.n_out, dtype=jnp.int32)
-    hit = (plan.idx[:, :, None] == iota[None, None, :])  # (n_in, k, n_out)
-    return jnp.any(hit, axis=(0, 1))
+    # Scatter: O(N*K) scatter-add, not an (n_in, k, n_out) hit tensor —
+    # this runs per apply_plan call on the dispatch hot path.
+    valid = (plan.idx >= 0) & (plan.idx < plan.n_out)
+    hits = jnp.zeros((plan.n_out,), jnp.int32).at[
+        jnp.clip(plan.idx, 0, plan.n_out - 1).ravel()].add(
+        valid.ravel().astype(jnp.int32), mode="drop")
+    return hits > 0
+
+
+# ---------------------------------------------------------------------------
+# Plan compilation: occupancy maps and active-tile schedules
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CompiledPlan:
+    """The tile schedule of a plan under a (block_o, block_n) blocking.
+
+    A permutation with N control rows and K selects touches at most N·K of
+    the n_o_tiles × n_n_tiles operator blocks; every other block is exactly
+    zero and contributes nothing to the contraction.  ``CompiledPlan``
+    records which blocks are occupied and a compacted, o-major-sorted list
+    of the occupied (o_tile, n_tile) pairs — the iteration schedule of the
+    tile-skipping kernel.
+
+    Attributes:
+      plan:        the PermutePlan this schedule was compiled from.
+      block_o/block_n: operator blocking (output rows / input rows per tile).
+      n_o_tiles/n_n_tiles: padded grid extents (ceil divisions).
+      occupancy:   (n_o_tiles, n_n_tiles) bool — block is touched by >=1
+                   valid select.
+      pair_o/pair_n: (n_pairs,) int32 — active pairs first, o-major order
+                   (all n-tiles of one output tile are consecutive, so the
+                   kernel can keep one VMEM accumulator per o-run).  The
+                   inactive tail is clamped to the last active pair so
+                   index maps always stay in range.
+      active:      (n_pairs,) bool — schedule-slot validity.
+      num_active:  Python int when the plan was concrete at compile time
+                   (the compacted grid can then be sliced statically — true
+                   tile skipping); a traced scalar otherwise (the kernel
+                   falls back to ``pl.when``-guarded skipping over the full
+                   pair list).
+    """
+
+    plan: PermutePlan
+    block_o: int
+    block_n: int
+    n_o_tiles: int
+    n_n_tiles: int
+    occupancy: Array
+    pair_o: Array
+    pair_n: Array
+    active: Array
+    num_active: Union[int, Array]
+
+    # -- pytree plumbing ----------------------------------------------------
+    # num_active travels as a child: crossing a jit boundary naturally
+    # demotes a static (int) count to a traced scalar, and is_static is
+    # derived from its type at use time.
+    def tree_flatten(self):
+        children = (self.plan, self.occupancy, self.pair_o, self.pair_n,
+                    self.active, self.num_active)
+        aux = (self.block_o, self.block_n, self.n_o_tiles, self.n_n_tiles)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        plan, occ, po, pn, act, num = children
+        bo, bn, to, tn = aux
+        return cls(plan, bo, bn, to, tn, occ, po, pn, act, num)
+
+    @property
+    def n_pairs(self) -> int:
+        """Full grid size (schedule capacity)."""
+        return self.n_o_tiles * self.n_n_tiles
+
+    @property
+    def is_static(self) -> bool:
+        """True when the active count is a Python int (compact grid)."""
+        return isinstance(self.num_active, int)
+
+    @property
+    def density(self) -> Union[float, Array]:
+        """Fraction of operator tiles occupied (the heuristic's input)."""
+        if self.n_pairs == 0:
+            return 1.0
+        return self.num_active / self.n_pairs
+
+
+def _tile_occupancy(plan: PermutePlan, block_o: int, block_n: int) -> Array:
+    """(n_o_tiles, n_n_tiles) bool occupancy of the blocked operator.
+
+    Branch-free: one scatter-add over the N·K select entries (invalid
+    selects drop), so it traces cleanly inside jit.
+    """
+    to = -(-plan.n_out // block_o)
+    tn = -(-plan.n_in // block_n)
+    n_ctrl = plan.idx.shape[0]
+    ctrl_tile = jnp.arange(n_ctrl, dtype=jnp.int32)
+    if plan.mode == GATHER:
+        valid = (plan.idx >= 0) & (plan.idx < plan.n_in)
+        o_t = jnp.broadcast_to((ctrl_tile // block_o)[:, None], plan.idx.shape)
+        n_t = jnp.clip(plan.idx, 0, plan.n_in - 1) // block_n
+    else:
+        valid = (plan.idx >= 0) & (plan.idx < plan.n_out)
+        o_t = jnp.clip(plan.idx, 0, plan.n_out - 1) // block_o
+        n_t = jnp.broadcast_to((ctrl_tile // block_n)[:, None], plan.idx.shape)
+    occ = jnp.zeros((to, tn), jnp.int32)
+    occ = occ.at[o_t.ravel(), n_t.ravel()].add(
+        valid.ravel().astype(jnp.int32), mode="drop")
+    return occ > 0
+
+
+def _compile_schedule(plan: PermutePlan, block_o: int, block_n: int):
+    """Jittable core of compile_plan (log-depth, branch-free)."""
+    occ = _tile_occupancy(plan, block_o, block_n)
+    to, tn = occ.shape
+    flat = occ.reshape(-1)
+    # Stable argsort on the negated flags: active pairs first, each group
+    # in row-major (o-major) order — log-depth sorting network on device.
+    order = jnp.argsort(jnp.logical_not(flat), stable=True).astype(jnp.int32)
+    num = jnp.sum(flat.astype(jnp.int32))
+    # Clamp the inactive tail onto the last active pair (or pair 0 for the
+    # fully-empty plan) so BlockSpec index maps never go out of range.
+    last = order[jnp.maximum(num - 1, 0)]
+    fill = jnp.where(num > 0, last, 0)
+    slot = jnp.arange(flat.shape[0], dtype=jnp.int32)
+    sel = jnp.where(slot < num, order, fill)
+    pair_o = sel // tn
+    pair_n = sel % tn
+    active = slot < num
+    return occ, pair_o, pair_n, active, num
+
+
+# Plan-identity LRU: repeated executions of the same concrete plan
+# (serving, static routing geometry) fetch the schedule instead of
+# recomputing it.  Keyed on the identity of the index array — the cache
+# entry holds a strong reference to it, so the id cannot be recycled
+# while the entry is alive; the ``is`` check makes aliasing impossible.
+_COMPILE_CACHE: "OrderedDict[tuple, CompiledPlan]" = OrderedDict()
+_COMPILE_CACHE_CAPACITY = 64
+_COMPILE_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def compile_cache_info() -> dict:
+    return dict(_COMPILE_CACHE_STATS, size=len(_COMPILE_CACHE),
+                capacity=_COMPILE_CACHE_CAPACITY)
+
+
+def clear_compile_cache() -> None:
+    _COMPILE_CACHE.clear()
+    _COMPILE_CACHE_STATS.update(hits=0, misses=0)
+
+
+def _is_concrete(x) -> bool:
+    return x is not None and not isinstance(x, jax.core.Tracer)
+
+
+def compile_plan(plan: PermutePlan, *, block_o: int = 128,
+                 block_n: int = 128) -> CompiledPlan:
+    """Compile a plan's active-tile schedule for a given blocking.
+
+    Concrete plans (outside jit) produce a *static* ``num_active`` — the
+    sparse kernel then launches a grid of exactly the occupied pairs — and
+    are memoised in an LRU keyed on the index array's identity.  Traced
+    plans compile inline (the schedule ops are jittable) with a traced
+    count; the kernel skips inactive pairs with ``pl.when`` guards instead
+    of shrinking the grid.
+    """
+    cacheable = _is_concrete(plan.idx)
+    key = None
+    if cacheable:
+        key = (plan.mode, plan.n_in, plan.n_out, block_o, block_n,
+               id(plan.idx))
+        hit = _COMPILE_CACHE.get(key)
+        if hit is not None and hit.plan.idx is plan.idx:
+            _COMPILE_CACHE.move_to_end(key)
+            _COMPILE_CACHE_STATS["hits"] += 1
+            return hit
+    _COMPILE_CACHE_STATS["misses"] += 1
+
+    occ, pair_o, pair_n, active, num = _compile_schedule(
+        plan, block_o, block_n)
+    to = -(-plan.n_out // block_o)
+    tn = -(-plan.n_in // block_n)
+    num_active: Union[int, Array] = num
+    if cacheable:
+        num_active = int(num)
+    compiled = CompiledPlan(plan, block_o, block_n, to, tn, occ,
+                            pair_o, pair_n, active, num_active)
+    if cacheable:
+        _COMPILE_CACHE[key] = compiled
+        while len(_COMPILE_CACHE) > _COMPILE_CACHE_CAPACITY:
+            _COMPILE_CACHE.popitem(last=False)
+    return compiled
 
 
 def _canon_2d(x: Array) -> tuple[Array, tuple]:
@@ -161,6 +366,39 @@ def _canon_2d(x: Array) -> tuple[Array, tuple]:
     if x.ndim == 1:
         return x[:, None], shp
     return x.reshape(shp[0], -1), shp
+
+
+# Auto heuristic: below this occupied-tile fraction the tile-skipping
+# kernel wins over dense contraction (measured by
+# benchmarks/bench_sparse_crossbar.py; see BENCH_sparse_crossbar.json).
+AUTO_SPARSE_DENSITY = 0.25
+# Below this operator size the einsum path's fused iota-compare beats any
+# kernel launch; a single 128x128 tile has nothing to skip.
+AUTO_MIN_CELLS = 128 * 128
+
+
+def _choose_backend(plan: PermutePlan) -> str:
+    """Measured-density heuristic behind ``backend='auto'``.
+
+    Traced plans cannot be measured at trace time — they fall back to the
+    dense einsum path, which is always available and shape-static.  Off
+    TPU both Pallas paths run in interpret mode and lose to the fused
+    einsum at every density (see BENCH_sparse_crossbar.json), so 'auto'
+    only routes to a kernel on real TPU hardware; pass backend='sparse'
+    explicitly to exercise the tile-skipping path elsewhere.
+    """
+    if not _is_concrete(plan.idx):
+        return "einsum"
+    if jax.default_backend() != "tpu":
+        return "einsum"
+    if plan.n_out * plan.n_in <= AUTO_MIN_CELLS:
+        return "einsum"
+    compiled = compile_plan(plan)
+    if compiled.num_active == 0 or compiled.density <= AUTO_SPARSE_DENSITY:
+        return "sparse"
+    # Dense regime: the Pallas kernel still avoids materialising the
+    # operator in HBM.
+    return "kernel"
 
 
 def apply_plan(
@@ -181,10 +419,10 @@ def apply_plan(
       merge: optional (n_out, ...) old-destination values; outputs not
              covered by the plan (and outputs masked off by ``out_mask``)
              take these (RVV undisturbed policy).  Default: zeros.
-      backend: 'einsum' | 'kernel' | 'reference'.
+      backend: 'einsum' | 'kernel' | 'sparse' | 'auto' | 'reference'.
       out_mask: optional (n_out,) bool — the RVV ``v0`` mask: False rows
              keep merge values (mask applies to *destination* elements).
-      interpret: Pallas interpret-mode override (kernel backend).
+      interpret: Pallas interpret-mode override (kernel/sparse backends).
     Returns:
       (n_out, ...) permuted data.
     """
@@ -197,17 +435,36 @@ def apply_plan(
     else:
         merge2 = None
 
+    if backend == "auto":
+        backend = _choose_backend(plan)
+
+    # One coverage computation serves both the sparse backend's zero
+    # pinning and the merge/mask logic (for scatter plans it materialises
+    # an (n_in, k, n_out) hit tensor — not something to do twice, and
+    # skipped entirely when nothing needs it).
+    need_cov = (backend == "sparse" or merge2 is not None
+                or out_mask is not None)
+    cov = coverage(plan) if need_cov else None
+
     if backend == "reference":
         out2 = _apply_reference(plan, x2)
     elif backend == "kernel":
         from repro.kernels import ops as _kops  # local import: kernels optional
         out2 = _kops.crossbar_permute(plan, x2, interpret=interpret)
+    elif backend == "sparse":
+        from repro.kernels import ops as _kops
+        out2 = _kops.crossbar_permute_sparse(plan, x2, interpret=interpret)
+        # The tile-skipping kernel never visits unoccupied output tiles,
+        # so their rows hold whatever was in the buffer — pin them to the
+        # exact zeros every other backend produces.  Redundant when merge
+        # is given: the merge select below overwrites those rows anyway.
+        if merge2 is None:
+            out2 = jnp.where(cov[:, None], out2, 0)
     elif backend == "einsum":
         out2 = _apply_einsum(plan, x2)
     else:
         raise ValueError(f"unknown backend {backend!r}")
 
-    cov = coverage(plan)
     if out_mask is not None:
         cov = cov & out_mask.astype(bool)
         # masked-off outputs must not expose routed data

@@ -137,13 +137,25 @@ def combine_plan(routing: Routing) -> xb.PermutePlan:
 
 
 def dispatch(x: Array, routing: Routing, *, backend: str = "einsum") -> Array:
-    """(T, D) tokens -> (E, C, D) expert buffers (dropped tokens vanish)."""
+    """(T, D) tokens -> (E, C, D) expert buffers (dropped tokens vanish).
+
+    backend: any core.crossbar backend — 'einsum' | 'kernel' | 'sparse' |
+    'auto' | 'reference'.  Dispatch into E·C slots touches at most T·K
+    operator tiles, so at serving/static-routing time 'sparse' (or 'auto',
+    which measures the occupancy) skips the >90% of the (E·C)/BO × T/BN
+    grid that is exactly zero.
+    """
     out = xb.apply_plan(dispatch_plan(routing), x, backend=backend)
     return out.reshape(routing.num_experts, routing.capacity, x.shape[-1])
 
 
 def combine(y: Array, routing: Routing, *, backend: str = "einsum") -> Array:
-    """(E, C, D) expert outputs -> (T, D) gate-weighted token outputs."""
+    """(E, C, D) expert outputs -> (T, D) gate-weighted token outputs.
+
+    Same backend options as ``dispatch``; the combine plan is the
+    transposed crossbar, whose occupancy map is the transpose of the
+    dispatch occupancy — equally sparse.
+    """
     e, c, d = y.shape
     out = xb.apply_plan(combine_plan(routing), y.reshape(e * c, d),
                         backend=backend)

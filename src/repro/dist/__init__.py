@@ -1,0 +1,9 @@
+"""Distribution substrate: logical-axis annotations, sharding rules,
+fault/straggler policies, and compressed collectives.
+
+Everything here degrades gracefully off-mesh: annotations are no-ops
+without an active mesh, policies are plain-Python host logic, and the
+collectives are ordinary JAX ops usable under shard_map or single-device.
+"""
+
+from repro.dist import annotate, collectives, fault, sharding  # noqa: F401

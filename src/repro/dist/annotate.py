@@ -1,0 +1,120 @@
+"""Logical-axis sharding annotations (no-op off-mesh).
+
+Models annotate activations with *logical* axis names ("batch", "tp",
+"fsdp"); the mapping to physical mesh axes lives here (see
+launch/mesh.py: batch -> ("pod", "data"), fsdp -> "data", tp -> "model").
+Inside a ``logical_axes(mesh)`` context the annotations become
+``with_sharding_constraint``s; outside any context they are identity
+functions, so single-device tests and benchmarks never touch device
+state.
+
+Divisibility fallback: an annotation that does not divide the mesh axis
+silently drops to replicated for that dimension — models stay correct on
+any mesh shape, they just shard less.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# Logical name -> candidate physical axes, in mapping priority order.
+# "batch" spans every pure-data axis; "tp" is the tensor-model axis.
+_LOGICAL = {
+    "batch": ("pod", "data"),
+    "fsdp": ("data",),
+    "tp": ("model",),
+}
+
+
+def _stack():
+    if not hasattr(_state, "meshes"):
+        _state.meshes = []
+    return _state.meshes
+
+
+def active_mesh():
+    """The mesh of the innermost ``logical_axes`` context, or None."""
+    stack = _stack()
+    return stack[-1] if stack else None
+
+
+@contextmanager
+def logical_axes(mesh):
+    """Activate logical-axis annotation against ``mesh``."""
+    stack = _stack()
+    stack.append(mesh)
+    try:
+        yield mesh
+    finally:
+        stack.pop()
+
+
+def _physical(mesh, name):
+    """Resolve a logical name to mesh axes present on this mesh."""
+    if name is None:
+        return None
+    cands = _LOGICAL.get(name, (name,))
+    present = tuple(a for a in cands if a in mesh.axis_names)
+    if not present:
+        return None
+    return present if len(present) > 1 else present[0]
+
+
+def _axis_size(mesh, phys):
+    if phys is None:
+        return 1
+    if isinstance(phys, tuple):
+        size = 1
+        for a in phys:
+            size *= mesh.shape[a]
+        return size
+    return mesh.shape[phys]
+
+
+def annotate(x, *names):
+    """Constrain ``x``'s sharding by per-dimension logical names.
+
+    ``annotate(h, "batch", None, "tp")`` shards dim 0 over the batch axes
+    and dim 2 over the model axis.  Missing trailing names mean
+    replicated.  No-op without an active mesh or when a dim does not
+    divide its axis.
+    """
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    names = tuple(names) + (None,) * (x.ndim - len(names))
+    entries = []
+    for dim, name in zip(x.shape, names):
+        phys = _physical(mesh, name)
+        if phys is None or dim % _axis_size(mesh, phys) != 0:
+            entries.append(None)
+        else:
+            entries.append(phys)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+def annotate_heads(x, *, heads: int = 2, seq: int = 1):
+    """Annotate an attention tensor: batch on dim 0, heads over 'model'.
+
+    ``heads`` names the head dimension, ``seq`` the sequence dimension
+    (kept replicated — sequence parallelism is handled by the layer-stack
+    carry annotation, not here).  Falls back to batch-only sharding when
+    the head count does not divide the model axis.
+    """
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    names = [None] * x.ndim
+    names[0] = "batch"
+    model_size = mesh.shape.get("model", 1)
+    if x.shape[heads] % model_size == 0:
+        names[heads] = "tp"
+    del seq  # sequence dim stays replicated by construction
+    return annotate(x, *names)

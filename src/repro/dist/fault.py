@@ -1,0 +1,126 @@
+"""Fault tolerance policies: survivor meshes, stragglers, heartbeats.
+
+Host-side control-plane logic (plain Python/numpy) — nothing here runs
+on device except ``rescale_gradients``, which is an ordinary jnp reduce
+usable inside a step function.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _prod(d: dict) -> int:
+    return math.prod(d.values())
+
+
+def survivor_mesh_shape(shape: dict, lost_devices: int) -> dict:
+    """Largest mesh shape that fits the surviving devices.
+
+    Shrink priority mirrors launch/mesh.py's axis ordering: drop whole
+    pods first (the DCN axis is the cheapest to lose), then halve the
+    data axis (keeps per-shard batch a power-of-two divisor).  The model
+    axis NEVER shrinks — model-parallel shards are not replicas, so
+    losing one loses the weights; callers must restore from checkpoint
+    onto the smaller data fleet instead.
+
+    Raises RuntimeError when only the model axis remains to give up.
+    """
+    alive = _prod(shape) - lost_devices
+    new = dict(shape)
+    while _prod(new) > alive:
+        if new.get("pod", 1) > 1:
+            new["pod"] -= 1
+        elif new.get("data", 1) > 1:
+            new["data"] //= 2
+        else:
+            raise RuntimeError(
+                f"cannot fit mesh {shape} into {alive} devices without "
+                "shrinking the model axis")
+    return new
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """EWMA-deadline straggler detection with a drop/block decision.
+
+    Workers slower than ``deadline_factor`` x the EWMA step time are
+    dropped from the gradient reduction — unless that would drop more
+    than ``1 - min_alive_fraction`` of the fleet, in which case the step
+    blocks (waits for everyone) instead of taking a badly-sampled step.
+    """
+
+    deadline_factor: float = 2.0
+    ewma_alpha: float = 0.1
+    min_alive_fraction: float = 0.5
+    _ewma: float | None = None
+
+    def observe(self, step_time_s: float) -> None:
+        if self._ewma is None:
+            self._ewma = float(step_time_s)
+        else:
+            a = self.ewma_alpha
+            self._ewma = a * float(step_time_s) + (1.0 - a) * self._ewma
+
+    @property
+    def deadline(self) -> float:
+        if self._ewma is None:
+            return float("inf")
+        return self.deadline_factor * self._ewma
+
+    def decide(self, worker_times) -> tuple[np.ndarray, bool]:
+        """(alive mask, block): who to keep, or block for everyone."""
+        times = np.asarray(worker_times, dtype=np.float64)
+        alive = times <= self.deadline
+        if alive.mean() < self.min_alive_fraction:
+            return np.ones_like(alive, dtype=bool), True
+        return alive, False
+
+
+def rescale_gradients(grads, alive):
+    """Mean of per-worker gradients over the alive set (unbiased: the
+    denominator is the alive count, not the fleet size).
+
+    grads: pytree of (workers, ...) stacked per-worker grads.
+    alive: (workers,) bool.
+    """
+    alive = jnp.asarray(alive)
+    denom = jnp.maximum(jnp.sum(alive.astype(jnp.float32)), 1.0)
+
+    def reduce(g):
+        mask = alive.astype(g.dtype).reshape((-1,) + (1,) * (g.ndim - 1))
+        return jnp.sum(g * mask, axis=0) / denom.astype(g.dtype)
+
+    return jax.tree.map(reduce, grads)
+
+
+class HeartbeatTracker:
+    """Counts consecutive missed heartbeats per host.
+
+    ``beat(host)`` between ticks marks the host alive; ``tick()``
+    advances the epoch and returns the hosts at/over the miss threshold.
+    """
+
+    def __init__(self, hosts: int, miss_threshold: int = 3):
+        self.hosts = hosts
+        self.miss_threshold = miss_threshold
+        self._misses = [0] * hosts
+        self._beaten = [False] * hosts
+
+    def beat(self, host: int) -> None:
+        self._beaten[host] = True
+
+    def tick(self) -> list:
+        for h in range(self.hosts):
+            if self._beaten[h]:
+                self._misses[h] = 0
+            else:
+                self._misses[h] += 1
+            self._beaten[h] = False
+        return [h for h in range(self.hosts)
+                if self._misses[h] >= self.miss_threshold]

@@ -1,0 +1,94 @@
+"""Sharding rules: parameter / cache / batch NamedSharding trees.
+
+The rules are deliberately structural (by rank), with a per-dimension
+divisibility fallback to replicated — any parameter tree from any model
+family produces a valid sharding on any mesh.  Physical convention
+matches launch/mesh.py: batch data-parallel over ("pod", "data"),
+tensor-parallel over "model".
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes that carry pure data parallelism, slowest first."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def mesh_axis_size(mesh, axes) -> int:
+    """Product of the named axes' sizes (1 for the empty tuple)."""
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def _entry(mesh, dim, axes):
+    """One PartitionSpec entry with the divisibility fallback."""
+    if isinstance(axes, str):
+        axes = (axes,)
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    if not axes or dim % mesh_axis_size(mesh, axes) != 0:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _param_spec(mesh, shape) -> P:
+    """Matrices shard (row -> 'data' [fsdp-style], col -> 'model');
+    leading (stack/expert) dims and vectors replicate."""
+    if len(shape) < 2:
+        return P()
+    entries = [None] * (len(shape) - 2)
+    entries.append(_entry(mesh, shape[-2], ("data",)))
+    entries.append(_entry(mesh, shape[-1], ("model",)))
+    return P(*entries)
+
+
+def param_shardings(params, mesh, cfg=None):
+    """NamedSharding tree for a parameter pytree.  ``cfg`` is accepted for
+    rule specialisation hooks; the structural rules cover every family."""
+    del cfg
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, _param_spec(mesh, p.shape)), params)
+
+
+def _cache_spec(mesh, shape) -> P:
+    """KV caches (..., B, S, KV, hd): batch -> data axes; kv-heads ->
+    'model' when divisible, else head_dim -> 'model' (mirrors
+    models/attention.annotate_grouped_q)."""
+    if len(shape) < 4:
+        return P()
+    entries = [None] * len(shape)
+    # batch dim: first dim of a 4-d cache, second of a stacked (L, B, ...)
+    bdim = 0 if len(shape) == 4 else 1
+    entries[bdim] = _entry(mesh, shape[bdim], batch_axes(mesh))
+    kv_entry = _entry(mesh, shape[-2], ("model",))
+    if kv_entry is not None:
+        entries[-2] = kv_entry
+    else:
+        entries[-1] = _entry(mesh, shape[-1], ("model",))
+    return P(*entries)
+
+
+def cache_shardings(caches, mesh, cfg=None):
+    """NamedSharding tree for decode caches."""
+    del cfg
+    return jax.tree.map(
+        lambda c: NamedSharding(mesh, _cache_spec(mesh, c.shape)), caches)
+
+
+def batch_shardings(batch, mesh):
+    """Shard every batch leaf's leading dim over the data axes."""
+    baxes = batch_axes(mesh)
+
+    def spec(leaf):
+        entries = [_entry(mesh, leaf.shape[0], baxes)] if leaf.ndim else []
+        entries += [None] * (leaf.ndim - 1)
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree.map(spec, batch)

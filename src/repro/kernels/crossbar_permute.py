@@ -192,3 +192,144 @@ def crossbar_permute_pallas(
         ],
         interpret=interpret,
     )(*operands)
+
+
+# ---------------------------------------------------------------------------
+# Tile-skipping sparse path
+# ---------------------------------------------------------------------------
+#
+# A permutation touches at most N·K operator tiles; the dense grid above
+# visits all n_out/BO × n_in/BN of them.  The sparse path iterates a grid
+# over the *active-pair schedule* computed by core.crossbar.compile_plan:
+# scalar-prefetched (o_tile, n_tile) coordinates drive the BlockSpec index
+# maps, so only occupied tiles are ever DMA'd or multiplied.  Pairs arrive
+# o-major-sorted, so all reduction steps of one output tile are consecutive
+# grid steps and a single VMEM accumulator suffices; the kernel detects
+# o-run boundaries by comparing neighbouring schedule entries (branch-free,
+# pl.when-predicated).
+#
+# With a static schedule (plan concrete at trace time) the grid is exactly
+# num_active pairs — true tile skipping.  With a traced schedule the grid
+# spans the full pair list and inactive slots are skipped behind pl.when
+# guards (no DMA savings, but the MXU work is still predicated off).
+
+
+def _sparse_kernel(po_ref, pn_ref, act_ref, idx_ref, x_ref, *refs,
+                   mode, weighted, bo, bn, num_pairs, guard):
+    """One grid step over (d_tile, schedule_slot)."""
+    if weighted:
+        w_ref, out_ref, acc_ref = refs
+    else:
+        out_ref, acc_ref = refs
+        w_ref = None
+
+    p = pl.program_id(1)
+    o_cur = po_ref[p]
+    prev_o = po_ref[jnp.maximum(p - 1, 0)]
+    nxt = jnp.minimum(p + 1, num_pairs - 1)
+    is_first = (p == 0) | (prev_o != o_cur)
+    is_last = (p == num_pairs - 1) | (po_ref[nxt] != o_cur)
+    if guard:
+        # Inactive slots are clamped onto the last active pair, so the last
+        # *active* slot of an o-run is also followed by an inactive slot.
+        is_last = is_last | (act_ref[nxt] == 0)
+        is_active = act_ref[p] != 0
+    else:
+        is_active = None
+
+    @pl.when(is_first)
+    def _init():
+        acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+
+    def _accumulate():
+        x_blk = x_ref[...]
+        idx_blk = idx_ref[...]
+        w_blk = w_ref[...] if w_ref is not None else None
+        compute_dtype = (x_blk.dtype
+                         if x_blk.dtype in (jnp.bfloat16, jnp.float32)
+                         else jnp.float32)
+        tile = _onehot_tile(idx_blk, w_blk, o_cur * bo, pn_ref[p] * bn,
+                            bo, bn, mode, compute_dtype)
+        acc_ref[...] += jax.lax.dot(
+            tile, x_blk.astype(compute_dtype),
+            preferred_element_type=jnp.float32)
+
+    if guard:
+        pl.when(is_active)(_accumulate)
+    else:
+        _accumulate()
+
+    emit = (is_last & is_active) if guard else is_last
+
+    @pl.when(emit)
+    def _emit():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def crossbar_permute_sparse_pallas(
+    pair_o: jax.Array,
+    pair_n: jax.Array,
+    active: jax.Array,
+    idx: jax.Array,
+    x: jax.Array,
+    *,
+    mode: str,
+    n_out: int,
+    weights: jax.Array | None = None,
+    guard: bool = False,
+    block_o: int = DEFAULT_BO,
+    block_n: int = DEFAULT_BN,
+    block_d: int = DEFAULT_BD,
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw tile-skipping kernel; shapes must already be block-aligned.
+
+    pair_o / pair_n / active: (num_pairs,) schedule from compile_plan —
+    o-major sorted, inactive tail clamped in-range.  ``guard=False``
+    asserts every slot is active (statically compacted schedule);
+    ``guard=True`` predicates each slot on ``active`` instead.
+    idx: (n_ctrl, K) int32; x: (n_in, D).  Returns (n_out, D) in x.dtype;
+    rows of output tiles absent from the schedule are NOT written — the
+    caller overlays merge/zero from the plan's coverage.
+    """
+    n_in, d = x.shape
+    assert n_in % block_n == 0 and n_out % block_o == 0 and d % block_d == 0, (
+        "pad shapes before calling the raw kernel")
+    num_pairs = pair_o.shape[0]
+    assert num_pairs >= 1, "empty schedules are handled by the wrapper"
+    k = idx.shape[1]
+
+    # Index maps receive the scalar-prefetch refs after the grid indices;
+    # the schedule drives which blocks get DMA'd each step.
+    if mode == "gather":
+        idx_spec = pl.BlockSpec((block_o, k),
+                                lambda dd, p, po, pn, act: (po[p], 0))
+    else:
+        idx_spec = pl.BlockSpec((block_n, k),
+                                lambda dd, p, po, pn, act: (pn[p], 0))
+    in_specs = [idx_spec,
+                pl.BlockSpec((block_n, block_d),
+                             lambda dd, p, po, pn, act: (pn[p], dd))]
+    operands = [idx, x]
+    if weights is not None:
+        in_specs.append(idx_spec)
+        operands.append(weights.astype(jnp.float32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(d // block_d, num_pairs),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_o, block_d),
+                               lambda dd, p, po, pn, act: (po[p], dd)),
+        scratch_shapes=[pltpu.VMEM((block_o, block_d), jnp.float32)],
+    )
+    kernel = functools.partial(
+        _sparse_kernel, mode=mode, weighted=weights is not None,
+        bo=block_o, bn=block_n, num_pairs=num_pairs, guard=guard)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_out, d), x.dtype),
+        interpret=interpret,
+    )(pair_o.astype(jnp.int32), pair_n.astype(jnp.int32),
+      active.astype(jnp.int32), *operands)

@@ -8,7 +8,9 @@ Responsibilities:
     the whole suite runs on this container; on TPU the same call sites
     compile to Mosaic);
   * accept ``PermutePlan``s from repro.core so the crossbar engine can be
-    switched to the kernel path with ``backend='kernel'``.
+    switched to the kernel paths with ``backend='kernel'`` (dense grid) or
+    ``backend='sparse'`` (tile-skipping grid over the CompiledPlan
+    schedule).
 """
 
 from __future__ import annotations
@@ -18,17 +20,46 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.crossbar_permute import crossbar_permute_pallas
+from repro.kernels.crossbar_permute import (crossbar_permute_pallas,
+                                            crossbar_permute_sparse_pallas)
 from repro.kernels.fused_compress import fused_vcompress_pallas
 from repro.kernels.moe_route import moe_route_transform_pallas
 
 DROP = -1
+
+# Integer payloads route through the f32 MXU datapath, which represents
+# integers exactly only up to 2^24.  Larger magnitudes would silently
+# round; the wrappers below reject them when the payload is concrete.
+_F32_EXACT_INT_BOUND = 1 << 24
 
 
 def _default_interpret(interpret):
     if interpret is not None:
         return interpret
     return jax.default_backend() != "tpu"
+
+
+def _as_f32_payload(x):
+    """Cast integer/bool payloads to f32 for the MXU crossbar.
+
+    Contract: integer payloads must fit in f32 exactly, i.e. |x| < 2^24
+    (token ids, slot indices, and routing metadata all do).  The bound is
+    checked eagerly for concrete arrays; traced payloads are the caller's
+    responsibility — the check cannot run at trace time.
+    """
+    if not (jnp.issubdtype(x.dtype, jnp.integer) or x.dtype == jnp.bool_):
+        return x
+    if (x.dtype != jnp.bool_ and x.dtype.itemsize > 2
+            and not isinstance(x, jax.core.Tracer) and x.size):
+        # min/max separately: abs() of the most negative int overflows.
+        hi, lo = int(jnp.max(x)), int(jnp.min(x))
+        if hi >= _F32_EXACT_INT_BOUND or -lo >= _F32_EXACT_INT_BOUND:
+            raise ValueError(
+                f"integer payload magnitude {max(hi, -lo)} >= 2^24: the "
+                "crossbar kernels route integers through f32, which is "
+                "only exact below 2^24. Split the payload or use the "
+                "'einsum' backend (int32 accumulation).")
+    return x.astype(jnp.float32)
 
 
 def _pad_to(x, mult, axis, value=0):
@@ -53,10 +84,8 @@ def crossbar_permute(plan, x, *, merge=None, interpret=None,
     n_in, n_out = plan.n_in, plan.n_out
     mode = "gather" if plan.mode == xb.GATHER else "scatter"
 
-    # Integer payloads route via f32 (selection is exact; token ids < 2^24).
     orig_dtype = x.dtype
-    if jnp.issubdtype(x.dtype, jnp.integer) or x.dtype == jnp.bool_:
-        x = x.astype(jnp.float32)
+    x = _as_f32_payload(x)
 
     xp = _pad_to(_pad_to(x, block_n, 0), block_d, 1)
     # Padded control rows select nothing (DROP).
@@ -79,12 +108,72 @@ def crossbar_permute(plan, x, *, merge=None, interpret=None,
     return out.astype(orig_dtype)
 
 
+def crossbar_permute_sparse(plan, x, *, compiled=None, interpret=None,
+                            block_o=128, block_n=128, block_d=128):
+    """Execute a PermutePlan via the tile-skipping sparse crossbar kernel.
+
+    x: (n_in, D). Returns (n_out, D).  Rows belonging to output tiles the
+    plan never touches are left unwritten by the kernel (zeros here, since
+    the padded output buffer starts empty in interpret mode, but
+    *unspecified* in general) — core.crossbar.apply_plan overlays
+    merge/zero from the plan's coverage; use that entry point unless you
+    only consume covered rows.
+
+    ``compiled`` may carry a pre-built CompiledPlan (matching blocking);
+    otherwise the plan is compiled here — a cache hit when the same
+    concrete plan was executed before.
+    """
+    from repro.core import crossbar as xb  # avoid import cycle at load time
+
+    interpret = _default_interpret(interpret)
+    n_in, n_out = plan.n_in, plan.n_out
+    mode = "gather" if plan.mode == xb.GATHER else "scatter"
+
+    orig_dtype = x.dtype
+    x = _as_f32_payload(x)
+
+    # A schedule from a different plan (or blocking) would silently skip
+    # tiles this plan occupies — only trust one built from this very idx.
+    if (compiled is None or compiled.block_o != block_o
+            or compiled.block_n != block_n
+            or compiled.plan.idx is not plan.idx):
+        compiled = xb.compile_plan(plan, block_o=block_o, block_n=block_n)
+
+    xp = _pad_to(_pad_to(x, block_n, 0), block_d, 1)
+    ctrl_block = block_o if mode == "gather" else block_n
+    idxp = _pad_to(plan.idx, ctrl_block, 0, value=DROP)
+    wp = (None if plan.weights is None
+          else _pad_to(plan.weights, ctrl_block, 0))
+    n_out_pad = n_out + ((-n_out) % block_o)
+
+    if compiled.is_static:
+        num = compiled.num_active
+        if num == 0:
+            out = jnp.zeros((n_out_pad, xp.shape[1]), xp.dtype)
+        else:
+            # Compact grid: exactly the occupied pairs, no guards.
+            out = crossbar_permute_sparse_pallas(
+                compiled.pair_o[:num], compiled.pair_n[:num],
+                compiled.active[:num], idxp, xp,
+                mode=mode, n_out=n_out_pad, weights=wp, guard=False,
+                block_o=block_o, block_n=block_n, block_d=block_d,
+                interpret=interpret)
+    else:
+        # Traced schedule: full pair list, pl.when-guarded tile skip.
+        out = crossbar_permute_sparse_pallas(
+            compiled.pair_o, compiled.pair_n, compiled.active, idxp, xp,
+            mode=mode, n_out=n_out_pad, weights=wp, guard=True,
+            block_o=block_o, block_n=block_n, block_d=block_d,
+            interpret=interpret)
+    out = out[:n_out, :x.shape[1]]
+    return out.astype(orig_dtype)
+
+
 def fused_vcompress(mask, x, *, tail="zero", interpret=None, block_d=128):
     """Fused mask->transform->crossbar compress. x: (N, D) -> (N, D)."""
     interpret = _default_interpret(interpret)
     orig_dtype = x.dtype
-    if jnp.issubdtype(x.dtype, jnp.integer) or x.dtype == jnp.bool_:
-        x = x.astype(jnp.float32)
+    x = _as_f32_payload(x)
     d = x.shape[1]
     xp = _pad_to(x, block_d, 1)
     out = fused_vcompress_pallas(mask, xp, tail=tail, block_d=block_d,

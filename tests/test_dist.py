@@ -2,6 +2,7 @@
 sharding rules, and a multi-device (8 fake CPU devices) integration run
 in a subprocess."""
 
+import inspect
 import os
 import subprocess
 import sys
@@ -16,6 +17,17 @@ from repro.dist import fault
 from repro.dist.collectives import dequantize_int8, quantize_int8
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+def make_auto_mesh(shape, axes):
+    """jax<0.5 has no sharding.AxisType; Auto is the default there anyway."""
+    kw = {}
+    if hasattr(jax.sharding, "AxisType"):
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, **kw)
+
+
+# The subprocess scripts below get the same shim, from the same source.
+_MESH_COMPAT = textwrap.dedent(inspect.getsource(make_auto_mesh))
 
 
 class TestElasticPolicy:
@@ -95,8 +107,7 @@ class TestShardingRules:
     def test_param_rules_divisibility_fallback(self):
         from jax.sharding import PartitionSpec as P
         from repro.dist import sharding as shd
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_auto_mesh((1, 1), ("data", "model"))
         params = {"blocks": {"attn": {"wq": {"w": jnp.zeros((7, 13))}}}}
         sh = shd.param_shardings(params, mesh, None)
         # sizes 7/13 divide 1, so specs apply
@@ -104,14 +115,13 @@ class TestShardingRules:
 
     def test_cache_rules(self):
         from repro.dist import sharding as shd
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_auto_mesh((1, 1), ("data", "model"))
         caches = {"k": jnp.zeros((2, 4, 8, 2, 16))}
         sh = shd.cache_shardings(caches, mesh, None)
         assert sh["k"].spec is not None
 
 
-MULTIDEV_SCRIPT = textwrap.dedent("""
+MULTIDEV_SCRIPT = _MESH_COMPAT + textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp
@@ -130,8 +140,7 @@ MULTIDEV_SCRIPT = textwrap.dedent("""
                       head_dim=8, compute_dtype="float32", remat="none",
                       attn_chunk=8)
     api = build(cfg)
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_auto_mesh((4, 2), ("data", "model"))
     pipe = SyntheticLM(vocab_size=128, seq_len=16, global_batch=8)
     params = api.init(jax.random.PRNGKey(0))
     state = init_state(params, jax.random.PRNGKey(0))
@@ -178,7 +187,7 @@ def test_sharded_train_step_matches_single_device():
     assert "MULTIDEV-OK" in proc.stdout, proc.stderr[-2000:]
 
 
-COMPRESSED_SCRIPT = textwrap.dedent("""
+COMPRESSED_SCRIPT = _MESH_COMPAT + textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp
@@ -188,8 +197,7 @@ COMPRESSED_SCRIPT = textwrap.dedent("""
     from jax.experimental.shard_map import shard_map
     from repro.dist.collectives import compressed_psum
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_auto_mesh((8,), ("data",))
     g = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
 
     @partial(shard_map, mesh=mesh, in_specs=P("data", None),
