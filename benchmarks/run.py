@@ -1,31 +1,41 @@
-"""Benchmark harness: one module per paper table/figure + the roofline
-reader.  Prints CSV lines (``name,key=value,...``)."""
+"""Benchmark harness: auto-discovers every ``bench_*.py`` module in this
+package (one per paper table/figure or engine subsystem) and runs its
+``run()`` entry point.  New benchmarks are picked up by existence — there
+is no registration list to forget.  Prints CSV lines
+(``name,key=value,...``); exits non-zero if any benchmark raised."""
 
 from __future__ import annotations
 
+import importlib
+import pkgutil
 import sys
 import time
 
+import benchmarks
+
+PREFIX = "bench_"
+
+
+def discover() -> list[str]:
+    """Module names of every bench_*.py file, sorted.  Import happens
+    per-benchmark inside the harness try block, so one broken module
+    cannot take down the others."""
+    return sorted(info.name for info in pkgutil.iter_modules(
+        benchmarks.__path__)
+        if info.name.startswith(PREFIX) and not info.ispkg)
+
 
 def main() -> None:
-    from benchmarks import (bench_fig9_power_proxy, bench_moe_dispatch,
-                            bench_roofline, bench_sparse_crossbar,
-                            bench_table1_element_width,
-                            bench_table1_unified_vs_separate)
-
-    benches = [
-        ("table1_unified_vs_separate", bench_table1_unified_vs_separate.run),
-        ("table1_element_width", bench_table1_element_width.run),
-        ("fig9_power_proxy", bench_fig9_power_proxy.run),
-        ("moe_dispatch", bench_moe_dispatch.run),
-        ("sparse_crossbar", bench_sparse_crossbar.run),
-        ("roofline", bench_roofline.run),
-    ]
     failed = 0
-    for name, fn in benches:
+    for modname in discover():
+        name = modname[len(PREFIX):]
         print(f"# ---- {name} ----", flush=True)
         t0 = time.time()
         try:
+            mod = importlib.import_module(f"benchmarks.{modname}")
+            fn = getattr(mod, "run", None)
+            if not callable(fn):
+                raise AttributeError(f"{modname} has no run() entry point")
             fn()
         except Exception as e:  # keep the harness running
             failed += 1

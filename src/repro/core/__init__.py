@@ -28,7 +28,9 @@ from repro.core.crossbar import (
     vslide_plan,
 )
 from repro.core.permute import (
+    lazy,
     vcompress,
+    vcompress_batched,
     vexpand,
     vmerge,
     vrgather,
@@ -37,7 +39,20 @@ from repro.core.permute import (
     vslidedown,
     vslideup,
 )
-from repro.core import baselines, moe_dispatch, sequence
+from repro.core.plan_algebra import (
+    PlanExpr,
+    batch,
+    batched_gather_plan,
+    batched_scatter_plan,
+    block_diag,
+    compose,
+    compose_all,
+    identity_plan,
+    to_gather,
+    transpose,
+    with_weights,
+)
+from repro.core import baselines, moe_dispatch, sequence, telemetry
 
 __all__ = [
     "DROP", "GATHER", "SCATTER", "PermutePlan",
@@ -47,7 +62,10 @@ __all__ = [
     "compress_destinations", "compress_keep_count",
     "destinations_are_bijective", "exclusive_cumsum", "exclusive_suffix_sum",
     "gather_sources_from_destinations", "slide_destinations",
-    "vcompress", "vexpand", "vmerge", "vrgather",
-    "vslide1down", "vslide1up", "vslidedown", "vslideup",
-    "baselines", "moe_dispatch", "sequence",
+    "lazy", "vcompress", "vcompress_batched", "vexpand", "vmerge",
+    "vrgather", "vslide1down", "vslide1up", "vslidedown", "vslideup",
+    "PlanExpr", "batch", "batched_gather_plan", "batched_scatter_plan",
+    "block_diag", "compose", "compose_all", "identity_plan", "to_gather",
+    "transpose", "with_weights",
+    "baselines", "moe_dispatch", "sequence", "telemetry",
 ]

@@ -24,7 +24,14 @@ operator matrix, executed on the MXU.  This module provides:
   executions (serving, training steps with static routing geometry) pay
   compilation once.
 
-* ``apply_plan``    — execute the crossbar.  Backends:
+* ``apply_plan``    — execute the crossbar.  This is the single point
+  every permutation in the repo lowers through: the RVV ops in
+  ``core/permute.py`` build plans (eagerly, or lazily fused through
+  ``core/plan_algebra.py`` so a whole chain costs one call), MoE
+  dispatch/combine derive their plans by transposition, and batched
+  per-row ops arrive as one block-diagonal plan.  An invocation counter
+  (``apply_call_count``, surfaced by ``core/telemetry.py``) makes the
+  one-pass property assertable.  Backends:
     - 'einsum':  XLA dense path — builds one-hot and contracts; XLA fuses
       the iota-compare into the matmul producer. Default, always available.
     - 'kernel':  Pallas kernel (kernels/crossbar_permute.py) that builds
@@ -299,9 +306,14 @@ def _compile_schedule(plan: PermutePlan, block_o: int, block_n: int):
 
 # Plan-identity LRU: repeated executions of the same concrete plan
 # (serving, static routing geometry) fetch the schedule instead of
-# recomputing it.  Keyed on the identity of the index array — the cache
-# entry holds a strong reference to it, so the id cannot be recycled
-# while the entry is alive; the ``is`` check makes aliasing impossible.
+# recomputing it.  Keyed on the identities of the index *and* weight
+# arrays — plans produced by the plan algebra (compose/transpose/batch)
+# share idx arrays across differently-weighted variants, so both must
+# key the entry.  The cache entry holds strong references to them, so the
+# ids cannot be recycled while the entry is alive; the ``is`` checks make
+# aliasing impossible.  The plan algebra memoises its own constructions
+# (plan_algebra._memo) so a recomposed plan arrives here with the same
+# array identities and hits.
 _COMPILE_CACHE: "OrderedDict[tuple, CompiledPlan]" = OrderedDict()
 _COMPILE_CACHE_CAPACITY = 64
 _COMPILE_CACHE_STATS = {"hits": 0, "misses": 0}
@@ -318,6 +330,22 @@ def clear_compile_cache() -> None:
 
 
 def _is_concrete(x) -> bool:
+    """Concrete array outside any live trace.
+
+    The trace-state check matters: under omnistaging, jnp ops run inside
+    a jit trace are staged and return tracers even when every operand is
+    concrete, so a schedule compiled there is trace-local — caching it
+    (or calling ``int()`` on its count) would leak tracers out of the
+    trace.  Cache *lookups* for concrete plans are still allowed under a
+    trace (see compile_plan): a stored schedule is concrete and folds
+    into the trace as constants.
+    """
+    return (jax.core.trace_state_clean() and x is not None
+            and not isinstance(x, jax.core.Tracer))
+
+
+def _is_concrete_array(x) -> bool:
+    """Concrete array, regardless of trace state (cache-lookup eligible)."""
     return x is not None and not isinstance(x, jax.core.Tracer)
 
 
@@ -332,13 +360,21 @@ def compile_plan(plan: PermutePlan, *, block_o: int = 128,
     count; the kernel skips inactive pairs with ``pl.when`` guards instead
     of shrinking the grid.
     """
-    cacheable = _is_concrete(plan.idx)
+    # Lookup eligibility only needs concrete operands: an entry stored by
+    # a previous out-of-trace compile is concrete, and returning it under
+    # a live trace constant-folds the schedule into the trace — this is
+    # what lets a pre-compiled static-routing plan keep its sparse
+    # schedule inside a jitted step.
+    keyable = _is_concrete_array(plan.idx) and (
+        plan.weights is None or _is_concrete_array(plan.weights))
     key = None
-    if cacheable:
+    if keyable:
         key = (plan.mode, plan.n_in, plan.n_out, block_o, block_n,
-               id(plan.idx))
+               id(plan.idx),
+               id(plan.weights) if plan.weights is not None else None)
         hit = _COMPILE_CACHE.get(key)
-        if hit is not None and hit.plan.idx is plan.idx:
+        if (hit is not None and hit.plan.idx is plan.idx
+                and hit.plan.weights is plan.weights):
             _COMPILE_CACHE.move_to_end(key)
             _COMPILE_CACHE_STATS["hits"] += 1
             return hit
@@ -348,6 +384,10 @@ def compile_plan(plan: PermutePlan, *, block_o: int = 128,
         plan, block_o, block_n)
     to = -(-plan.n_out // block_o)
     tn = -(-plan.n_in // block_n)
+    # Storing (and the int() demotion) additionally require a clean trace
+    # state — under omnistaging the schedule arrays above are tracers
+    # inside a jit trace even for concrete plans.
+    cacheable = keyable and jax.core.trace_state_clean()
     num_active: Union[int, Array] = num
     if cacheable:
         num_active = int(num)
@@ -358,6 +398,21 @@ def compile_plan(plan: PermutePlan, *, block_o: int = 128,
         while len(_COMPILE_CACHE) > _COMPILE_CACHE_CAPACITY:
             _COMPILE_CACHE.popitem(last=False)
     return compiled
+
+
+# apply_plan invocation counter: the observable the plan algebra's
+# "K-deep chain == one crossbar pass" guarantee is asserted against
+# (core/telemetry.py aggregates it with the cache counters).
+_APPLY_CALLS = 0
+
+
+def apply_call_count() -> int:
+    return _APPLY_CALLS
+
+
+def reset_apply_call_count() -> None:
+    global _APPLY_CALLS
+    _APPLY_CALLS = 0
 
 
 def _canon_2d(x: Array) -> tuple[Array, tuple]:
@@ -381,19 +436,26 @@ def _choose_backend(plan: PermutePlan) -> str:
     """Measured-density heuristic behind ``backend='auto'``.
 
     Traced plans cannot be measured at trace time — they fall back to the
-    dense einsum path, which is always available and shape-static.  Off
-    TPU both Pallas paths run in interpret mode and lose to the fused
-    einsum at every density (see BENCH_sparse_crossbar.json), so 'auto'
-    only routes to a kernel on real TPU hardware; pass backend='sparse'
-    explicitly to exercise the tile-skipping path elsewhere.
+    dense einsum path, which is always available and shape-static.
+    Concrete plans *inside* a jit trace can be measured only when a prior
+    out-of-trace compile left a static schedule in the LRU (compile it
+    before jitting to opt a static-routing plan into the sparse path);
+    otherwise they too fall back to einsum.  Off TPU both Pallas paths
+    run in interpret mode and lose to the fused einsum at every density
+    (see BENCH_sparse_crossbar.json), so 'auto' only routes to a kernel
+    on real TPU hardware; pass backend='sparse' explicitly to exercise
+    the tile-skipping path elsewhere.
     """
-    if not _is_concrete(plan.idx):
+    if not _is_concrete_array(plan.idx):
         return "einsum"
     if jax.default_backend() != "tpu":
         return "einsum"
     if plan.n_out * plan.n_in <= AUTO_MIN_CELLS:
         return "einsum"
     compiled = compile_plan(plan)
+    if not compiled.is_static:
+        # In-trace compile with no cached schedule: density is a tracer.
+        return "einsum"
     if compiled.num_active == 0 or compiled.density <= AUTO_SPARSE_DENSITY:
         return "sparse"
     # Dense regime: the Pallas kernel still avoids materialising the
@@ -426,6 +488,8 @@ def apply_plan(
     Returns:
       (n_out, ...) permuted data.
     """
+    global _APPLY_CALLS
+    _APPLY_CALLS += 1
     x2, xshape = _canon_2d(x)
     out_trailing = xshape[1:]
     n_out = plan.n_out

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import crossbar as xb
+from repro.core import plan_algebra as pa
 from repro.core import transform as _t
 
 Array = jax.Array
@@ -130,10 +131,15 @@ def dispatch_plan(routing: Routing) -> xb.PermutePlan:
 
 
 def combine_plan(routing: Routing) -> xb.PermutePlan:
-    """Gather-mode (transposed) plan with gate weights."""
-    return xb.gather_plan(routing.dest,
-                          routing.num_experts * routing.capacity,
-                          weights=routing.gates)
+    """Derived, not rebuilt: ``transpose(dispatch_plan)`` + gate weights.
+
+    Combine is the inverse-direction crossbar of dispatch (the paper's
+    gather↔scatter duality), so the plan algebra derives it from the very
+    same ``routing.dest`` array — the index identity is shared, keeping
+    one ``CompiledPlan`` cache lineage for both directions.
+    """
+    return pa.with_weights(pa.transpose(dispatch_plan(routing)),
+                           routing.gates)
 
 
 def dispatch(x: Array, routing: Routing, *, backend: str = "einsum") -> Array:

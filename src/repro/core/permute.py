@@ -16,6 +16,17 @@ output-driven (``vrgather``) or input-driven (``vcompress``, ``vslide*``):
                 transpose; used by MoE combine.
     vmerge      mask-select between two vectors.
 
+Lowering path: every op builds a ``PermutePlan`` and executes it through
+``crossbar.apply_plan``.  Passing a ``lazy(x)``-wrapped payload instead of
+an array makes the same ops *symbolic*: they append ``plan_algebra.LazyOp``
+nodes to a ``PlanExpr`` and the whole chain — after slide-folding /
+identity-elimination — lowers to ONE fused plan and ONE crossbar pass at
+``.apply()``.  Ops whose semantics are affine rather than linear in the
+payload (a ``merge``/tail-keep operand) cannot fuse across; they flush the
+pending chain and restart it, so correctness never depends on chain shape.
+Batched per-row ops (``vcompress_batched``) lower to one block-diagonal
+plan instead of a vmap of B separate crossbars.
+
 Element width ("SEW") is generalised two ways:
   * the payload (trailing dims of ``x``) is arbitrary — a "byte" in the
     paper is a feature vector here;
@@ -33,9 +44,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import crossbar as xb
+from repro.core import plan_algebra as pa
 from repro.core import transform as _t
 
 Array = jax.Array
+
+
+def lazy(x: Array) -> pa.PlanExpr:
+    """Wrap a payload for lazy fusion: ops chain symbolically, and
+    ``.apply(backend=...)`` executes the whole chain in one crossbar pass.
+
+        out = P.vslideup(P.vcompress(P.lazy(x), mask), 3).apply()
+    """
+    return pa.PlanExpr(x)
+
+
+def _flush(expr: pa.PlanExpr) -> Array:
+    """Evaluate a pending lazy chain (non-fusable op boundary)."""
+    return expr.apply()
 
 
 def _group(x: Array, g: int) -> tuple[Array, tuple]:
@@ -65,11 +91,20 @@ def vrgather(
     ``mask`` is the RVV v0 destination mask: masked-off outputs keep
     ``merge`` (default zeros).
     """
+    if isinstance(x, pa.PlanExpr):
+        if merge is not None:  # affine op: flush the chain, restart lazily
+            return pa.PlanExpr(vrgather(_flush(x), idx, mask=mask,
+                                        merge=merge, group=group,
+                                        backend=backend))
+        return x.then(pa.LazyOp("gather", 0, idx=idx.astype(jnp.int32),
+                                mask=mask), group=group, backend=backend)
     xg, shape = _group(x, group)
     plan = xb.vrgather_plan(idx.astype(jnp.int32), xg.shape[0])
     mg = _group(merge, group)[0] if merge is not None else None
     out = xb.apply_plan(plan, xg, merge=mg, out_mask=mask, backend=backend)
-    return _ungroup(out, shape)
+    # idx may change the vector length (n_out = len(idx)): reshape to the
+    # output geometry, not the input's — keeps eager/lazy equivalence.
+    return out.reshape((plan.n_out * group,) + shape[1:])
 
 
 def vcompress(
@@ -91,6 +126,15 @@ def vcompress(
       'zero'      — tail zeroed.
       'keep'      — tail takes ``merge`` (tail-undisturbed).
     """
+    if isinstance(x, pa.PlanExpr):
+        if tail == "keep":  # affine op: flush the chain, restart lazily
+            return pa.PlanExpr(vcompress(_flush(x), mask, tail=tail,
+                                         merge=merge, group=group,
+                                         backend=backend))
+        if tail not in ("zero", "bijective"):
+            raise ValueError(f"unknown tail policy {tail!r}")
+        return x.then(pa.LazyOp("compress", 0, mask=mask, tail=tail),
+                      group=group, backend=backend)
     xg, shape = _group(x, group)
     n = xg.shape[0]
     plan = xb.vcompress_plan(mask)
@@ -118,8 +162,15 @@ def vexpand(
 
     ``out[i] = x[rank(i)]`` where rank(i) counts 1-bits below i, for
     mask[i]=1; other outputs take merge (default zeros).  Exactly the
-    transposed compress crossbar.
+    transposed compress crossbar (plan_algebra.transpose of the compress
+    plan).
     """
+    if isinstance(x, pa.PlanExpr):
+        if merge is not None:
+            return pa.PlanExpr(vexpand(_flush(x), mask, merge=merge,
+                                       group=group, backend=backend))
+        return x.then(pa.LazyOp("expand", 0, mask=mask), group=group,
+                      backend=backend)
     xg, shape = _group(x, group)
     plan = xb.transpose_plan(xb.vcompress_plan(mask))
     mg = _group(merge, group)[0] if merge is not None else None
@@ -138,6 +189,13 @@ def vslideup(
     backend: str = "einsum",
 ) -> Array:
     """``out[i+offset] = x[i]``; out[:offset] undisturbed (merge)."""
+    if isinstance(x, pa.PlanExpr):
+        if merge is not None:
+            return pa.PlanExpr(vslideup(_flush(x), offset, mask=mask,
+                                        merge=merge, group=group,
+                                        backend=backend))
+        return x.then(pa.LazyOp("slide", 0, offset=offset, up=True,
+                                mask=mask), group=group, backend=backend)
     xg, shape = _group(x, group)
     plan = xb.vslide_plan(xg.shape[0], offset, up=True)
     mg = _group(merge, group)[0] if merge is not None else None
@@ -155,6 +213,13 @@ def vslidedown(
     backend: str = "einsum",
 ) -> Array:
     """``out[i] = x[i+offset]``; reads past the end give zero."""
+    if isinstance(x, pa.PlanExpr):
+        if merge is not None:
+            return pa.PlanExpr(vslidedown(_flush(x), offset, mask=mask,
+                                          merge=merge, group=group,
+                                          backend=backend))
+        return x.then(pa.LazyOp("slide", 0, offset=offset, up=False,
+                                mask=mask), group=group, backend=backend)
     xg, shape = _group(x, group)
     plan = xb.vslide_plan(xg.shape[0], offset, up=False)
     mg = _group(merge, group)[0] if merge is not None else None
@@ -190,3 +255,91 @@ def vmerge(on_true: Array, on_false: Array, mask: Array) -> Array:
 def batched(fn, *, in_axes=0):
     """vmap wrapper: lift an (N, D) permutation op over leading batch dims."""
     return jax.vmap(fn, in_axes=in_axes)
+
+
+def _block_diag_dense(dest: Array, x3: Array) -> Array:
+    """Dense execution of a block-diagonal scatter plan as ONE batched
+    contraction over the diagonal blocks only.
+
+    ``out[b, o] = sum_i [dest[b, i] == o] * x3[b, i]`` — mathematically
+    the flattened (B·N, B·N) block-diagonal operator, but the
+    structurally-zero off-diagonal blocks are never formed: cost is
+    B·N²·D (identical to a vmap of per-row crossbars) instead of the
+    flat operator's (B·N)²·D, and peak memory is (B, N, N) not (B·N)².
+    """
+    n = dest.shape[-1]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    onehot = dest[:, None, :] == iota[None, :, None]   # (B, out, in)
+    if jnp.issubdtype(x3.dtype, jnp.integer) or x3.dtype == jnp.bool_:
+        out = jnp.einsum("boi,bid->bod", onehot.astype(jnp.int32),
+                         x3.astype(jnp.int32),
+                         preferred_element_type=jnp.int32)
+        return out.astype(x3.dtype)
+    out = jnp.einsum("boi,bid->bod", onehot.astype(x3.dtype), x3,
+                     preferred_element_type=jnp.float32)
+    return out.astype(x3.dtype)
+
+
+def vcompress_batched(
+    x: Array,
+    mask: Array,
+    *,
+    tail: str = "zero",
+    group: int = 1,
+    backend: str = "auto",
+) -> Array:
+    """Per-row vcompress over a batch as ONE block-diagonal crossbar.
+
+    Equivalent to ``jax.vmap(vcompress)(x, mask)``.  The B per-row
+    compress plans form one (B·N, B·N) block-diagonal plan
+    (``plan_algebra.batched_scatter_plan``) whose tile occupancy is 1/B.
+    Lowering exploits that structure:
+
+    * 'sparse' / 'kernel' / 'reference' — the flattened plan through
+      ``apply_plan``; 'sparse' iterates only the B diagonal tile groups.
+    * 'einsum' — a batched contraction over the diagonal blocks
+      (``_block_diag_dense``): same FLOPs as the vmap it replaces, one
+      XLA op, no (B·N)² operator ever materialised.
+    * 'auto' (default) — the flattened sparse path when the measured-
+      density heuristic picks it (concrete control on TPU), else the
+      batched-dense contraction.  Traced control (training) always takes
+      the batched-dense path.
+
+    x: (B, N, ...); mask: (B, N//group).
+    """
+    if backend not in ("auto", "einsum", "sparse", "kernel", "reference"):
+        raise ValueError(f"unknown backend {backend!r}")
+    b, n = x.shape[0], x.shape[1]
+    if n % group:
+        raise ValueError(f"group {group} does not divide N={n}")
+    ng = n // group
+    dest = _t.compress_destinations(mask)              # (B, ng), bijective
+    if tail == "bijective":
+        row_mask = None
+    elif tail == "zero":
+        k = _t.compress_keep_count(mask)               # (B,)
+        row_mask = jnp.arange(ng, dtype=jnp.int32)[None, :] < k[:, None]
+    else:
+        raise ValueError(f"unsupported batched tail policy {tail!r}")
+
+    flat = backend in ("sparse", "kernel", "reference")
+    if backend == "auto" and jax.default_backend() == "tpu" \
+            and not isinstance(dest, jax.core.Tracer):
+        # Only build the flattened plan when the density heuristic could
+        # actually pick it (concrete control on TPU); the training path
+        # (traced mask) and CPU runs go straight to batched-dense.
+        plan = pa.batched_scatter_plan(dest, ng)
+        if xb._choose_backend(plan) == "sparse":
+            backend, flat = "sparse", True
+    if flat:
+        plan = pa.batched_scatter_plan(dest, ng)
+        out = xb.apply_plan(
+            plan, x.reshape(b * ng, -1),
+            out_mask=None if row_mask is None else row_mask.reshape(b * ng),
+            backend=backend)
+        return out.reshape(x.shape)
+
+    out3 = _block_diag_dense(dest, x.reshape(b, ng, -1))
+    if row_mask is not None:
+        out3 = jnp.where(row_mask[:, :, None], out3, 0)
+    return out3.reshape(x.shape)

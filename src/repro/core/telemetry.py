@@ -1,0 +1,69 @@
+"""Execution-count and cache telemetry for the permutation engine.
+
+One tiny aggregation point over three counter sources:
+
+* ``crossbar.apply_plan`` invocations — the number of crossbar passes
+  actually executed.  The plan algebra's whole promise is that a K-deep
+  lazy chain costs exactly one of these; tests and serving assert it here.
+* the ``CompiledPlan`` schedule LRU (``crossbar.compile_cache_info``) —
+  hits mean a repeated concrete plan skipped schedule compilation.
+* the plan-algebra construction memo (``plan_algebra.plan_cache_info``) —
+  hits mean a composed/batched/transposed plan was rebuilt from the same
+  operand arrays and returned the *same* object, which is what keeps the
+  CompiledPlan cache warm across serving decode steps.
+
+``snapshot()`` returns all counters; ``delta()`` is a context manager for
+"how many crossbar passes did this block take?" assertions:
+
+    with telemetry.delta() as d:
+        y = expr.apply()
+    assert d()["apply_calls"] == 1
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+from repro.core import crossbar as xb
+from repro.core import plan_algebra as pa
+
+
+def snapshot() -> dict:
+    """All engine counters, flattened into one dict."""
+    compile_info = xb.compile_cache_info()
+    plan_info = pa.plan_cache_info()
+    return {
+        "apply_calls": xb.apply_call_count(),
+        "compile_cache_hits": compile_info["hits"],
+        "compile_cache_misses": compile_info["misses"],
+        "compile_cache_size": compile_info["size"],
+        "plan_cache_hits": plan_info["hits"],
+        "plan_cache_misses": plan_info["misses"],
+        "plan_cache_size": plan_info["size"],
+    }
+
+
+def reset() -> None:
+    """Zero every counter and drop both caches (test isolation)."""
+    xb.clear_compile_cache()
+    xb.reset_apply_call_count()
+    pa.clear_plan_cache()
+
+
+@contextlib.contextmanager
+def delta():
+    """Context manager yielding a callable that returns counter deltas.
+
+    Sizes are reported as end-state (not differenced) since cache size is
+    a level, not a flow.
+    """
+    before = snapshot()
+
+    def diff() -> dict:
+        after = snapshot()
+        out = {}
+        for k, v in after.items():
+            out[k] = v if k.endswith("_size") else v - before[k]
+        return out
+
+    yield diff

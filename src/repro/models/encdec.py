@@ -8,8 +8,10 @@ over those frames and the 24L decoder (self-attn + cross-attn + MLP),
 which is the assigned transformer backbone.
 
 Unified-engine connections:
-  * pad frames are compressed out (``vcompress``) before encoding —
-    sequence packing as the paper's compress;
+  * pad frames are compressed out before encoding — sequence packing as
+    the paper's compress, executed for the whole batch as ONE
+    block-diagonal crossbar (``vcompress_batched``, plan algebra) rather
+    than B vmapped passes;
   * decode-time cross-attention K/V are computed once at encode and then
     *gathered* per step — the output-driven ``vrgather`` pattern;
   * teacher forcing uses ``shift_right`` (1-slide fast path).
@@ -58,8 +60,12 @@ def encode(params, frames, cfg, *, frame_valid=None):
     dtype = jnp.dtype(cfg.compute_dtype)
     x = frames.astype(dtype)
     if frame_valid is not None:
-        x = jax.vmap(lambda xx, m: P.vcompress(xx, m, tail="zero"))(
-            x, frame_valid)
+        # One block-diagonal crossbar plan for the whole batch: a single
+        # batched diagonal-block contraction under jit (vmap-equal
+        # FLOPs), the tile-skipping sparse kernel for concrete control
+        # on TPU (1/B occupancy).
+        x = P.vcompress_batched(x, frame_valid, tail="zero",
+                                backend="auto")
 
     body = functools.partial(enc_block_apply, cfg=cfg)
     if cfg.remat == "full":

@@ -10,7 +10,9 @@ dense transformer (models/transformer.py) consuming the patch prefix via
 Unified-engine connection: variable-length patch sequences are packed with
 ``vcompress`` (pad patches dropped, real patches front-packed) before the
 prefix is concatenated — sequence packing as the paper's compress
-instruction (see core/permute.vcompress with batched()).
+instruction.  The whole batch packs in ONE block-diagonal crossbar pass
+(``core/permute.vcompress_batched`` via the plan algebra) rather than a
+vmap of B separate crossbars.
 """
 
 from __future__ import annotations
@@ -34,10 +36,14 @@ def pack_patches(patch_embeds: Array, patch_valid: Array) -> Array:
 
     patch_embeds (B, F, D); patch_valid (B, F) bool.  Invalid (pad) patch
     slots are compressed out to the tail and zeroed — fixed shapes, no
-    data-dependent control flow.
+    data-dependent control flow.  All B rows execute as one
+    block-diagonal crossbar plan; 'auto' lowers it as a single batched
+    contraction over the diagonal blocks (vmap-equal FLOPs, one XLA op)
+    under jit, and as the tile-skipping sparse kernel when the control is
+    concrete on TPU (1/B occupancy).
     """
-    return jax.vmap(lambda x, m: P.vcompress(x, m, tail="zero"))(
-        patch_embeds, patch_valid)
+    return P.vcompress_batched(patch_embeds, patch_valid, tail="zero",
+                               backend="auto")
 
 
 def lm_loss(params, batch, cfg):

@@ -9,9 +9,13 @@ positions are independent — the KV cache is written at each slot's own
 ``pos`` (per-slot cache addressing is where the vrgather-style gathers
 live on the paged path).
 
-Sampling: greedy or temperature; top-k uses ``lax.top_k`` + the crossbar
-gather form (one-hot contraction) so the sampled-token gather is
-fixed-shape too.
+Sampling: greedy or temperature; top-k samples *within* the top-k table
+and the sampled-token gather (``token[b] = topk_ids[b, j_b]``) executes as
+one block-diagonal crossbar pass over the whole batch — a
+``plan_algebra.batched_gather_plan`` with B rows of one select each —
+so the gather is fixed-shape and costs a single ``apply_plan`` per step
+(cache/telemetry counters in ``core/telemetry.py`` make that checkable
+across decode steps).
 """
 
 from __future__ import annotations
@@ -22,6 +26,10 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import crossbar as xb
+from repro.core import plan_algebra as pa
+from repro.core import telemetry
 
 Array = jax.Array
 
@@ -37,15 +45,23 @@ class ServeOptions:
 
 def sample_token(logits: Array, key, *, temperature: float = 0.0,
                  top_k: int = 0) -> Array:
-    """logits (B, V) -> (B,) int32. Fixed-shape, branch-free."""
+    """logits (B, V) -> (B,) int32. Fixed-shape, branch-free.
+
+    With ``top_k > 0`` the categorical draw happens over the (B, k) top-k
+    value table and the winning *token id* is fetched by a fused
+    block-diagonal crossbar gather: one plan, one ``apply_plan``, for all
+    B rows (int payload on the exact int32 einsum path).
+    """
     logits = logits.astype(jnp.float32)
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / temperature
     if top_k > 0:
-        vals, _ = jax.lax.top_k(logits, top_k)
-        thresh = vals[:, -1:]
-        logits = jnp.where(logits >= thresh, logits, -1e30)
+        vals, ids = jax.lax.top_k(logits, top_k)        # (B, k) each
+        j = jax.random.categorical(key, vals)           # (B,) slot in [0, k)
+        plan = pa.batched_gather_plan(j[:, None], top_k)
+        token = xb.apply_plan(plan, ids.reshape(-1).astype(jnp.int32))
+        return token.astype(jnp.int32)
     return jax.random.categorical(key, logits).astype(jnp.int32)
 
 
@@ -69,6 +85,22 @@ class ServingEngine:
         self._step = jax.jit(step)
         self._caches = api.init_caches(b, max_seq, cache_dtype)
         self._slot_free = np.ones(b, dtype=bool)
+
+    @staticmethod
+    def engine_telemetry() -> dict:
+        """Crossbar pass + plan/schedule cache counters (telemetry.snapshot).
+
+        The decode step is jitted, so plan construction happens at *trace*
+        time: a healthy engine shows apply_calls == 1 per traced step
+        (the fused sampled-token gather is one crossbar pass) and the
+        counters then stay FLAT across decode steps — steady counters
+        mean no retracing and no plan rebuilding.  Counter *growth* during
+        steady-state decoding is the smoke signal (shape churn forcing
+        recompilation).  Eager/concrete plan reuse (e.g. repeated
+        ``combine_plan`` derivation outside jit) shows up as
+        plan/compile-cache hits instead.
+        """
+        return telemetry.snapshot()
 
     def generate(self, params, prompts: list[list[int]], *, key=None
                  ) -> list[list[int]]:

@@ -1,0 +1,112 @@
+"""Hypothesis property sweeps for the plan algebra.
+
+compose/transpose/block_diag must agree element-for-element with
+sequential op application across randomly drawn plan families —
+including DROP propagation (OOB gathers, slide-outs), weighted selects,
+and group>1 lazy chains.  Deterministic smoke versions of these live in
+test_plan_algebra.py; this module is the broad randomized sweep."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import crossbar as xb
+from repro.core import permute as P
+from repro.core import plan_algebra as pa
+
+KINDS = ["gather", "compress", "slide_up", "slide_down", "weighted_gather"]
+
+
+def _rand_plan(key, n, kind):
+    if kind == "gather":  # OOB entries included -> DROP propagation
+        idx = jax.random.randint(key, (n,), -2, n + 2, dtype=jnp.int32)
+        return xb.gather_plan(idx, n)
+    if kind == "weighted_gather":
+        k1, k2 = jax.random.split(key)
+        idx = jax.random.randint(k1, (n,), -1, n + 1, dtype=jnp.int32)
+        w = jax.random.normal(k2, (n,))
+        return xb.gather_plan(idx, n, weights=w)
+    if kind == "compress":
+        return xb.vcompress_plan(jax.random.bernoulli(key, 0.6, (n,)))
+    if kind == "slide_up":
+        off = int(jax.random.randint(key, (), 0, n // 2))
+        return xb.vslide_plan(n, off, up=True)
+    if kind == "slide_down":
+        off = int(jax.random.randint(key, (), 0, n // 2))
+        return xb.vslide_plan(n, off, up=False)
+    raise ValueError(kind)
+
+
+class TestComposeProperties:
+    @given(st.integers(0, 10_000), st.sampled_from(KINDS),
+           st.sampled_from(KINDS), st.sampled_from([8, 16, 24]))
+    @settings(max_examples=60, deadline=None)
+    def test_compose_matches_sequential(self, seed, k1, k2, n):
+        key1, key2, kx = jax.random.split(jax.random.PRNGKey(seed), 3)
+        p1 = _rand_plan(key1, n, k1)
+        p2 = _rand_plan(key2, n, k2)
+        x = jax.random.normal(kx, (n, 2))
+        seq = xb.apply_plan(p2, xb.apply_plan(p1, x))
+        fused = xb.apply_plan(pa.compose(p2, p1), x)
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(seq),
+                                   rtol=1e-4, atol=1e-5)
+
+    @given(st.integers(0, 10_000), st.sampled_from(KINDS))
+    @settings(max_examples=40, deadline=None)
+    def test_transpose_is_operator_transpose(self, seed, kind):
+        plan = _rand_plan(jax.random.PRNGKey(seed), 12, kind)
+        a = np.asarray(xb.build_onehot(plan))
+        b = np.asarray(xb.build_onehot(pa.transpose(plan)))
+        np.testing.assert_allclose(a, b.T, rtol=1e-6)
+
+    @given(st.integers(0, 10_000), st.integers(2, 6))
+    @settings(max_examples=30, deadline=None)
+    def test_block_diag_matches_per_row(self, seed, b):
+        n = 8
+        keys = jax.random.split(jax.random.PRNGKey(seed), b)
+        plans = [_rand_plan(k, n, KINDS[i % len(KINDS)])
+                 for i, k in enumerate(keys)]
+        big = pa.block_diag(plans)
+        x = jax.random.normal(jax.random.PRNGKey(seed + 1), (b, n, 2))
+        rows = [np.asarray(xb.apply_plan(p, x[i]))
+                for i, p in enumerate(plans)]
+        got = np.asarray(xb.apply_plan(big, x.reshape(b * n, 2)))
+        np.testing.assert_allclose(got, np.concatenate(rows, axis=0),
+                                   rtol=1e-4, atol=1e-5)
+
+    @given(st.integers(0, 10_000), st.sampled_from([1, 2, 4]))
+    @settings(max_examples=30, deadline=None)
+    def test_lazy_group_chain_matches_sequential(self, seed, g):
+        n = 16
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = jax.random.normal(ks[0], (n, 2))
+        mask = jax.random.bernoulli(ks[1], 0.5, (n // g,))
+        idx = jax.random.randint(ks[2], (n // g,), -1, n // g + 1,
+                                 dtype=jnp.int32)
+        seq = P.vrgather(P.vcompress(x, mask, group=g), idx, group=g)
+        got = P.vrgather(P.vcompress(P.lazy(x), mask, group=g), idx,
+                         group=g).apply()
+        np.testing.assert_allclose(np.asarray(got), np.asarray(seq),
+                                   rtol=1e-4, atol=1e-5)
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=30, deadline=None)
+    def test_drop_propagation_oob_chain(self, seed):
+        """Compositions of plans with OOB selects drop exactly like the
+        sequential pipeline (zeros, never garbage)."""
+        n = 12
+        k1, k2, kx = jax.random.split(jax.random.PRNGKey(seed), 3)
+        idx1 = jax.random.randint(k1, (n,), -n, 2 * n, dtype=jnp.int32)
+        idx2 = jax.random.randint(k2, (n,), -n, 2 * n, dtype=jnp.int32)
+        p1 = xb.gather_plan(idx1, n)
+        p2 = xb.gather_plan(idx2, n)
+        x = jax.random.normal(kx, (n, 3))
+        seq = xb.apply_plan(p2, xb.apply_plan(p1, x))
+        fused = xb.apply_plan(pa.compose(p2, p1), x)
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(seq),
+                                   rtol=1e-4, atol=1e-5)
