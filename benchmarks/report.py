@@ -1,14 +1,30 @@
-"""Generate EXPERIMENTS.md markdown tables from the dry-run JSONs.
+"""Generate EXPERIMENTS.md markdown tables from the dry-run JSONs, and
+the engine-benchmark trajectory table from the BENCH_*.json files at the
+repo root (``--bench``).
 
 Usage: PYTHONPATH=src python -m benchmarks.report [--mesh 16x16]
+       PYTHONPATH=src python -m benchmarks.report --bench
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 
 from benchmarks.bench_roofline import load
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Engine benchmarks whose committed JSONs form the perf trajectory; a
+# new workload joins the report by adding its (file, headline keys) row.
+BENCH_FILES = [
+    ("BENCH_sparse_crossbar.json", ("speedup_sparse_vs_kernel",)),
+    ("BENCH_plan_fusion.json", ("speedup_fused_vs_chained",
+                                "speedup_sparse_vs_dense_kernel")),
+    ("BENCH_crypto.json", ("speedup_fused_vs_chained",
+                           "blockdiag_density_at_B16")),
+]
 
 
 def fmt_bytes(b):
@@ -66,12 +82,40 @@ def roofline_table(mesh="16x16"):
     return "\n".join(out)
 
 
+def bench_table():
+    """Markdown summary of every committed engine-benchmark JSON."""
+    out = ["### Engine benchmarks (committed BENCH_*.json)",
+           "",
+           "| benchmark | backend | recorded | rows | headline | pass |",
+           "|---|---|---|---|---|---|"]
+    for fname, headline_keys in BENCH_FILES:
+        path = os.path.join(REPO, fname)
+        if not os.path.exists(path):
+            out.append(f"| {fname} | — | — | — | not recorded yet | — |")
+            continue
+        with open(path) as f:
+            rep = json.load(f)
+        acc = rep.get("acceptance", {})
+        headline = ", ".join(
+            f"{k}={acc[k]}" for k in headline_keys if k in acc) or "—"
+        out.append(
+            f"| {rep.get('benchmark', fname)} | "
+            f"{rep.get('jax_backend', '?')} | "
+            f"{rep.get('timestamp', '?')} | {len(rep.get('rows', []))} | "
+            f"{headline} | {acc.get('pass', '—')} |")
+    return "\n".join(out)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="16x16")
     ap.add_argument("--roofline", action="store_true")
+    ap.add_argument("--bench", action="store_true",
+                    help="summarise the committed BENCH_*.json files")
     args = ap.parse_args()
-    if args.roofline:
+    if args.bench:
+        print(bench_table())
+    elif args.roofline:
         print(roofline_table(args.mesh))
     else:
         print(dryrun_table(args.mesh))

@@ -52,6 +52,12 @@ from repro.core.plan_algebra import (
     transpose,
     with_weights,
 )
+from repro.core.static_registry import (
+    FixedLatencyError,
+    StaticPlanRegistry,
+    schedule_fingerprint,
+)
+from repro.core.bitwidth import bit_permute, from_bit_rows, to_bit_rows
 from repro.core import baselines, moe_dispatch, sequence, telemetry
 
 __all__ = [
@@ -67,5 +73,7 @@ __all__ = [
     "PlanExpr", "batch", "batched_gather_plan", "batched_scatter_plan",
     "block_diag", "compose", "compose_all", "identity_plan", "to_gather",
     "transpose", "with_weights",
+    "FixedLatencyError", "StaticPlanRegistry", "schedule_fingerprint",
+    "bit_permute", "from_bit_rows", "to_bit_rows",
     "baselines", "moe_dispatch", "sequence", "telemetry",
 ]

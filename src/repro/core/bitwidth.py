@@ -1,0 +1,78 @@
+"""Sub-element-width permutation: the paper's minimum-SEW knob, inverted.
+
+``core/permute.py`` generalises element width *upward* (``group=g``
+moves g rows as one unit, shrinking the crossbar N -> N/g — Table 1's
+cost collapse).  This module generalises it *downward*: a permutation at
+**bit** granularity over payloads stored as w-bit words.  Words are
+unpacked into w one-bit rows (``kernels.ops.unpack_bits``), the bit-level
+``PermutePlan`` executes as ONE crossbar pass on the widened N*w axis,
+and the rows pack back into words.  Pack/unpack are branch-free
+shift/mask arithmetic, so the whole path keeps the engine's
+data-independent-latency property — which is why PRESENT/GIFT-style
+cipher layers (``repro.crypto.bitperm``) can run through it under the
+fixed-latency contract.
+
+The storage width w is a pure layout choice: the crossbar length is
+always ``n_bits``, only the pack/unpack overhead varies.  The width
+sweep in ``benchmarks/bench_crypto.py`` measures that trade-off.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import crossbar as xb
+from repro.kernels import ops as kops
+
+Array = jax.Array
+
+
+def to_bit_rows(x: Array, width: int) -> Array:
+    """(N_words, ...) w-bit ints -> (N_words*w, ...) 0/1 int32 rows."""
+    return kops.unpack_bits(x, width, axis=0)
+
+
+def from_bit_rows(bits: Array, width: int, dtype=jnp.int32) -> Array:
+    """(N_words*w, ...) bit rows -> (N_words, ...) packed words."""
+    return kops.pack_bits(bits, width, axis=0, dtype=dtype)
+
+
+def bit_permute(
+    plan: xb.PermutePlan,
+    x: Array,
+    *,
+    width: int = 1,
+    backend: str = "einsum",
+    interpret: Optional[bool] = None,
+) -> Array:
+    """Execute a bit-granularity plan over a word-packed payload.
+
+    Args:
+      plan:  a PermutePlan over ``n_bits`` one-bit rows.
+      x:     (n_bits // width, ...) integers of ``width`` bits each
+             (``width=1`` means the payload already is bit rows and the
+             pack/unpack stages vanish).
+      width: storage bits per input word (1..31).
+    Returns:
+      Same shape/dtype as ``x``: the permuted bits, repacked.
+
+    Exactly one ``apply_plan`` call regardless of width — pack/unpack
+    are arithmetic, not crossbar passes.
+    """
+    x = jnp.asarray(x)
+    if width == 1:
+        if x.shape[0] != plan.n_in:
+            raise ValueError(
+                f"bit payload has {x.shape[0]} rows, plan consumes "
+                f"{plan.n_in}")
+        return xb.apply_plan(plan, x, backend=backend, interpret=interpret)
+    if x.shape[0] * width != plan.n_in:
+        raise ValueError(
+            f"{x.shape[0]} words of {width} bits != plan's {plan.n_in} "
+            "bit rows")
+    bits = to_bit_rows(x, width)
+    out = xb.apply_plan(plan, bits, backend=backend, interpret=interpret)
+    return from_bit_rows(out, width, dtype=x.dtype)

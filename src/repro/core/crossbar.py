@@ -314,18 +314,28 @@ def _compile_schedule(plan: PermutePlan, block_o: int, block_n: int):
 # aliasing impossible.  The plan algebra memoises its own constructions
 # (plan_algebra._memo) so a recomposed plan arrives here with the same
 # array identities and hits.
+#
+# Static plans (crypto permutation layers, any plan whose control is a
+# program constant registered in a ``core.static_registry``) bypass the
+# LRU via ``compile_plan(..., pin=True)``: their schedules live in
+# ``_PINNED_COMPILE``, are checked first on lookup, and are never
+# evicted — transient traffic (serving routing churn) cannot push a
+# fixed-latency plan's schedule out from under it.
 _COMPILE_CACHE: "OrderedDict[tuple, CompiledPlan]" = OrderedDict()
 _COMPILE_CACHE_CAPACITY = 64
 _COMPILE_CACHE_STATS = {"hits": 0, "misses": 0}
+_PINNED_COMPILE: "dict[tuple, CompiledPlan]" = {}
 
 
 def compile_cache_info() -> dict:
     return dict(_COMPILE_CACHE_STATS, size=len(_COMPILE_CACHE),
-                capacity=_COMPILE_CACHE_CAPACITY)
+                capacity=_COMPILE_CACHE_CAPACITY,
+                pinned=len(_PINNED_COMPILE))
 
 
 def clear_compile_cache() -> None:
     _COMPILE_CACHE.clear()
+    _PINNED_COMPILE.clear()
     _COMPILE_CACHE_STATS.update(hits=0, misses=0)
 
 
@@ -350,7 +360,7 @@ def _is_concrete_array(x) -> bool:
 
 
 def compile_plan(plan: PermutePlan, *, block_o: int = 128,
-                 block_n: int = 128) -> CompiledPlan:
+                 block_n: int = 128, pin: bool = False) -> CompiledPlan:
     """Compile a plan's active-tile schedule for a given blocking.
 
     Concrete plans (outside jit) produce a *static* ``num_active`` — the
@@ -359,6 +369,12 @@ def compile_plan(plan: PermutePlan, *, block_o: int = 128,
     plans compile inline (the schedule ops are jittable) with a traced
     count; the kernel skips inactive pairs with ``pl.when`` guards instead
     of shrinking the grid.
+
+    ``pin=True`` is the static-plan fast path: the schedule is stored in
+    (or promoted to) the pinned cache, which is consulted before the LRU
+    and never evicted — the contract backing ``core.static_registry``
+    plans, whose schedules must stay resident for the fixed-latency
+    guarantee to be checkable cheaply on every call.
     """
     # Lookup eligibility only needs concrete operands: an entry stored by
     # a previous out-of-trace compile is concrete, and returning it under
@@ -372,11 +388,20 @@ def compile_plan(plan: PermutePlan, *, block_o: int = 128,
         key = (plan.mode, plan.n_in, plan.n_out, block_o, block_n,
                id(plan.idx),
                id(plan.weights) if plan.weights is not None else None)
-        hit = _COMPILE_CACHE.get(key)
+        hit = _PINNED_COMPILE.get(key)
+        in_lru = False
+        if hit is None:
+            hit = _COMPILE_CACHE.get(key)
+            in_lru = hit is not None
         if (hit is not None and hit.plan.idx is plan.idx
                 and hit.plan.weights is plan.weights):
-            _COMPILE_CACHE.move_to_end(key)
             _COMPILE_CACHE_STATS["hits"] += 1
+            if in_lru:
+                if pin:  # promote: from now on immune to LRU churn
+                    del _COMPILE_CACHE[key]
+                    _PINNED_COMPILE[key] = hit
+                else:
+                    _COMPILE_CACHE.move_to_end(key)
             return hit
     _COMPILE_CACHE_STATS["misses"] += 1
 
@@ -394,9 +419,12 @@ def compile_plan(plan: PermutePlan, *, block_o: int = 128,
     compiled = CompiledPlan(plan, block_o, block_n, to, tn, occ,
                             pair_o, pair_n, active, num_active)
     if cacheable:
-        _COMPILE_CACHE[key] = compiled
-        while len(_COMPILE_CACHE) > _COMPILE_CACHE_CAPACITY:
-            _COMPILE_CACHE.popitem(last=False)
+        if pin:
+            _PINNED_COMPILE[key] = compiled
+        else:
+            _COMPILE_CACHE[key] = compiled
+            while len(_COMPILE_CACHE) > _COMPILE_CACHE_CAPACITY:
+                _COMPILE_CACHE.popitem(last=False)
     return compiled
 
 

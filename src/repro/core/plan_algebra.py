@@ -247,10 +247,28 @@ def compose(p2: xb.PermutePlan, p1: xb.PermutePlan) -> xb.PermutePlan:
                  build)
 
 
-def compose_all(plans: Sequence[xb.PermutePlan]) -> xb.PermutePlan:
-    """Fold a pipeline [first, ..., last] into one plan."""
+def compose_all(plans: Sequence[xb.PermutePlan], *,
+                n: Optional[int] = None) -> xb.PermutePlan:
+    """Fold a pipeline [first, ..., last] into one plan.
+
+    The empty pipeline is the unit of composition, but its crossbar
+    length cannot be inferred from zero operands: pass ``n`` to get
+    ``identity_plan(n)`` back, otherwise the empty case raises a
+    ``ValueError`` (it would previously fall through to an undefined
+    reduction).  When ``n`` is given alongside a non-empty pipeline it is
+    validated against the first plan's input length.
+    """
+    plans = list(plans)
     if not plans:
-        raise ValueError("compose_all: empty pipeline")
+        if n is None:
+            raise ValueError(
+                "compose_all: empty pipeline has no inferable length; "
+                "pass n=<crossbar length> to get the identity plan")
+        return identity_plan(n)
+    if n is not None and plans[0].n_in != n:
+        raise ValueError(
+            f"compose_all: first plan consumes {plans[0].n_in} elements "
+            f"but n={n} was declared")
     fused = plans[0]
     for p in plans[1:]:
         fused = compose(p, fused)
@@ -269,8 +287,15 @@ def block_diag(plans: Sequence[xb.PermutePlan]) -> xb.PermutePlan:
     ``compile_plan`` is block-diagonal and the sparse backend skips the
     off-diagonal tiles entirely.
     """
+    plans = list(plans)
     if not plans:
-        raise ValueError("block_diag: empty plan list")
+        # No well-defined geometry exists for a 0-plan direct sum (a
+        # (0, 0) plan breaks every downstream shape contract), so this is
+        # an explicit error rather than whatever an empty reduction would
+        # produce.  The composition unit lives in compose_all(n=...).
+        raise ValueError(
+            "block_diag: empty plan list has no well-defined geometry; "
+            "the direct sum needs at least one plan")
     gs = [to_gather(p) for p in plans]
     kmax = max(g.k for g in gs)
 

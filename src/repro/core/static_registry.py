@@ -1,0 +1,232 @@
+"""Compile-once plan registries and the fixed-latency execution contract.
+
+The paper's unified datapath exists to give every permutation the same,
+data-independent schedule — a microarchitectural property this repo's
+crossbar engine provides implicitly (every backend is branch-free and
+fixed-shape) but, until now, nothing *consumed*.  Cryptographic
+permutation layers are that consumer: their control information is a
+program constant (Keccak ρ∘π, ChaCha diagonalisation, AES ShiftRows,
+PRESENT's bit pLayer), their schedules must never vary with the data
+being permuted, and timing-side-channel hygiene demands the invariance
+be *asserted*, not assumed.
+
+Two pieces:
+
+* ``StaticPlanRegistry`` — named ``PermutePlan``s whose control is
+  checked concrete (a traced plan is by definition not static) and whose
+  tile schedules are compiled once through ``compile_plan(pin=True)``,
+  the pinned fast path that is immune to LRU churn.  Plans register
+  eagerly (``register``) or lazily (``get_or_register``, used for
+  batch-width variants built on demand with ``plan_algebra.batch``).
+
+* ``StaticPlanRegistry.observe`` — the fixed-latency contract
+  checker.  An observed block's *signature* — crossbar pass
+  count (via ``core.telemetry``) plus the schedule fingerprint
+  (geometry, select count, occupied-tile count) of every plan it
+  declares — is recorded on first execution for each (op, payload
+  shapes, backend) key and must be bit-identical on every later call.
+  Payload values never enter the signature, so a violation means the
+  implementation's schedule depends on data — exactly the bug class the
+  paper's fixed-latency datapath exists to exclude.  Violations raise
+  ``FixedLatencyError`` (an ``AssertionError``: this is a contract
+  check, not a recoverable condition).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+
+from repro.core import crossbar as xb
+from repro.core import telemetry
+
+
+class FixedLatencyError(AssertionError):
+    """A fixed-latency operation changed schedule/pass-count across calls."""
+
+
+def _require_static(plan: xb.PermutePlan, key: str) -> None:
+    if isinstance(plan.idx, jax.core.Tracer) or isinstance(
+            plan.weights, jax.core.Tracer):
+        raise ValueError(
+            f"static registry plan {key!r} has traced control information; "
+            "static plans must be built from concrete (program-constant) "
+            "indices")
+
+
+def schedule_fingerprint(plan: xb.PermutePlan, *, block_o: int = 128,
+                         block_n: int = 128) -> tuple:
+    """Value-level identity of a plan's compiled schedule.
+
+    Deliberately *not* keyed on object identity: cache clears between
+    calls (test isolation) rebuild equal schedules, and equality of
+    (geometry, selects, occupied-tile count) is what fixed latency
+    means.  Compiling here is a pinned-cache hit in the steady state.
+    """
+    compiled = xb.compile_plan(plan, block_o=block_o, block_n=block_n,
+                               pin=True)
+    return (plan.mode, plan.n_in, plan.n_out, plan.k,
+            compiled.n_o_tiles, compiled.n_n_tiles,
+            int(compiled.num_active))
+
+
+class StaticPlanRegistry:
+    """Named static plans, compiled once, executed under a latency contract."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._plans: Dict[str, xb.PermutePlan] = {}
+        self._observed: Dict[tuple, tuple] = {}
+
+    # -- registration -------------------------------------------------------
+
+    def register(self, key: str, plan: xb.PermutePlan, *,
+                 precompile: bool = True) -> xb.PermutePlan:
+        """Register a static plan under ``key`` (double-register is an error).
+
+        ``precompile`` pins the tile schedule immediately so the first
+        execution is already on the warm path.
+        """
+        if key in self._plans:
+            raise ValueError(
+                f"plan {key!r} already registered in {self.name!r}; "
+                "static plans are immutable — use a new key")
+        _require_static(plan, key)
+        self._plans[key] = plan
+        if precompile:
+            # Compile-time eval: registration may be reached from inside
+            # a jit trace (first use of a lazily-built cipher layer in a
+            # jitted step); the schedule of a concrete plan is itself
+            # concrete and must not be staged into that trace.
+            with jax.ensure_compile_time_eval():
+                xb.compile_plan(plan, pin=True)
+        return plan
+
+    def get_or_register(self, key: str,
+                        builder: Callable[[], xb.PermutePlan], *,
+                        precompile: bool = True) -> xb.PermutePlan:
+        """Idempotent registration: build only if ``key`` is absent.
+
+        The builder runs under ``jax.ensure_compile_time_eval()`` so a
+        static plan first touched inside a jit trace is still built from
+        concrete arrays (index arithmetic on program constants must
+        never be staged into the caller's trace).
+        """
+        plan = self._plans.get(key)
+        if plan is None:
+            with jax.ensure_compile_time_eval():
+                built = builder()
+            plan = self.register(key, built, precompile=precompile)
+        return plan
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._plans
+
+    def __getitem__(self, key: str) -> xb.PermutePlan:
+        try:
+            return self._plans[key]
+        except KeyError:
+            raise KeyError(
+                f"no plan {key!r} in static registry {self.name!r} "
+                f"(registered: {sorted(self._plans)})") from None
+
+    def keys(self):
+        return self._plans.keys()
+
+    def batch_variant(self, key: str, b: int) -> Tuple[xb.PermutePlan, str]:
+        """The width-``b`` block-diagonal variant of a registered plan.
+
+        Registered lazily under ``"<key>_x<b>"`` (``b=1`` returns the
+        base plan and key unchanged).  Returns ``(plan, variant_key)``
+        so fixed-latency observers can declare the exact plan they
+        executed — the key derivation lives in one place.
+        """
+        base = self[key]
+        if b == 1:
+            return base, key
+        from repro.core import plan_algebra as pa
+        variant_key = f"{key}_x{b}"
+        return self.get_or_register(
+            variant_key, lambda: pa.batch(base, b)), variant_key
+
+    def compiled(self, key: str) -> xb.CompiledPlan:
+        """The pinned schedule of a registered plan (re-pins after clears)."""
+        return xb.compile_plan(self[key], pin=True)
+
+    def fingerprint(self, key: str) -> tuple:
+        return schedule_fingerprint(self[key])
+
+    def info(self) -> dict:
+        return {"name": self.name, "plans": len(self._plans),
+                "observed_signatures": len(self._observed)}
+
+    # -- fixed-latency contract --------------------------------------------
+
+    def reset_observations(self) -> None:
+        """Forget recorded signatures (test isolation), keep the plans."""
+        self._observed.clear()
+
+    @contextlib.contextmanager
+    def observe(self, name: Any, *, shapes: Sequence = (),
+                backend: Optional[str] = None,
+                plan_keys: Sequence[str] = (),
+                expect_apply_calls: Optional[int] = None):
+        """Assert the wrapped block's schedule signature is call-invariant.
+
+        ``name``/``shapes``/``backend`` key the signature: a different
+        payload geometry or backend is a different static configuration
+        and gets its own recorded signature.  Within one key, the pass
+        count and every declared plan's schedule fingerprint must match
+        the first observation exactly — for any payload *values*.
+        ``expect_apply_calls`` additionally hard-checks the pass count
+        (e.g. 24 for fused-ρπ Keccak-f[1600]: one crossbar pass per
+        round).
+        """
+        with telemetry.delta() as d:
+            yield
+        delta = d()
+        calls = delta["apply_calls"]
+        if expect_apply_calls is not None and calls != expect_apply_calls:
+            raise FixedLatencyError(
+                f"{self.name}:{name}: expected {expect_apply_calls} "
+                f"crossbar passes, executed {calls}")
+        sig = (calls, tuple(self.fingerprint(k) for k in plan_keys))
+        key = (name, tuple(shapes), backend)
+        prev = self._observed.get(key)
+        if prev is None:
+            self._observed[key] = sig
+        elif prev != sig:
+            raise FixedLatencyError(
+                f"{self.name}:{name} violated the fixed-latency contract "
+                f"for shapes={tuple(shapes)} backend={backend!r}: first "
+                f"call signature {prev} != this call {sig} (pass count, "
+                "(mode, n_in, n_out, k, o_tiles, n_tiles, active_tiles) "
+                "per plan)")
+
+    # -- execution ----------------------------------------------------------
+
+    def execute(self, key: str, x: jax.Array, *,
+                merge: Optional[jax.Array] = None,
+                backend: str = "einsum",
+                out_mask: Optional[jax.Array] = None,
+                interpret: Optional[bool] = None,
+                fixed_latency: bool = False) -> jax.Array:
+        """One crossbar pass of a registered plan over ``x``.
+
+        With ``fixed_latency=True`` the pass is observed: exactly one
+        ``apply_plan`` call, schedule fingerprint invariant across calls
+        for this (key, payload shape/dtype, backend).
+        """
+        plan = self[key]
+        if not fixed_latency:
+            return xb.apply_plan(plan, x, merge=merge, backend=backend,
+                                 out_mask=out_mask, interpret=interpret)
+        with self.observe(("execute", key),
+                          shapes=(tuple(x.shape), str(x.dtype)),
+                          backend=backend, plan_keys=(key,),
+                          expect_apply_calls=1):
+            out = xb.apply_plan(plan, x, merge=merge, backend=backend,
+                                out_mask=out_mask, interpret=interpret)
+        return out

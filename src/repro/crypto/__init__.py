@@ -1,0 +1,60 @@
+"""repro.crypto — fixed-latency cryptographic permutation workloads.
+
+The repo's first non-ML scenario family, and the first consumer that
+*requires* the crossbar engine's implicit guarantees (branch-free,
+fixed-shape, data-independent schedules) as a tested contract rather
+than a happy accident:
+
+* ``keccak``     — Keccak-f[1600] at bit granularity; ρ∘π fused into ONE
+                   crossbar pass per round via ``plan_algebra.compose``;
+                   SHA-3 / SHAKE sponges validated against ``hashlib``.
+* ``chacha``     — ChaCha20 block function; the diagonal-round lane
+                   rotations execute as one block-diagonal vslide-style
+                   plan (``block_diag`` of per-row rotations) and its
+                   transpose.
+* ``aes_layers`` — AES ShiftRows / InvShiftRows as 16-byte plans.
+* ``bitperm``    — PRESENT-style bit permutations through the
+                   sub-element-width pack/permute/unpack path
+                   (``core.bitwidth``).
+
+Every plan is a program constant registered once in ``REGISTRY`` (a
+``core.static_registry.StaticPlanRegistry``), schedule-pinned via
+``compile_plan(pin=True)``, and executable on every crossbar backend.
+Passing ``fixed_latency=True`` to any entry point asserts — via
+``core.telemetry`` pass counters and schedule fingerprints — that the
+execution schedule is identical across calls regardless of payload.
+"""
+
+from repro.crypto.registry import REGISTRY, reset_observations
+from repro.crypto.keccak import (
+    KECCAK_ROUNDS,
+    keccak_f1600,
+    rho_offsets,
+    round_constants,
+    sha3_256,
+    sha3_256_batched,
+    sha3_512,
+    shake_128,
+    shake_256,
+)
+from repro.crypto.chacha import (
+    chacha20_block,
+    chacha20_blocks,
+    chacha20_encrypt,
+)
+from repro.crypto.aes_layers import inv_shift_rows, shift_rows
+from repro.crypto.bitperm import (
+    BitPermutation,
+    bit_reversal,
+    present_player,
+)
+from repro.core.static_registry import FixedLatencyError
+
+__all__ = [
+    "REGISTRY", "reset_observations", "FixedLatencyError",
+    "KECCAK_ROUNDS", "keccak_f1600", "rho_offsets", "round_constants",
+    "sha3_256", "sha3_256_batched", "sha3_512", "shake_128", "shake_256",
+    "chacha20_block", "chacha20_blocks", "chacha20_encrypt",
+    "inv_shift_rows", "shift_rows",
+    "BitPermutation", "bit_reversal", "present_player",
+]

@@ -1,0 +1,70 @@
+"""AES permutation layers (ShiftRows and its inverse) as static plans.
+
+The AES state is 16 bytes in FIPS-197 column-major order
+(``flat[4c + r] = s[r, c]``).  ShiftRows rotates row r left by r —
+a pure byte permutation, i.e. a 16-row crossbar gather plan; the
+inverse is its operator transpose (registered separately so both
+directions are gather-form and schedule-pinned).  The non-permutation
+AES layers (SubBytes, MixColumns, AddRoundKey) are arithmetic outside
+the crossbar and out of scope here — this module exists to give the
+fixed-latency contract a third, minimal cipher geometry (16 rows)
+alongside Keccak's 1600 and PRESENT's 64.
+
+Payloads are byte values (0..255), exact on every backend: the einsum
+integer path accumulates in int32 and the kernel paths' f32 routing is
+exact below 2^24.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.crypto.registry import REGISTRY
+
+Array = jax.Array
+
+STATE_BYTES = 16
+
+
+def _shift_rows_src() -> np.ndarray:
+    """out[4c + r] = in[4*((c + r) % 4) + r]  (row r rotates left by r)."""
+    src = np.zeros(STATE_BYTES, np.int32)
+    for o in range(STATE_BYTES):
+        r, c = o % 4, o // 4
+        src[o] = 4 * ((c + r) % 4) + r
+    return src
+
+
+def _register() -> None:
+    from repro.core import crossbar as xb
+    from repro.core import plan_algebra as pa
+    REGISTRY.get_or_register(
+        "aes/shift_rows",
+        lambda: xb.gather_plan(jnp.asarray(_shift_rows_src()), STATE_BYTES))
+    REGISTRY.get_or_register(
+        "aes/inv_shift_rows",
+        lambda: pa.to_gather(pa.transpose(REGISTRY["aes/shift_rows"])))
+
+
+def shift_rows(state: Array, *, backend: str = "einsum",
+               fixed_latency: bool = False,
+               interpret: Optional[bool] = None) -> Array:
+    """ShiftRows on a (16, ...) byte-rows state (column-major flattening)."""
+    _register()
+    return REGISTRY.execute("aes/shift_rows", state, backend=backend,
+                            fixed_latency=fixed_latency,
+                            interpret=interpret)
+
+
+def inv_shift_rows(state: Array, *, backend: str = "einsum",
+                   fixed_latency: bool = False,
+                   interpret: Optional[bool] = None) -> Array:
+    """InvShiftRows: the transposed (gather-normalised) plan."""
+    _register()
+    return REGISTRY.execute("aes/inv_shift_rows", state, backend=backend,
+                            fixed_latency=fixed_latency,
+                            interpret=interpret)

@@ -1,0 +1,117 @@
+"""Bit-granularity cipher permutations through the sub-element-width path.
+
+PRESENT/GIFT-style lightweight ciphers permute individual *bits* of a
+64-bit block — elements narrower than any payload word the engine
+otherwise moves.  ``BitPermutation`` wraps a static bit-level plan
+(registered + schedule-pinned like every crypto plan) behind
+``core.bitwidth.bit_permute``: the packed words are unpacked into 0/1
+rows, permuted in ONE crossbar pass, and repacked, for any storage width
+1..31.  This is the software analogue of lowering the paper's minimum
+SEW below the architectural element size (Table 1 read in reverse).
+
+Built-ins:
+
+* ``present_player()`` — the PRESENT pLayer, generated from its closed
+  form ``P(i) = 16*i mod 63`` (``P(63) = 63``); bijective by
+  construction (checked at registration).
+* ``bit_reversal(n)`` — the classic FFT bit-reversal permutation, a
+  dense-occupancy stress shape for the width sweep.
+
+GIFT's bit-sliced pLayer (or any other published table) drops in as
+``BitPermutation("bit/gift64", dest_array)``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitwidth as bw
+from repro.core import crossbar as xb
+from repro.core import plan_algebra as pa
+from repro.crypto.registry import REGISTRY
+
+Array = jax.Array
+
+
+class BitPermutation:
+    """A named, registered bit-level permutation applied to packed words."""
+
+    def __init__(self, key: str, dest: np.ndarray):
+        """``dest[i]`` is the destination bit position of input bit i
+        (scatter form — the input-driven convention every published
+        cipher table uses).  Must be a bijection on [0, n_bits)."""
+        dest = np.asarray(dest, np.int32)
+        if dest.ndim != 1:
+            raise ValueError("bit permutation spec must be 1-D")
+        if sorted(dest.tolist()) != list(range(dest.shape[0])):
+            raise ValueError(
+                f"bit permutation {key!r} is not a bijection on "
+                f"[0, {dest.shape[0]})")
+        self.key = key
+        self.n_bits = int(dest.shape[0])
+        self.plan = REGISTRY.get_or_register(
+            key, lambda: pa.to_gather(
+                xb.scatter_plan(jnp.asarray(dest), self.n_bits)))
+        # get_or_register returns whatever is already registered under
+        # this key — if that was built from a *different* table, this
+        # instance would silently permute with the wrong spec.  A
+        # bijective scatter's gather normal form is its inverse
+        # permutation, so the check is exact.
+        inv = np.empty(self.n_bits, np.int32)
+        inv[dest] = np.arange(self.n_bits, dtype=np.int32)
+        if not np.array_equal(np.asarray(self.plan.idx[:, 0]), inv):
+            raise ValueError(
+                f"bit permutation {key!r} is already registered with a "
+                "different destination table; static plans are immutable "
+                "— use a new key")
+
+    def inverse(self) -> "BitPermutation":
+        """The transposed plan, registered under ``<key>/inv``."""
+        inv = object.__new__(BitPermutation)
+        inv.key = f"{self.key}/inv"
+        inv.n_bits = self.n_bits
+        inv.plan = REGISTRY.get_or_register(
+            inv.key, lambda: pa.to_gather(pa.transpose(self.plan)))
+        return inv
+
+    def __call__(self, x: Array, *, width: int = 1,
+                 backend: str = "einsum",
+                 fixed_latency: bool = False,
+                 interpret: Optional[bool] = None) -> Array:
+        """Permute ``x``: (n_bits // width, ...) words of ``width`` bits.
+
+        One crossbar pass at bit granularity; pack/unpack are arithmetic.
+        """
+        if not fixed_latency:
+            return bw.bit_permute(self.plan, x, width=width,
+                                  backend=backend, interpret=interpret)
+        x = jnp.asarray(x)
+        with REGISTRY.observe(
+                ("bitperm", self.key, width),
+                shapes=(tuple(x.shape), str(x.dtype)),
+                backend=backend, plan_keys=(self.key,),
+                expect_apply_calls=1):
+            out = bw.bit_permute(self.plan, x, width=width,
+                                 backend=backend, interpret=interpret)
+        return out
+
+
+def present_player() -> BitPermutation:
+    """The PRESENT cipher's 64-bit pLayer: ``P(i) = 16*i mod 63``."""
+    dest = np.array([16 * i % 63 if i != 63 else 63 for i in range(64)],
+                    np.int32)
+    return BitPermutation("bit/present", dest)
+
+
+def bit_reversal(n_bits: int) -> BitPermutation:
+    """Bit-index reversal on ``n_bits`` (a power of two) positions."""
+    if n_bits & (n_bits - 1) or n_bits < 2:
+        raise ValueError("bit_reversal needs a power-of-two size")
+    width = n_bits.bit_length() - 1
+    dest = np.array(
+        [int(f"{i:0{width}b}"[::-1], 2) for i in range(n_bits)], np.int32)
+    return BitPermutation(f"bit/reverse{n_bits}", dest)

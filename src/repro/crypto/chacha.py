@@ -1,0 +1,187 @@
+"""ChaCha20 block function with crossbar-executed diagonal rounds.
+
+The SIMD formulation of ChaCha20 alternates column quarter-rounds with a
+*diagonalisation* of the 4x4 word matrix: row r rotates left by r, so the
+next batch of column quarter-rounds hits the diagonals, then the inverse
+rotation restores row order.  Those rotations are exactly the paper's
+``vslide``-family lane moves, and here they are built *as algebra*:
+
+    diag   = block_diag([rotate_row(0), rotate_row(1),
+                         rotate_row(2), rotate_row(3)])   # one 16-word plan
+    undiag = transpose(diag)                              # gather/scatter dual
+
+Each double round therefore costs exactly TWO crossbar passes (diag +
+undiag) and a fixed amount of 32-bit add/xor/rotate arithmetic — 20
+passes per block, asserted under the fixed-latency contract.  Counter
+blocks batch the same way as Keccak sponge lanes: B states flatten onto
+one block-diagonal (B*16)-word plan at 1/B occupancy, or ride as payload
+width of the single-block plan.
+
+Words stay ``uint32`` for the wrapping arithmetic and are bitcast to
+``int32`` around each crossbar pass (the einsum backend's integer path
+accumulates in int32, so routing is bit-exact at any magnitude).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import crossbar as xb
+from repro.core import plan_algebra as pa
+from repro.crypto.registry import REGISTRY
+
+Array = jax.Array
+
+_WORDS = 16
+_CONSTANTS = np.frombuffer(b"expand 32-byte k", dtype="<u4")
+_DOUBLE_ROUNDS = 10
+PASSES_PER_BLOCK = 2 * _DOUBLE_ROUNDS
+
+
+def _rotate_row_plan(r: int) -> xb.PermutePlan:
+    """Rotate a 4-word row left by r: out[j] = in[(j + r) % 4]."""
+    return xb.gather_plan(
+        jnp.asarray((np.arange(4) + r) % 4, np.int32), 4)
+
+
+def diag_plan() -> xb.PermutePlan:
+    return REGISTRY.get_or_register(
+        "chacha/diag",
+        lambda: pa.block_diag([_rotate_row_plan(r) for r in range(4)]))
+
+
+def undiag_plan() -> xb.PermutePlan:
+    return REGISTRY.get_or_register(
+        "chacha/undiag", lambda: pa.transpose(diag_plan()))
+
+
+def _rotl(x: Array, n: int) -> Array:
+    return (x << jnp.uint32(n)) | (x >> jnp.uint32(32 - n))
+
+
+def _column_round(v: Array) -> Array:
+    """One quarter-round over all four columns.  v: (B, 16) uint32."""
+    a, b, c, d = v[:, 0:4], v[:, 4:8], v[:, 8:12], v[:, 12:16]
+    a = a + b
+    d = _rotl(d ^ a, 16)
+    c = c + d
+    b = _rotl(b ^ c, 12)
+    a = a + b
+    d = _rotl(d ^ a, 8)
+    c = c + d
+    b = _rotl(b ^ c, 7)
+    return jnp.concatenate([a, b, c, d], axis=1)
+
+
+def _setup_states(key: bytes, counter: int, nonce: bytes,
+                  n_blocks: int) -> np.ndarray:
+    if len(key) != 32:
+        raise ValueError("chacha20 key must be 32 bytes")
+    if len(nonce) != 12:
+        raise ValueError("chacha20 nonce must be 12 bytes (RFC 8439)")
+    base = np.concatenate([
+        _CONSTANTS,
+        np.frombuffer(key, dtype="<u4"),
+        np.zeros(1, np.uint32),
+        np.frombuffer(nonce, dtype="<u4"),
+    ])
+    states = np.tile(base, (n_blocks, 1))
+    states[:, 12] = (counter + np.arange(n_blocks)) & 0xFFFFFFFF
+    return states
+
+
+def _chacha_core(
+    states: Array,
+    *,
+    backend: str,
+    batch_mode: str,
+    interpret: Optional[bool],
+    fixed_latency: bool,
+) -> Array:
+    """20 rounds + feed-forward on (B, 16) uint32 states."""
+    b = states.shape[0]
+    use_block_diag = batch_mode == "block_diag" and b > 1
+    diag_plan(), undiag_plan()  # ensure the base plans are registered
+    width = b if use_block_diag else 1
+    (p_diag, k_diag) = REGISTRY.batch_variant("chacha/diag", width)
+    (p_undiag, k_undiag) = REGISTRY.batch_variant("chacha/undiag", width)
+    plans = (p_diag, p_undiag)
+    plan_keys = (k_diag, k_undiag)
+
+    def permute(v: Array, plan: xb.PermutePlan) -> Array:
+        as_i32 = jax.lax.bitcast_convert_type(v, jnp.int32)
+        if use_block_diag:
+            flat = xb.apply_plan(plan, as_i32.reshape(b * _WORDS),
+                                 backend=backend, interpret=interpret)
+            out = flat.reshape(b, _WORDS)
+        else:
+            out = xb.apply_plan(plan, as_i32.T, backend=backend,
+                                interpret=interpret).T
+        return jax.lax.bitcast_convert_type(out, jnp.uint32)
+
+    def run() -> Array:
+        v = states
+        for _ in range(_DOUBLE_ROUNDS):
+            v = _column_round(v)
+            v = permute(v, plans[0])
+            v = _column_round(v)
+            v = permute(v, plans[1])
+        return v + states
+
+    if not fixed_latency:
+        return run()
+    with REGISTRY.observe(
+            ("chacha20", batch_mode),
+            shapes=(tuple(states.shape), str(states.dtype)),
+            backend=backend, plan_keys=plan_keys,
+            expect_apply_calls=PASSES_PER_BLOCK):
+        out = run()
+    return out
+
+
+def chacha20_block(key: bytes, counter: int, nonce: bytes, *,
+                   backend: str = "einsum",
+                   fixed_latency: bool = False,
+                   interpret: Optional[bool] = None) -> bytes:
+    """One 64-byte keystream block (RFC 8439 state layout)."""
+    return chacha20_blocks(key, counter, nonce, 1, backend=backend,
+                           fixed_latency=fixed_latency,
+                           interpret=interpret)
+
+
+def chacha20_blocks(key: bytes, counter: int, nonce: bytes,
+                    n_blocks: int, *,
+                    backend: str = "einsum",
+                    batch_mode: str = "block_diag",
+                    fixed_latency: bool = False,
+                    interpret: Optional[bool] = None) -> bytes:
+    """``n_blocks`` consecutive keystream blocks as one batched core call.
+
+    Counter blocks are the crypto analogue of MoE's batched rows: B
+    independent 16-word permutation lanes sharing one block-diagonal
+    plan per diagonalisation.
+    """
+    if batch_mode not in ("block_diag", "payload"):
+        raise ValueError(f"unknown batch_mode {batch_mode!r}")
+    states = jnp.asarray(_setup_states(key, counter, nonce, n_blocks))
+    out = _chacha_core(states, backend=backend, batch_mode=batch_mode,
+                       interpret=interpret, fixed_latency=fixed_latency)
+    return np.asarray(out).astype("<u4").tobytes()
+
+
+def chacha20_encrypt(key: bytes, counter: int, nonce: bytes,
+                     plaintext: bytes, *, backend: str = "einsum",
+                     batch_mode: str = "block_diag",
+                     fixed_latency: bool = False) -> bytes:
+    """XOR-encrypt/decrypt ``plaintext`` with the ChaCha20 keystream."""
+    n_blocks = -(-len(plaintext) // 64) or 1
+    stream = chacha20_blocks(key, counter, nonce, n_blocks,
+                             backend=backend, batch_mode=batch_mode,
+                             fixed_latency=fixed_latency)
+    data = np.frombuffer(plaintext, np.uint8)
+    ks = np.frombuffer(stream, np.uint8)[:len(data)]
+    return (data ^ ks).tobytes()

@@ -1,0 +1,23 @@
+"""The crypto subsystem's static plan registry.
+
+One module-level ``StaticPlanRegistry`` shared by every cipher layer.
+Keys are namespaced ``"<cipher>/<layer>"`` (batch-width variants append
+``"_x<B>"``); each cipher module registers lazily on first use via
+``REGISTRY.get_or_register`` so importing ``repro.crypto`` stays cheap.
+
+All registered control information is concrete by construction (NumPy
+index arithmetic over published cipher specifications), so every plan
+gets a pinned, statically-compacted tile schedule — the precondition for
+the fixed-latency contract checks in ``StaticPlanRegistry.observe``.
+"""
+
+from __future__ import annotations
+
+from repro.core.static_registry import StaticPlanRegistry
+
+REGISTRY = StaticPlanRegistry("crypto")
+
+
+def reset_observations() -> None:
+    """Drop recorded fixed-latency signatures (tests); plans stay."""
+    REGISTRY.reset_observations()

@@ -181,6 +181,76 @@ def fused_vcompress(mask, x, *, tail="zero", interpret=None, block_d=128):
     return out[:, :d].astype(orig_dtype)
 
 
+# -- sub-element-width pack/permute/unpack helpers --------------------------
+# The paper's Table 1 shows crossbar cost collapsing as the minimum
+# movable element (SEW) grows; these helpers turn the knob the other way:
+# elements *narrower* than a payload word (bit permutations in PRESENT/
+# GIFT-style ciphers) are exposed by unpacking each word into `width`
+# 0/1 rows, permuting at bit granularity, and packing back.  Both
+# directions are branch-free shift/mask arithmetic (fixed latency) and
+# exact for values in [0, 2**width).
+
+_MAX_PACK_WIDTH = 31  # packed words accumulate in int32
+
+
+def unpack_bits(x, width, *, axis=0):
+    """Split each integer element into ``width`` 0/1 int32 rows (LSB-first).
+
+    ``(..., N, ...) -> (..., N*width, ...)`` along ``axis``: element i's
+    bits occupy rows ``[i*width, (i+1)*width)``, least-significant first
+    (the SHA-3 / RVV bit-numbering convention).  Values must lie in
+    ``[0, 2**width)``; width is capped at 31 so the packed round-trip is
+    int32-exact.
+    """
+    if not 1 <= width <= _MAX_PACK_WIDTH:
+        raise ValueError(f"unpack width must be in [1, {_MAX_PACK_WIDTH}], "
+                         f"got {width}")
+    x = jnp.asarray(x)
+    if not (jnp.issubdtype(x.dtype, jnp.integer) or x.dtype == jnp.bool_):
+        raise ValueError(f"unpack_bits needs an integer payload, got "
+                         f"{x.dtype}")
+    axis = axis % x.ndim
+    xe = jnp.expand_dims(x.astype(jnp.int32), axis + 1)
+    shifts = jnp.arange(width, dtype=jnp.int32).reshape(
+        (1,) * (axis + 1) + (width,) + (1,) * (x.ndim - axis - 1))
+    bits = (jnp.right_shift(xe, shifts)) & 1
+    shape = x.shape[:axis] + (x.shape[axis] * width,) + x.shape[axis + 1:]
+    return bits.reshape(shape)
+
+
+def pack_bits(bits, width, *, axis=0, dtype=jnp.int32):
+    """Inverse of :func:`unpack_bits`: fold ``width`` 0/1 rows per word.
+
+    ``(..., N*width, ...) -> (..., N, ...)`` along ``axis``.  Exact for
+    any bit pattern with ``width <= 31``.
+    """
+    if not 1 <= width <= _MAX_PACK_WIDTH:
+        raise ValueError(f"pack width must be in [1, {_MAX_PACK_WIDTH}], "
+                         f"got {width}")
+    bits = jnp.asarray(bits)
+    axis = axis % bits.ndim
+    n = bits.shape[axis]
+    if n % width:
+        raise ValueError(f"pack_bits: axis length {n} is not a multiple "
+                         f"of width {width}")
+    shape = bits.shape[:axis] + (n // width, width) + bits.shape[axis + 1:]
+    grouped = bits.astype(jnp.int32).reshape(shape)
+    weights = (jnp.int32(1) << jnp.arange(width, dtype=jnp.int32)).reshape(
+        (1,) * (axis + 1) + (width,) + (1,) * (bits.ndim - axis - 1))
+    return jnp.sum(grouped * weights, axis=axis + 1).astype(dtype)
+
+
+def bits_roundtrip(x, width, *, axis=0):
+    """``pack_bits(unpack_bits(x))`` — the identity for in-range payloads.
+
+    Exists to make the sub-element path's overhead measurable in
+    isolation (benchmarks/bench_crypto.py width sweep) and its exactness
+    assertable in tests without involving a crossbar pass.
+    """
+    return pack_bits(unpack_bits(x, width, axis=axis), width, axis=axis,
+                     dtype=jnp.asarray(x).dtype)
+
+
 def moe_route_transform(expert_ids, *, num_experts, capacity,
                         interpret=None, block_t=256):
     """Fused MoE position/destination transform. (T,K) -> (pos, dest)."""

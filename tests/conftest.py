@@ -1,3 +1,5 @@
+import sys
+
 import numpy as np
 import pytest
 
@@ -5,3 +7,25 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _reset_engine_state():
+    """Zero telemetry counters and drop plan/compile caches between tests.
+
+    Pass-count assertions (the plan algebra's one-pass guarantee, the
+    crypto fixed-latency contract) compare absolute counter deltas;
+    without this reset a cache warmed (or a signature recorded) by one
+    test changes what the next test observes.  Crypto fixed-latency
+    signatures are cleared through the registry, which keeps its plans —
+    only the observed signatures are per-test state.  Imports are lazy
+    and guarded so collection works even for tests that never touch the
+    engine.
+    """
+    from repro.core import telemetry
+
+    telemetry.reset()
+    crypto_registry = sys.modules.get("repro.crypto.registry")
+    if crypto_registry is not None:
+        crypto_registry.reset_observations()
+    yield

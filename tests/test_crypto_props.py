@@ -1,0 +1,101 @@
+"""Hypothesis property sweeps over the crypto static-plan registry.
+
+The plan-algebra laws the fixed-latency subsystem leans on, checked on
+the *actual registered cipher plans* (not synthetic random plans):
+``compose`` is associative and ``transpose`` is an involution for every
+plan in ``repro.crypto.REGISTRY``.  Mirrors the importorskip guard of
+test_plan_algebra_props.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro import crypto
+from repro.core import crossbar as xb
+from repro.core import plan_algebra as pa
+from repro.crypto import keccak as kk
+from repro.crypto.registry import REGISTRY
+
+
+def _register_everything():
+    kk.rho_plan(); kk.pi_plan(); kk.rho_pi_plan()
+    from repro.crypto import chacha
+    chacha.diag_plan(); chacha.undiag_plan()
+    crypto.shift_rows(jnp.zeros(16, jnp.int32))
+    crypto.inv_shift_rows(jnp.zeros(16, jnp.int32))
+    crypto.present_player()
+    crypto.bit_reversal(64)
+
+
+def _square_plan_keys():
+    """Registered keys grouped by crossbar length (square plans only)."""
+    _register_everything()
+    groups = {}
+    for key in sorted(REGISTRY.keys()):
+        p = REGISTRY[key]
+        if p.n_in == p.n_out:
+            groups.setdefault(p.n_in, []).append(key)
+    return groups
+
+
+GROUPS = _square_plan_keys()
+ALL_KEYS = sorted(k for ks in GROUPS.values() for k in ks)
+# Associativity triples draw from the small geometries (16, 64) — the
+# 1600-bit Keccak plans would make a 60-example sweep needlessly slow,
+# and one deterministic 1600-bit triple below covers them.
+SMALL_KEYS = sorted(k for n, ks in GROUPS.items() if n <= 64 for k in ks)
+
+
+def _payload(n, seed):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, 2))
+
+
+class TestRegistryAlgebraLaws:
+    @given(st.sampled_from(ALL_KEYS))
+    @settings(max_examples=30, deadline=None)
+    def test_transpose_is_involution(self, key):
+        p = REGISTRY[key]
+        pt = pa.transpose(pa.transpose(p))
+        assert pt.mode == p.mode
+        assert (pt.n_in, pt.n_out) == (p.n_in, p.n_out)
+        assert pt.idx is p.idx  # identity-sharing, cache-stable
+
+    @given(st.integers(0, 10_000), st.sampled_from(SMALL_KEYS),
+           st.sampled_from(SMALL_KEYS), st.sampled_from(SMALL_KEYS))
+    @settings(max_examples=60, deadline=None)
+    def test_compose_is_associative(self, seed, k1, k2, k3):
+        p1, p2, p3 = REGISTRY[k1], REGISTRY[k2], REGISTRY[k3]
+        if not (p1.n_in == p2.n_in == p3.n_in):
+            return  # different cipher geometries do not chain
+        x = _payload(p1.n_in, seed)
+        left = xb.apply_plan(pa.compose(pa.compose(p3, p2), p1), x)
+        right = xb.apply_plan(pa.compose(p3, pa.compose(p2, p1)), x)
+        np.testing.assert_allclose(np.asarray(left), np.asarray(right),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_keccak_compose_associative_deterministic(self):
+        """One full-size (1600-bit) associativity check: ρ, π, ρ∘π."""
+        p1, p2, p3 = kk.rho_plan(), kk.pi_plan(), kk.rho_pi_plan()
+        x = _payload(1600, 0)
+        left = xb.apply_plan(pa.compose(pa.compose(p3, p2), p1), x)
+        right = xb.apply_plan(pa.compose(p3, pa.compose(p2, p1)), x)
+        np.testing.assert_allclose(np.asarray(left), np.asarray(right),
+                                   rtol=1e-5, atol=1e-6)
+
+    @given(st.sampled_from([k for k in ALL_KEYS
+                            if REGISTRY[k].mode == xb.GATHER]))
+    @settings(max_examples=20, deadline=None)
+    def test_inverse_composes_to_identity_for_bijections(self, key):
+        """For bijective gather plans (every cipher layer here), the
+        transpose is the two-sided inverse under compose."""
+        p = REGISTRY[key]
+        idx = np.asarray(p.idx[:, 0])
+        if sorted(idx.tolist()) != list(range(p.n_in)):
+            return  # not a bijection (e.g. nothing here, but stay safe)
+        both = pa.compose(pa.to_gather(pa.transpose(p)), p)
+        assert pa.is_identity(both)

@@ -141,6 +141,42 @@ class TestCompose:
         assert pa.compose(p, pa.identity_plan(n)) is p
         assert pa.compose(pa.identity_plan(n), p) is p
 
+    def test_compose_all_empty_returns_identity_with_n(self):
+        """Regression: the empty pipeline is the unit of composition —
+        well-defined only when the crossbar length is declared."""
+        p = pa.compose_all([], n=6)
+        assert pa.is_identity(p)
+        assert (p.n_in, p.n_out) == (6, 6)
+        x = jax.random.normal(jax.random.PRNGKey(30), (6, 2))
+        np.testing.assert_allclose(np.asarray(xb.apply_plan(p, x)),
+                                   np.asarray(x), rtol=1e-6)
+
+    def test_compose_all_empty_without_n_raises(self):
+        with pytest.raises(ValueError, match="empty pipeline"):
+            pa.compose_all([])
+
+    def test_compose_all_validates_declared_n(self):
+        p = _rand_plan(jax.random.PRNGKey(31), 8, "gather")
+        with pytest.raises(ValueError, match="n=16"):
+            pa.compose_all([p], n=16)
+        assert pa.compose_all([p], n=8) is p
+
+    def test_block_diag_empty_raises_clearly(self):
+        """Regression: the 0-plan direct sum must be an explicit error,
+        not an undefined empty reduction."""
+        with pytest.raises(ValueError, match="empty plan list"):
+            pa.block_diag([])
+
+    def test_compose_all_accepts_generators(self):
+        n = 8
+        plans = [_rand_plan(jax.random.PRNGKey(s), n, "compress")
+                 for s in (0, 1)]
+        x = jax.random.normal(jax.random.PRNGKey(32), (n, 2))
+        fused = pa.compose_all(p for p in plans)
+        seq = xb.apply_plan(plans[1], xb.apply_plan(plans[0], x))
+        np.testing.assert_allclose(np.asarray(xb.apply_plan(fused, x)),
+                                   np.asarray(seq), rtol=1e-5, atol=1e-6)
+
     def test_all_backends_agree_on_composed_plan(self):
         n = 16
         p1 = _rand_plan(jax.random.PRNGKey(4), n, "compress")
