@@ -1,0 +1,172 @@
+"""AES-128 benchmarks: fused-round vs chained-layer crossbar passes.
+
+Two sweeps over ``repro.crypto.aes``:
+
+* **aes_fuse**: full AES-128 encryption of B blocks carried as payload
+  width, with the per-round linear layer either fused
+  (ShiftRows∘MixColumns composed into ONE GF(2^8) plan -> 20 passes
+  per call) or chained (separate ShiftRows and MixColumns passes ->
+  29).  The crypto analogue of bench_plan_fusion on the first workload
+  whose weights live in a finite field.
+
+* **aes_plan**: schedule geometry of the cipher's static plans — the
+  fused GF(2^8) round plan and its GF(2) bit lift (the form the matmul
+  backends execute), plus the one-hot-domain S-box plan — densities and
+  select counts, the numbers the sparse backend's tile skipping reads.
+
+A FIPS-197 Appendix C.1 check runs first: a benchmark of a wrong
+cipher is worthless.
+
+Results land in BENCH_aes.json (quick mode: BENCH_aes_quick.json so CI
+smoke never clobbers the recorded sweep).
+
+Usage: PYTHONPATH=src python -m benchmarks.bench_aes [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import crossbar as xb
+from repro.crypto import aes
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_JSON = os.path.join(REPO, "BENCH_aes.json")
+OUT_JSON_QUICK = os.path.join(REPO, "BENCH_aes_quick.json")
+
+_KEY = bytes.fromhex("000102030405060708090a0b0c0d0e0f")
+_PT = bytes.fromhex("00112233445566778899aabbccddeeff")
+_CT = "69c4e0d86a7b0430d8cdb78070b4c55a"
+
+
+def _check_vector():
+    got = aes.aes128_encrypt(_KEY, _PT).hex()
+    assert got == _CT, f"FIPS-197 C.1 mismatch: {got}"
+
+
+def bench_aes_fuse(b, *, iters, warmup):
+    """Encrypt B blocks (payload width b), fused vs chained rounds.
+
+    ``time_fn`` jits the state function; the host-side byte packing and
+    key schedule stay outside the timed region, like a real serving
+    path would keep them.
+    """
+    rng = np.random.default_rng(0)
+    data = bytes(rng.integers(0, 256, 16 * b).astype(np.uint8))
+    rks = aes.key_expansion(_KEY)
+    import jax.numpy as jnp
+    st = aes._blocks_to_state(data)
+    rks_dev = jnp.asarray(rks)
+    aes._ensure_plans(False, True)
+    aes._ensure_plans(False, False)
+
+    def fused(s):
+        return aes._cipher_state(s, rks_dev, inverse=False,
+                                 fuse_layers=True, backend="einsum",
+                                 interpret=None)
+
+    def chained(s):
+        return aes._cipher_state(s, rks_dev, inverse=False,
+                                 fuse_layers=False, backend="einsum",
+                                 interpret=None)
+
+    us = {
+        "fused_rounds": time_fn(fused, st, iters=iters, warmup=warmup),
+        "chained_layers": time_fn(chained, st, iters=iters, warmup=warmup),
+    }
+    rec = {
+        "sweep": "aes_fuse", "blocks": b,
+        "passes": {"fused": aes._passes(True), "chained": aes._passes(False)},
+        "us": {k: round(v, 1) for k, v in us.items()},
+        "speedup_fused_vs_chained": round(
+            us["chained_layers"] / us["fused_rounds"], 2),
+    }
+    row(f"aes/fuse_B{b}", **rec["us"],
+        speedup=rec["speedup_fused_vs_chained"])
+    return rec
+
+
+def bench_aes_plans():
+    """Static-plan geometry: the schedules the backends actually run."""
+    aes._ensure_plans(False, True)
+    fused = aes.round_linear_plan()
+    lifted = xb.lift_gf2_8(fused)
+    sbox = aes.sbox_plan()
+    recs = []
+    for name, plan in (("round_linear_gf2_8", fused),
+                       ("round_linear_bit_lift", lifted),
+                       ("sbox_onehot", sbox)):
+        compiled = xb.compile_plan(plan)
+        rec = {
+            "sweep": "aes_plan", "plan": name,
+            "semiring": plan.semiring.name,
+            "n_in": plan.n_in, "n_out": plan.n_out, "k": plan.k,
+            "density": round(float(compiled.density), 4),
+            "active_tiles": int(compiled.num_active),
+            "total_tiles": compiled.n_pairs,
+        }
+        row(f"aes/plan_{name}", semiring=rec["semiring"], k=rec["k"],
+            density=rec["density"])
+        recs.append(rec)
+    return recs
+
+
+def run(quick: bool = False) -> dict:
+    _check_vector()
+    records = []
+    if quick:
+        records.append(bench_aes_fuse(4, iters=2, warmup=1))
+        records.extend(bench_aes_plans())
+        acceptance = None
+    else:
+        accept_rec = None
+        for b in (1, 8, 32):
+            rec = bench_aes_fuse(b, iters=5, warmup=2)
+            records.append(rec)
+            if b == 8:
+                accept_rec = rec
+        records.extend(bench_aes_plans())
+        acceptance = {
+            "criterion": "FIPS-197 C.1 exact; fused rounds (20 passes) "
+                         "beat chained layers (29 passes) at 8 blocks",
+            "speedup_fused_vs_chained":
+                accept_rec["speedup_fused_vs_chained"],
+            "pass": bool(accept_rec["speedup_fused_vs_chained"] >= 1.1),
+        }
+
+    report = {
+        "benchmark": "aes",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "jax_backend": jax.default_backend(),
+        "quick": quick,
+        "rows": records,
+    }
+    if acceptance is not None:
+        report["acceptance"] = acceptance
+    out_path = OUT_JSON_QUICK if quick else OUT_JSON
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {out_path}")
+    if acceptance is not None:
+        print(f"# acceptance: {acceptance}")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes only (CI smoke)")
+    args = ap.parse_args()
+    run(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

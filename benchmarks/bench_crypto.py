@@ -58,24 +58,37 @@ def bench_keccak_fuse(d, *, iters, warmup):
     """Full Keccak-f[1600], fused (24 passes) vs chained (48), with the
     state batch carried as payload width ``d`` (d=1 is a lone sponge).
 
-    On CPU hosts the d=1 point is dominated by an XLA fusion artifact
-    around rank-1 integer contractions (both variants pay it equally);
-    the d>1 rows expose the real pass-count scaling.
+    This sweep pins the **one-hot matmul lowering** (the take fast path
+    is disabled for its duration): it measures what plan *fusion* buys
+    when each pass is a crossbar contraction — the paper-motivated
+    comparison, and the regime every weighted/multi-select plan is
+    always in.  Unweighted k=1 plans like ρ∘π default to the ``jnp.take``
+    lowering instead, where chained and fused passes XLA-fuse to nearly
+    the same gather cost; that lowering (and its ~300x win over the
+    matmul at d=1, the old XLA-CPU rank-1 artifact) is recorded by the
+    ``rank1_fastpath`` sweep.
     """
     states = _rand_bits(0, 1600) if d == 1 else _rand_bits(0, (d, 1600))
     mode = "payload"
-    us = {
-        "fused_rho_pi": time_fn(
-            lambda s: kk.keccak_f1600(s, batch_mode=mode), states,
-            iters=iters, warmup=warmup),
-        "chained_rho_pi": time_fn(
-            lambda s: kk.keccak_f1600(s, batch_mode=mode,
-                                      fuse_rho_pi=False), states,
-            iters=iters, warmup=warmup),
-    }
+    was = xb.EINSUM_TAKE_FASTPATH
+    xb.EINSUM_TAKE_FASTPATH = False
+    try:
+        us = {
+            "fused_rho_pi": time_fn(
+                lambda s: kk.keccak_f1600(s, batch_mode=mode), states,
+                iters=iters, warmup=warmup),
+            "chained_rho_pi": time_fn(
+                lambda s: kk.keccak_f1600(s, batch_mode=mode,
+                                          fuse_rho_pi=False), states,
+                iters=iters, warmup=warmup),
+        }
+    finally:
+        xb.EINSUM_TAKE_FASTPATH = was
     rec = {
         "sweep": "keccak_fuse", "payload_lanes": d,
         "rounds": kk.KECCAK_ROUNDS,
+        "lowering": "onehot_matmul (take fast path disabled; see "
+                    "rank1_fastpath for the default k=1 lowering)",
         "passes": {"fused": 24, "chained": 48},
         "us": {k: round(v, 1) for k, v in us.items()},
         "speedup_fused_vs_chained": round(
@@ -125,6 +138,40 @@ def bench_keccak_batch(b, *, iters, warmup, dense_blockdiag_max=4):
     return rec
 
 
+def bench_rank1_fastpath(*, iters, warmup):
+    """Regression entry for the take-based einsum fast path.
+
+    The D=1 Keccak permutation is the pathological case recorded in
+    earlier BENCH_crypto.json sweeps: XLA CPU compiled the rank-1
+    integer one-hot contraction fed by the elementwise θ/χ producers so
+    badly that the fused (24-pass) pipeline lost to the chained
+    (48-pass) one.  Concrete unweighted k=1 plans now lower through
+    ``jnp.take`` (crossbar.EINSUM_TAKE_FASTPATH); this sweep times the
+    same workload with the fast path on and off so the artifact — and
+    its fix — stay measured.
+    """
+    states = _rand_bits(3, 1600)
+    was = xb.EINSUM_TAKE_FASTPATH
+    try:
+        xb.EINSUM_TAKE_FASTPATH = True
+        t_take = time_fn(lambda s: kk.keccak_f1600(s), states,
+                         iters=iters, warmup=warmup)
+        xb.EINSUM_TAKE_FASTPATH = False
+        t_matmul = time_fn(lambda s: kk.keccak_f1600(s), states,
+                           iters=iters, warmup=warmup)
+    finally:
+        xb.EINSUM_TAKE_FASTPATH = was
+    rec = {
+        "sweep": "rank1_fastpath", "payload_lanes": 1,
+        "us": {"take_fastpath": round(t_take, 1),
+               "onehot_matmul": round(t_matmul, 1)},
+        "speedup_take_vs_matmul": round(t_matmul / t_take, 2),
+    }
+    row("crypto/rank1_fastpath_D1", **rec["us"],
+        speedup=rec["speedup_take_vs_matmul"])
+    return rec
+
+
 def bench_bitperm_width(width, t, *, iters, warmup):
     p = present_player()
     bits = _rand_bits(2, (64, t))
@@ -151,6 +198,7 @@ def run(quick: bool = False) -> dict:
         records.append(bench_keccak_fuse(8, iters=2, warmup=1))
         records.append(bench_keccak_batch(4, iters=2, warmup=1))
         records.append(bench_bitperm_width(4, 64, iters=3, warmup=1))
+        records.append(bench_rank1_fastpath(iters=2, warmup=1))
         acceptance = None
     else:
         fuse_accept = None
@@ -159,6 +207,8 @@ def run(quick: bool = False) -> dict:
             records.append(rec)
             if d == 8:
                 fuse_accept = rec
+        rank1 = bench_rank1_fastpath(iters=5, warmup=2)
+        records.append(rank1)
         batch_last = None
         for b in (1, 4, 8, 16):
             rec = bench_keccak_batch(b, iters=3, warmup=1)
@@ -169,14 +219,22 @@ def run(quick: bool = False) -> dict:
                                                warmup=2))
         acceptance = {
             "criterion": "fused rho-pi (24 passes) beats chained (48) on "
-                         "full Keccak-f[1600] at payload width 8; block-"
-                         "diagonal batched lanes compile to ~1/B tile "
-                         "occupancy (the sparse backend's regime)",
+                         "full Keccak-f[1600] at payload width 8 under "
+                         "the one-hot matmul lowering (what fusion buys "
+                         "per contraction pass); the rank-1 take fast "
+                         "path beats that matmul >=5x at D=1 (the old "
+                         "XLA-CPU artifact, now the default k=1 "
+                         "lowering); block-diagonal batched lanes "
+                         "compile to ~1/B tile occupancy (the sparse "
+                         "backend's regime)",
             "speedup_fused_vs_chained":
                 fuse_accept["speedup_fused_vs_chained"],
+            "speedup_take_vs_matmul_D1":
+                rank1["speedup_take_vs_matmul"],
             "blockdiag_density_at_B16": batch_last["blockdiag_density"],
             "pass": bool(
                 fuse_accept["speedup_fused_vs_chained"] >= 1.2
+                and rank1["speedup_take_vs_matmul"] >= 5.0
                 and batch_last["blockdiag_density"] <= 1.5 / 16),
         }
 

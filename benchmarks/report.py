@@ -23,7 +23,9 @@ BENCH_FILES = [
     ("BENCH_plan_fusion.json", ("speedup_fused_vs_chained",
                                 "speedup_sparse_vs_dense_kernel")),
     ("BENCH_crypto.json", ("speedup_fused_vs_chained",
+                           "speedup_take_vs_matmul_D1",
                            "blockdiag_density_at_B16")),
+    ("BENCH_aes.json", ("speedup_fused_vs_chained",)),
 ]
 
 

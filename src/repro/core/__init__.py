@@ -50,8 +50,10 @@ from repro.core.plan_algebra import (
     identity_plan,
     to_gather,
     transpose,
+    with_semiring,
     with_weights,
 )
+from repro.core.semiring import GF2, GF2_8, REAL, Semiring
 from repro.core.static_registry import (
     FixedLatencyError,
     StaticPlanRegistry,
@@ -72,7 +74,8 @@ __all__ = [
     "vrgather", "vslide1down", "vslide1up", "vslidedown", "vslideup",
     "PlanExpr", "batch", "batched_gather_plan", "batched_scatter_plan",
     "block_diag", "compose", "compose_all", "identity_plan", "to_gather",
-    "transpose", "with_weights",
+    "transpose", "with_semiring", "with_weights",
+    "GF2", "GF2_8", "REAL", "Semiring",
     "FixedLatencyError", "StaticPlanRegistry", "schedule_fingerprint",
     "bit_permute", "from_bit_rows", "to_bit_rows",
     "baselines", "moe_dispatch", "sequence", "telemetry",

@@ -11,7 +11,11 @@ operator matrix, executed on the MXU.  This module provides:
   input-driven instructions after core/transform.py pre-processing).
   Plans support multi-index selections with optional per-select weights,
   which is what lets the same crossbar implement weighted MoE combine
-  (a crossbar whose AND-OR selects carry gate scalars).
+  (a crossbar whose AND-OR selects carry gate scalars).  The algebra
+  weights accumulate in is pluggable per plan (``core.semiring``):
+  REAL multiply-add, GF(2) XOR/AND (parity-folded integer contraction),
+  or GF(2^8) field arithmetic (executed as a cached GF(2) bit lift —
+  AES MixColumns is a crossbar whose weights are field coefficients).
 
 * ``build_onehot``  — materialise the (n_out, n_in) operator (reference /
   small sizes / tests).
@@ -58,7 +62,9 @@ from typing import Optional, Union
 import jax
 import jax.numpy as jnp
 
+from repro.core import semiring as sr_mod
 from repro.core import transform as _t
+from repro.core.semiring import GF2, GF2_8, REAL, Semiring
 
 Array = jax.Array
 
@@ -76,9 +82,14 @@ class PermutePlan:
       idx:  int32 (n_ctrl, k) — multi-index selects.  In gather mode
             n_ctrl == n_out; in scatter mode n_ctrl == n_in.  Entries
             outside the valid range are dropped (match nothing).
-      weights: optional (n_ctrl, k) — per-select scaling (MoE gates).
-            None means 1.0 everywhere.
+      weights: optional (n_ctrl, k) — per-select scaling (MoE gates,
+            GF(2^8) MixColumns coefficients).  None means the semiring's
+            multiplicative identity everywhere.
       n_in / n_out: crossbar geometry.
+      semiring: the (add, mul, zero, one) the pass accumulates in
+            (``core.semiring``).  REAL is the classic multiply-add;
+            GF2/GF2_8 make the same crossbar a finite-field linear
+            layer.  Interned singleton — part of every cache key.
     """
 
     mode: str
@@ -86,45 +97,64 @@ class PermutePlan:
     n_in: int
     n_out: int
     weights: Optional[Array] = None
+    semiring: Semiring = REAL
 
     def __post_init__(self):
         if self.mode not in (GATHER, SCATTER):
             raise ValueError(f"bad mode {self.mode!r}")
+        if not isinstance(self.semiring, Semiring):
+            raise ValueError(f"bad semiring {self.semiring!r}; use the "
+                             "core.semiring singletons")
         if self.idx.ndim == 1:
             self.idx = self.idx[:, None]
         if self.weights is not None and self.weights.ndim == 1:
             self.weights = self.weights[:, None]
 
     # -- pytree plumbing so plans can cross jit boundaries ----------------
+    # The semiring is aux data (static): an interned singleton, never a
+    # tracer, and part of the trace-level identity of the plan.
     def tree_flatten(self):
         children = (self.idx, self.weights)
-        aux = (self.mode, self.n_in, self.n_out)
+        aux = (self.mode, self.n_in, self.n_out, self.semiring)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         idx, weights = children
-        mode, n_in, n_out = aux
+        mode, n_in, n_out, semiring = aux
         obj = object.__new__(cls)
         obj.mode, obj.idx, obj.n_in, obj.n_out, obj.weights = (
             mode, idx, n_in, n_out, weights)
+        obj.semiring = semiring
         return obj
 
     @property
     def k(self) -> int:
         return self.idx.shape[-1]
 
+    @property
+    def neutral_semiring(self) -> bool:
+        """True when the plan is pure routing: unweighted REAL-default.
 
-def gather_plan(src_idx: Array, n_in: int, *, weights: Array | None = None) -> PermutePlan:
+        Such a plan means the same thing in every semiring (selects
+        carry the multiplicative identity), so combining it with a
+        finite-field plan adopts the other operand's algebra.
+        """
+        return self.weights is None and self.semiring is REAL
+
+
+def gather_plan(src_idx: Array, n_in: int, *, weights: Array | None = None,
+                semiring: Semiring = REAL) -> PermutePlan:
     """Output-driven plan: ``out[o] = sum_k w[o,k] * x[src_idx[o,k]]``."""
     return PermutePlan(GATHER, src_idx.astype(jnp.int32), n_in,
-                       src_idx.shape[0], weights)
+                       src_idx.shape[0], weights, semiring)
 
 
-def scatter_plan(dest_idx: Array, n_out: int, *, weights: Array | None = None) -> PermutePlan:
+def scatter_plan(dest_idx: Array, n_out: int, *, weights: Array | None = None,
+                 semiring: Semiring = REAL) -> PermutePlan:
     """Input-driven plan: input i lands at ``dest_idx[i,k]`` (OOB drops)."""
     return PermutePlan(SCATTER, dest_idx.astype(jnp.int32), dest_idx.shape[0],
-                       n_out, weights)
+                       n_out, weights, semiring)
 
 
 def transpose_plan(plan: PermutePlan) -> PermutePlan:
@@ -135,30 +165,45 @@ def transpose_plan(plan: PermutePlan) -> PermutePlan:
     with gate weights) and for gradients.
     """
     mode = SCATTER if plan.mode == GATHER else GATHER
-    return PermutePlan(mode, plan.idx, plan.n_out, plan.n_in, plan.weights)
+    return PermutePlan(mode, plan.idx, plan.n_out, plan.n_in, plan.weights,
+                       plan.semiring)
 
 
-def build_onehot(plan: PermutePlan, dtype=jnp.float32) -> Array:
+def build_onehot(plan: PermutePlan, dtype=None) -> Array:
     """Materialise the (n_out, n_in) crossbar operator.
 
-    ``P[o, i] = sum_k w[., k] * [idx[., k] selects (o, i)]``.
+    ``P[o, i] = SUM_k w[., k] * [idx[., k] selects (o, i)]`` where SUM and
+    * are the plan's semiring (REAL sums; GF2/GF2_8 XOR-fold, so two
+    selects landing on the same cell cancel instead of doubling).
+
+    ``dtype`` defaults to f32 for REAL plans and the semiring's weight
+    dtype (int32) for finite-field plans.
 
     Reference path — the Pallas kernel never materialises this matrix.
     """
+    sr = plan.semiring
+    if dtype is None:
+        dtype = jnp.float32 if sr is REAL else sr.weight_dtype
     if plan.mode == GATHER:
-        # idx: (n_out, k); P[o, i] = sum_k w[o,k] * (idx[o,k] == i)
+        # idx: (n_out, k); P[o, i] = SUM_k w[o,k] * (idx[o,k] == i)
         iota = jnp.arange(plan.n_in, dtype=jnp.int32)
         sel = (plan.idx[:, :, None] == iota[None, None, :])  # (n_out, k, n_in)
         w = (jnp.ones_like(plan.idx, dtype=dtype) if plan.weights is None
              else plan.weights.astype(dtype))
-        return jnp.sum(sel.astype(dtype) * w[:, :, None], axis=1)
+        if sr is REAL:
+            return jnp.sum(sel.astype(dtype) * w[:, :, None], axis=1)
+        terms = sr.mul(w[:, :, None], sel.astype(dtype))
+        return sr.reduce(terms, axis=1)
     else:
-        # idx: (n_in, k); P[o, i] = sum_k w[i,k] * (idx[i,k] == o)
+        # idx: (n_in, k); P[o, i] = SUM_k w[i,k] * (idx[i,k] == o)
         iota = jnp.arange(plan.n_out, dtype=jnp.int32)
         sel = (plan.idx[:, :, None] == iota[None, None, :])  # (n_in, k, n_out)
         w = (jnp.ones_like(plan.idx, dtype=dtype) if plan.weights is None
              else plan.weights.astype(dtype))
-        return jnp.sum(sel.astype(dtype) * w[:, :, None], axis=1).T
+        if sr is REAL:
+            return jnp.sum(sel.astype(dtype) * w[:, :, None], axis=1).T
+        terms = sr.mul(w[:, :, None], sel.astype(dtype))
+        return sr.reduce(terms, axis=1).T
 
 
 def coverage(plan: PermutePlan) -> Array:
@@ -385,8 +430,12 @@ def compile_plan(plan: PermutePlan, *, block_o: int = 128,
         plan.weights is None or _is_concrete_array(plan.weights))
     key = None
     if keyable:
-        key = (plan.mode, plan.n_in, plan.n_out, block_o, block_n,
-               id(plan.idx),
+        # The semiring is part of the key: identical idx/weight arrays
+        # under different semirings are different plans (the cached
+        # CompiledPlan embeds its PermutePlan, semiring included), and
+        # must never alias — in the LRU or the pinned static cache.
+        key = (plan.mode, plan.n_in, plan.n_out, plan.semiring.name,
+               block_o, block_n, id(plan.idx),
                id(plan.weights) if plan.weights is not None else None)
         hit = _PINNED_COMPILE.get(key)
         in_lru = False
@@ -394,7 +443,8 @@ def compile_plan(plan: PermutePlan, *, block_o: int = 128,
             hit = _COMPILE_CACHE.get(key)
             in_lru = hit is not None
         if (hit is not None and hit.plan.idx is plan.idx
-                and hit.plan.weights is plan.weights):
+                and hit.plan.weights is plan.weights
+                and hit.plan.semiring is plan.semiring):
             _COMPILE_CACHE_STATS["hits"] += 1
             if in_lru:
                 if pin:  # promote: from now on immune to LRU churn
@@ -530,16 +580,32 @@ def apply_plan(
     if backend == "auto":
         backend = _choose_backend(plan)
 
+    sr = plan.semiring
+    if sr.integer_carrier and not (jnp.issubdtype(x2.dtype, jnp.integer)
+                                   or x2.dtype == jnp.bool_):
+        raise ValueError(
+            f"semiring {sr.name!r} carries small integers; got payload "
+            f"dtype {x2.dtype} — cast to an integer type first")
+
     # One coverage computation serves both the sparse backend's zero
     # pinning and the merge/mask logic (for scatter plans it materialises
     # an (n_in, k, n_out) hit tensor — not something to do twice, and
-    # skipped entirely when nothing needs it).
-    need_cov = (backend == "sparse" or merge2 is not None
-                or out_mask is not None)
+    # skipped entirely when nothing needs it).  The GF2_8 matmul paths
+    # pin zeros from the *lifted* plan's coverage inside _apply_gf2_8.
+    need_cov = ((backend == "sparse" and sr is not GF2_8)
+                or merge2 is not None or out_mask is not None)
     cov = coverage(plan) if need_cov else None
 
     if backend == "reference":
         out2 = _apply_reference(plan, x2)
+    elif sr is GF2_8 and backend in ("einsum", "kernel", "sparse"):
+        # GF(2^8)-weighted plans execute as their GF(2) bit lift on the
+        # chosen backend: one crossbar evaluation over 8x the rows.
+        # The take lowering only substitutes for the einsum backend —
+        # an explicitly requested Pallas backend runs its kernel.
+        fast = _take_fastpath(plan, x2) if backend == "einsum" else None
+        out2 = fast if fast is not None else _apply_gf2_8(
+            plan, x2, backend, interpret)
     elif backend == "kernel":
         from repro.kernels import ops as _kops  # local import: kernels optional
         out2 = _kops.crossbar_permute(plan, x2, interpret=interpret)
@@ -569,46 +635,242 @@ def apply_plan(
     return out.astype(x.dtype)
 
 
-def _apply_einsum(plan: PermutePlan, x2: Array) -> Array:
-    """Dense XLA path: one-hot build + MXU contraction, f32 accumulation.
+# Take-based einsum fast path: a concrete, unweighted, single-select
+# gather plan is a pure row routing — ``jnp.take`` with DROP masking is
+# semantically identical to the one-hot contraction (exact in every
+# semiring, since each output receives at most one unscaled pick) and
+# sidesteps the pathological XLA-CPU lowering of rank-1 integer
+# contractions fed by elementwise producers (BENCH_crypto.json
+# keccak_fuse D=1 vs D=8).  Module-level switch so the regression
+# benchmark can measure both lowerings.
+EINSUM_TAKE_FASTPATH = True
 
-    Selection matmuls are numerically *exact* for unweighted plans (each
-    output row sums at most k one-hot picks); weighted plans accumulate in
-    f32 via preferred_element_type.
+
+def _take_fastpath(plan: PermutePlan, x2: Array) -> Optional[Array]:
+    """The take lowering, or None when the plan is not eligible."""
+    if not (EINSUM_TAKE_FASTPATH and plan.mode == GATHER and plan.k == 1
+            and plan.weights is None and _is_concrete_array(plan.idx)):
+        return None
+    src = plan.idx[:, 0]
+    valid = (src >= 0) & (src < plan.n_in)
+    picked = jnp.take(x2, jnp.clip(src, 0, plan.n_in - 1), axis=0)
+    if plan.semiring.carrier_mask is not None:
+        # Keep the lowerings value-identical even for payloads outside
+        # the carrier range: the matmul/lift paths fold their single
+        # pick into the field's carrier set, so the take path must too.
+        picked = picked.astype(jnp.int32) & plan.semiring.carrier_mask
+    return jnp.where(valid[:, None], picked, 0).astype(x2.dtype)
+
+
+def _apply_einsum(plan: PermutePlan, x2: Array) -> Array:
+    """Dense XLA path: one-hot build + MXU contraction.
+
+    REAL: f32 (or int32) accumulation — numerically *exact* for
+    unweighted plans (each output row sums at most k one-hot picks).
+    GF2: the same integer contraction with a parity fold — a sum of
+    0/1 AND-products reduced mod 2 IS the XOR accumulation.
+    GF2_8 never reaches here; apply_plan routes it through the bit lift.
     """
+    fast = _take_fastpath(plan, x2)
+    if fast is not None:
+        return fast
+    sr = plan.semiring
     if jnp.issubdtype(x2.dtype, jnp.integer) or x2.dtype == jnp.bool_:
         p = build_onehot(plan, dtype=jnp.int32)
-        return jax.lax.dot(p, x2.astype(jnp.int32),
-                           preferred_element_type=jnp.int32).astype(x2.dtype)
+        out = jax.lax.dot(p, x2.astype(jnp.int32),
+                          preferred_element_type=jnp.int32)
+        if sr.mod2_fold:
+            out = out & 1
+        return out.astype(x2.dtype)
+    # Float payloads only reach here for REAL plans: apply_plan rejects
+    # them for every integer-carrier semiring up front.
     p = build_onehot(plan, dtype=x2.dtype)
     out = jax.lax.dot(p, x2, preferred_element_type=jnp.float32)
     return out.astype(x2.dtype)
 
 
+# ---------------------------------------------------------------------------
+# GF(2^8) execution: the GF(2) bit lift
+# ---------------------------------------------------------------------------
+#
+# Multiplication by a constant is GF(2)-linear, so a GF2_8-weighted plan
+# over n byte rows is *exactly* an unweighted GF2 plan over 8n bit rows:
+# each select (o <- i, weight w) becomes, for output bit b, the selects
+# {8i + j : bit b of w·2^j == 1} — up to 8 bit selects per byte select,
+# DROP elsewhere.  The lifted plan runs on the ordinary 0/1-exact
+# crossbar (any matmul backend, parity fold at emission); payloads are
+# unpacked to LSB-first bit rows around the pass.  Lifts are memoised on
+# the source plan's array identities so the lifted plan — and therefore
+# its CompiledPlan schedule — stays cache-stable across calls.
+
+_LIFT_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
+_LIFT_CACHE_CAPACITY = 32
+_LIFT_STATS = {"hits": 0, "misses": 0}
+
+
+def lift_cache_info() -> dict:
+    return dict(_LIFT_STATS, size=len(_LIFT_CACHE),
+                capacity=_LIFT_CACHE_CAPACITY)
+
+
+def clear_lift_cache() -> None:
+    _LIFT_CACHE.clear()
+    _LIFT_STATS.update(hits=0, misses=0)
+
+
+def lift_gf2_8(plan: PermutePlan) -> PermutePlan:
+    """The GF(2) bit-level plan equivalent to a GF(2^8) byte-level plan.
+
+    The lift preserves the plan's mode: a scatter plan lifts to a
+    scatter plan (input bit row ``8i+j`` lands on the output bits
+    ``{8o+b : M_w[b,j]=1}``), NOT to its gather normal form — gather
+    normalisation is only exact for output-injective scatters, while
+    the lifted scatter accumulates colliding destinations exactly on
+    every backend (XOR is per-bit parity).
+    """
+    if plan.semiring is not GF2_8:
+        raise ValueError(f"lift_gf2_8 needs a GF2_8 plan, got "
+                         f"{plan.semiring.name!r}")
+
+    keyable = _is_concrete_array(plan.idx) and (
+        plan.weights is None or _is_concrete_array(plan.weights))
+    key = None
+    if keyable:
+        key = (plan.mode, plan.n_in, plan.n_out, id(plan.idx),
+               id(plan.weights) if plan.weights is not None else None)
+        hit = _LIFT_CACHE.get(key)
+        if (hit is not None and hit[1] is plan.idx
+                and hit[2] is plan.weights):
+            _LIFT_CACHE.move_to_end(key)
+            _LIFT_STATS["hits"] += 1
+            return hit[0]
+    _LIFT_STATS["misses"] += 1
+
+    idx = plan.idx                                      # (n_ctrl, k)
+    bound = plan.n_in if plan.mode == GATHER else plan.n_out
+    valid = (idx >= 0) & (idx < bound)
+    w = (jnp.full(idx.shape, 1, jnp.int32) if plan.weights is None
+         else plan.weights.astype(jnp.int32) & 0xFF)
+    table = jnp.asarray(sr_mod.gf2_8_bit_matrix_table(), jnp.int32)
+    m = jnp.take(table, w, axis=0)                      # (n_ctrl, k, 8b, 8j)
+    keep = valid[:, :, None, None] & (m != 0)
+    safe = jnp.clip(idx, 0, bound - 1)
+    if plan.mode == GATHER:
+        # out bit 8o+b selects in bits {8i+j : M[b,j]=1}.
+        src = (8 * safe)[:, :, None, None] \
+            + jnp.arange(8, dtype=jnp.int32)[None, None, None, :]
+        bit_idx = jnp.where(keep, src, _t.DROP)         # (n_out, k, b, j)
+        bit_idx = jnp.transpose(bit_idx, (0, 2, 1, 3)).reshape(
+            8 * plan.n_out, 8 * plan.k)
+        lifted = gather_plan(bit_idx, 8 * plan.n_in, semiring=GF2)
+    else:
+        # in bit 8i+j lands on out bits {8o+b : M[b,j]=1}.
+        dst = (8 * safe)[:, :, None, None] \
+            + jnp.arange(8, dtype=jnp.int32)[None, None, :, None]
+        bit_idx = jnp.where(keep, dst, _t.DROP)         # (n_in, k, b, j)
+        bit_idx = jnp.transpose(bit_idx, (0, 3, 1, 2)).reshape(
+            8 * plan.n_in, 8 * plan.k)
+        lifted = scatter_plan(bit_idx, 8 * plan.n_out, semiring=GF2)
+
+    if keyable and jax.core.trace_state_clean():
+        _LIFT_CACHE[key] = (lifted, plan.idx, plan.weights)
+        while len(_LIFT_CACHE) > _LIFT_CACHE_CAPACITY:
+            _LIFT_CACHE.popitem(last=False)
+    return lifted
+
+
+def _apply_gf2_8(plan: PermutePlan, x2: Array, backend: str,
+                 interpret) -> Array:
+    """Unpack bytes -> run the lifted GF2 plan -> pack bytes."""
+    lifted = lift_gf2_8(plan)
+    shifts = jnp.arange(8, dtype=jnp.int32)
+    bits = ((x2.astype(jnp.int32)[:, None, :] >> shifts[None, :, None]) & 1)
+    bits = bits.reshape(8 * plan.n_in, x2.shape[1])
+    if backend == "einsum":
+        out_bits = _apply_einsum(lifted, bits)
+    elif backend == "kernel":
+        from repro.kernels import ops as _kops
+        out_bits = _kops.crossbar_permute(lifted, bits, interpret=interpret)
+    elif backend == "sparse":
+        from repro.kernels import ops as _kops
+        out_bits = _kops.crossbar_permute_sparse(lifted, bits,
+                                                 interpret=interpret)
+        out_bits = jnp.where(coverage(lifted)[:, None], out_bits, 0)
+    else:
+        raise ValueError(f"no GF2_8 path for backend {backend!r}")
+    out_bits = out_bits.astype(jnp.int32).reshape(plan.n_out, 8, -1)
+    out = jnp.sum(out_bits << shifts[None, :, None], axis=1)
+    return out.astype(x2.dtype)
+
+
 def _apply_reference(plan: PermutePlan, x2: Array) -> Array:
-    """jnp.take oracle — the 'separate datapath' semantics, for testing."""
+    """jnp.take oracle — the 'separate datapath' semantics, for testing.
+
+    Independent of the matmul/lift machinery on purpose: the finite-field
+    paths here accumulate with direct semiring arithmetic (gather) or
+    per-bit parity scatter-adds (scatter), so they differentially check
+    the mod-2 folds and the GF2_8 bit lift used by the other backends.
+    """
     k = plan.k
     w = plan.weights
-    if plan.mode == GATHER:
+    sr = plan.semiring
+    if sr is REAL:
+        if plan.mode == GATHER:
+            acc = jnp.zeros((plan.n_out, x2.shape[1]), dtype=jnp.float32)
+            for j in range(k):
+                src = plan.idx[:, j]
+                valid = (src >= 0) & (src < plan.n_in)
+                vals = jnp.take(x2, jnp.clip(src, 0, plan.n_in - 1), axis=0)
+                wj = 1.0 if w is None else w[:, j].astype(jnp.float32)[:, None]
+                acc = acc + jnp.where(valid[:, None],
+                                      vals.astype(jnp.float32) * wj, 0.0)
+            return acc.astype(x2.dtype)
         acc = jnp.zeros((plan.n_out, x2.shape[1]), dtype=jnp.float32)
+        for j in range(k):
+            dest = plan.idx[:, j]
+            valid = (dest >= 0) & (dest < plan.n_out)
+            wj = 1.0 if w is None else w[:, j].astype(jnp.float32)[:, None]
+            contrib = jnp.where(valid[:, None], x2.astype(jnp.float32) * wj,
+                                0.0)
+            acc = acc.at[jnp.clip(dest, 0, plan.n_out - 1)].add(
+                contrib, mode="drop", unique_indices=False)
+            # clip+where keeps OOB rows from landing anywhere real:
+            # contributions for invalid dests were zeroed above.
+        return acc.astype(x2.dtype)
+
+    # Finite fields: XOR accumulation of semiring products.  Payloads
+    # and weights are folded into the carrier up front so the oracle
+    # agrees with the lift/matmul/take lowerings even for out-of-range
+    # values (the same fold the bit decomposition applies implicitly).
+    cmask = sr.carrier_mask
+    xi = x2.astype(jnp.int32) & cmask
+    if plan.mode == GATHER:
+        acc = jnp.zeros((plan.n_out, x2.shape[1]), jnp.int32)
         for j in range(k):
             src = plan.idx[:, j]
             valid = (src >= 0) & (src < plan.n_in)
-            vals = jnp.take(x2, jnp.clip(src, 0, plan.n_in - 1), axis=0)
-            wj = 1.0 if w is None else w[:, j].astype(jnp.float32)[:, None]
-            acc = acc + jnp.where(valid[:, None], vals.astype(jnp.float32) * wj, 0.0)
+            vals = jnp.take(xi, jnp.clip(src, 0, plan.n_in - 1), axis=0)
+            wj = (jnp.ones((plan.n_out, 1), jnp.int32) if w is None
+                  else w[:, j].astype(jnp.int32)[:, None] & cmask)
+            acc = acc ^ jnp.where(valid[:, None], sr.mul(wj, vals), 0)
         return acc.astype(x2.dtype)
-    acc = jnp.zeros((plan.n_out, x2.shape[1]), dtype=jnp.float32)
+    # Scatter: XOR has no native scatter op, but XOR accumulation is
+    # per-bit parity — scatter-add each contribution's bit planes, fold
+    # mod 2, repack.  Exact for arbitrary (non-injective) scatters.
+    nbits = 8 if sr is GF2_8 else 1
+    shifts = jnp.arange(nbits, dtype=jnp.int32)
+    acc = jnp.zeros((plan.n_out, x2.shape[1], nbits), jnp.int32)
     for j in range(k):
         dest = plan.idx[:, j]
         valid = (dest >= 0) & (dest < plan.n_out)
-        wj = 1.0 if w is None else w[:, j].astype(jnp.float32)[:, None]
-        contrib = jnp.where(valid[:, None], x2.astype(jnp.float32) * wj, 0.0)
+        wj = (jnp.ones((plan.n_in, 1), jnp.int32) if w is None
+              else w[:, j].astype(jnp.int32)[:, None] & cmask)
+        contrib = jnp.where(valid[:, None], sr.mul(wj, xi), 0)
+        bitplanes = (contrib[:, :, None] >> shifts) & 1
         acc = acc.at[jnp.clip(dest, 0, plan.n_out - 1)].add(
-            contrib, mode="drop", unique_indices=False)
-        # clip+where keeps OOB rows from landing anywhere real:
-        # contributions for invalid dests were zeroed above.
-    return acc.astype(x2.dtype)
+            bitplanes, mode="drop", unique_indices=False)
+    out = jnp.sum((acc & 1) << shifts, axis=-1)
+    return out.astype(x2.dtype)
 
 
 # ---------------------------------------------------------------------------

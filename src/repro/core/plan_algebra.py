@@ -8,7 +8,12 @@ under three algebraic operations, and all three are computable on
   operator product ``P2 @ P1``, itself a (weighted, partial) permutation.
   A K-deep chain of ``vrgather``/``vslide``/``vcompress``/``vexpand``
   therefore collapses to ONE crossbar evaluation — one HBM round-trip of
-  the payload instead of K.
+  the payload instead of K.  The product is taken over the operands'
+  weight semiring (``core.semiring``): path weights fold with its
+  ``mul``, composed selects accumulate with its ``add`` at apply time,
+  so the same compose fuses MoE gate scaling (REAL) and AES
+  ShiftRows∘MixColumns (GF(2^8)) alike; unweighted pure-routing plans
+  are semiring-neutral and adopt the other operand's algebra.
 * **transposition** ``transpose(p)``: the gather↔scatter duality of
   Sec. III-B.2 (vertical one-hots re-read as horizontal one-hots).  MoE
   combine is *derived* from dispatch this way rather than rebuilt.
@@ -49,11 +54,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import crossbar as xb
+from repro.core import semiring as sr_mod
 from repro.core import transform as _t
+from repro.core.semiring import REAL, Semiring
 
 Array = jax.Array
 
 DROP = _t.DROP
+
+
+def _join(p2: xb.PermutePlan, p1: xb.PermutePlan) -> Semiring:
+    """The semiring two plans combine under (see ``semiring.join``)."""
+    return sr_mod.join(p2.semiring, p1.semiring,
+                       neutral1=p2.neutral_semiring,
+                       neutral2=p1.neutral_semiring)
 
 
 # ---------------------------------------------------------------------------
@@ -148,21 +162,38 @@ def to_gather(plan: xb.PermutePlan) -> xb.PermutePlan:
         src = jnp.where(hits > 0, src, DROP).astype(jnp.int32)
         weights = None
         if plan.weights is not None:
+            # Output-injectivity means at most one valid contribution per
+            # destination, so the scatter-add never actually combines two
+            # weights — exact in every semiring (0 is each one's additive
+            # identity).
             w = jnp.zeros((n_out,), plan.weights.dtype).at[safe.ravel()].add(
                 jnp.where(valid, plan.weights, 0).ravel(), mode="drop")
             weights = w[:, None]
-        return xb.gather_plan(src, plan.n_in, weights=weights)
+        return xb.gather_plan(src, plan.n_in, weights=weights,
+                              semiring=plan.semiring)
 
     return _memo("to_gather", (plan.idx, plan.weights),
-                 (plan.n_in, plan.n_out), build)
+                 (plan.n_in, plan.n_out, plan.semiring.name), build)
 
 
-def with_weights(plan: xb.PermutePlan, weights: Array) -> xb.PermutePlan:
-    """Same routing, new per-select weights (broadcast to the idx shape)."""
+def with_weights(plan: xb.PermutePlan, weights: Array, *,
+                 semiring: Optional[Semiring] = None) -> xb.PermutePlan:
+    """Same routing, new per-select weights (broadcast to the idx shape).
+
+    ``semiring`` rebinds the algebra alongside the weights (e.g. byte
+    coefficients over GF2_8); default keeps the plan's.
+    """
     w = jnp.asarray(weights)
     if w.ndim == 1:
         w = w[:, None]
-    return xb.PermutePlan(plan.mode, plan.idx, plan.n_in, plan.n_out, w)
+    return xb.PermutePlan(plan.mode, plan.idx, plan.n_in, plan.n_out, w,
+                          semiring or plan.semiring)
+
+
+def with_semiring(plan: xb.PermutePlan, semiring: Semiring) -> xb.PermutePlan:
+    """Same routing and weights, different accumulation algebra."""
+    return xb.PermutePlan(plan.mode, plan.idx, plan.n_in, plan.n_out,
+                          plan.weights, semiring)
 
 
 def transpose(plan: xb.PermutePlan) -> xb.PermutePlan:
@@ -215,15 +246,16 @@ def compose(p2: xb.PermutePlan, p1: xb.PermutePlan) -> xb.PermutePlan:
         raise ValueError(
             f"compose: p1 produces {p1.n_out} elements but p2 consumes "
             f"{p2.n_in}")
+    sr = _join(p2, p1)  # raises early on a genuine algebra mismatch
 
     def build():
         # Algebraic fast path: the identity is the unit.  Checked inside
         # the memoised builder because is_identity reads index values off
         # device — a blocking sync repeated calls must not pay.
         if is_identity(p1):
-            return p2
+            return p2 if p2.semiring is sr else with_semiring(p2, sr)
         if is_identity(p2):
-            return p1
+            return p1 if p1.semiring is sr else with_semiring(p1, sr)
         g2 = to_gather(p2)
         g1 = to_gather(p1)
         mid = p1.n_out
@@ -234,16 +266,22 @@ def compose(p2: xb.PermutePlan, p1: xb.PermutePlan) -> xb.PermutePlan:
         idx = idx.reshape(p2.n_out, g2.k * g1.k)
         weights = None
         if g2.weights is not None or g1.weights is not None:
-            w2 = (jnp.ones_like(g2.idx, jnp.float32) if g2.weights is None
-                  else g2.weights.astype(jnp.float32))
-            w1 = (jnp.ones((mid, g1.k), jnp.float32) if g1.weights is None
-                  else g1.weights.astype(jnp.float32))
-            w = w2[:, :, None] * jnp.take(w1, safe, axis=0)
+            # Path weights fold with the joined semiring's product; the
+            # k2*k1 composed selects accumulate with its add at apply
+            # time, so compose(p2,p1) distributes exactly like P2 @ P1
+            # over the semiring.
+            wdt = sr.weight_dtype
+            w2 = (jnp.ones_like(g2.idx, wdt) if g2.weights is None
+                  else g2.weights.astype(wdt))
+            w1 = (jnp.ones((mid, g1.k), wdt) if g1.weights is None
+                  else g1.weights.astype(wdt))
+            w = sr.mul(w2[:, :, None], jnp.take(w1, safe, axis=0))
             weights = w.reshape(p2.n_out, g2.k * g1.k)
-        return xb.gather_plan(idx, p1.n_in, weights=weights)
+        return xb.gather_plan(idx, p1.n_in, weights=weights, semiring=sr)
 
     return _memo("compose", (p2.idx, p2.weights, p1.idx, p1.weights),
-                 (p2.mode, p2.n_in, p2.n_out, p1.mode, p1.n_in, p1.n_out),
+                 (p2.mode, p2.n_in, p2.n_out, p2.semiring.name,
+                  p1.mode, p1.n_in, p1.n_out, p1.semiring.name),
                  build)
 
 
@@ -298,6 +336,11 @@ def block_diag(plans: Sequence[xb.PermutePlan]) -> xb.PermutePlan:
             "the direct sum needs at least one plan")
     gs = [to_gather(p) for p in plans]
     kmax = max(g.k for g in gs)
+    sr, neutral_so_far = REAL, True
+    for g in gs:
+        sr = sr_mod.join(sr, g.semiring, neutral1=neutral_so_far,
+                         neutral2=g.neutral_semiring)
+        neutral_so_far = neutral_so_far and g.neutral_semiring
 
     def build():
         rows, ws = [], []
@@ -311,18 +354,19 @@ def block_diag(plans: Sequence[xb.PermutePlan]) -> xb.PermutePlan:
                               constant_values=DROP)
             rows.append(idx)
             if weighted:
-                w = (jnp.ones_like(g.idx, jnp.float32) if g.weights is None
-                     else g.weights.astype(jnp.float32))
+                w = (sr.ones(g.idx.shape) if g.weights is None
+                     else g.weights.astype(sr.weight_dtype))
                 if g.k < kmax:
+                    # Padded selects are DROP; their weight value is inert.
                     w = jnp.pad(w, ((0, 0), (0, kmax - g.k)))
                 ws.append(w)
             off += g.n_in
         idx = jnp.concatenate(rows, axis=0)
         weights = jnp.concatenate(ws, axis=0) if weighted else None
-        return xb.gather_plan(idx, off, weights=weights)
+        return xb.gather_plan(idx, off, weights=weights, semiring=sr)
 
     operands = tuple(g.idx for g in gs) + tuple(g.weights for g in gs)
-    static = tuple((g.n_in, g.n_out) for g in gs)
+    static = tuple((g.n_in, g.n_out, g.semiring.name) for g in gs)
     return _memo("block_diag", operands, static, build)
 
 
@@ -338,14 +382,16 @@ def batch(plan: xb.PermutePlan, b: int) -> xb.PermutePlan:
         weights = None
         if g.weights is not None:
             weights = jnp.tile(g.weights, (b, 1))
-        return xb.gather_plan(idx, b * g.n_in, weights=weights)
+        return xb.gather_plan(idx, b * g.n_in, weights=weights,
+                              semiring=g.semiring)
 
     return _memo("batch", (g.idx, g.weights),
-                 (b, g.n_in, g.n_out), build)
+                 (b, g.n_in, g.n_out, g.semiring.name), build)
 
 
 def batched_gather_plan(idx: Array, n_in: int, *,
-                        weights: Array | None = None) -> xb.PermutePlan:
+                        weights: Array | None = None,
+                        semiring: Semiring = REAL) -> xb.PermutePlan:
     """Distinct per-row gathers -> one block-diagonal plan.
 
     ``idx`` is (B, n_out) or (B, n_out, k), each row indexing its own
@@ -364,13 +410,15 @@ def batched_gather_plan(idx: Array, n_in: int, *,
         flat = jnp.where(valid, idx3.astype(jnp.int32) + offs, DROP)
         w = None if weights is None else weights.reshape(b * n_out, k)
         return xb.gather_plan(flat.reshape(b * n_out, k), b * n_in,
-                              weights=w)
+                              weights=w, semiring=semiring)
 
-    return _memo("batched_gather", (idx, weights), (n_in,), build)
+    return _memo("batched_gather", (idx, weights), (n_in, semiring.name),
+                 build)
 
 
 def batched_scatter_plan(dest: Array, n_out: int, *,
-                         weights: Array | None = None) -> xb.PermutePlan:
+                         weights: Array | None = None,
+                         semiring: Semiring = REAL) -> xb.PermutePlan:
     """Distinct per-row scatters -> one block-diagonal plan.
 
     ``dest`` is (B, n_in) or (B, n_in, k); row b's destinations land in
@@ -387,9 +435,10 @@ def batched_scatter_plan(dest: Array, n_out: int, *,
         flat = jnp.where(valid, dest3.astype(jnp.int32) + offs, DROP)
         w = None if weights is None else weights.reshape(b * n_in, k)
         return xb.scatter_plan(flat.reshape(b * n_in, k), b * n_out,
-                               weights=w)
+                               weights=w, semiring=semiring)
 
-    return _memo("batched_scatter", (dest, weights), (n_out,), build)
+    return _memo("batched_scatter", (dest, weights), (n_out, semiring.name),
+                 build)
 
 
 # ---------------------------------------------------------------------------
@@ -453,7 +502,8 @@ class LazyOp:
             # exact zero — the same thing a DROP select produces.
             keep = out_mask.astype(bool)[:, None]
             plan = xb.gather_plan(jnp.where(keep, plan.idx, DROP),
-                                  plan.n_in, weights=plan.weights)
+                                  plan.n_in, weights=plan.weights,
+                                  semiring=plan.semiring)
         return plan
 
 

@@ -1,0 +1,236 @@
+"""Weight semirings: the algebra a crossbar pass accumulates in.
+
+The paper's AND-OR crossbar computes ``out[o] = SUM_k w[o,k] * x[idx[o,k]]``
+— but nothing about the datapath fixes *which* (+, ×) that is.  Machine
+learning workloads want the real field (MoE gate scalars multiply, partial
+sums add); cryptographic linear layers want finite fields: Keccak's θ and
+AES's MixColumns are crossbars whose "multiply-add" is carry-free XOR
+accumulation of GF(2)/GF(2^8) products.  This module makes the choice a
+first-class, pluggable property of a plan:
+
+* ``Semiring`` — a named ``(add, mul, zero, one)`` bundle with the extra
+  hooks the execution backends need (reduction along the select axis, the
+  dtype weights materialise in, whether a dense integer contraction can
+  emulate the accumulation with a mod-2 fold).
+
+* ``REAL``   — today's behaviour: f32/int multiply-add.  The default on
+  every plan; all pre-semiring code paths are the REAL instances of the
+  generic ones.
+
+* ``GF2``    — the two-element field: add = XOR, mul = AND, carriers are
+  0/1 integers.  Key property exploited by every matmul backend: a sum of
+  0/1 products reduced **mod 2** *is* the XOR accumulation, so GF2 plans
+  run on the same MXU contraction as REAL plans plus one cheap parity
+  fold at emission.
+
+* ``GF2_8``  — the AES field GF(2^8) with the Rijndael polynomial
+  x^8+x^4+x^3+x+1 (0x11B): add = byte XOR, mul = the xtime-chain
+  polynomial product.  Multiplication by a *constant* is GF(2)-linear, so
+  a GF2_8-weighted plan over n bytes "lifts" to an unweighted GF2 plan
+  over 8n bits (each byte weight w becomes the 8x8 bit matrix
+  ``M_w[b, j] = bit b of w·2^j``); ``crossbar.apply_plan`` uses exactly
+  that lift to run MixColumns on the ordinary bit-exact crossbar.
+
+Semiring objects are interned singletons: identity comparison and
+``name`` are both stable cache-key material (plan memo, compiled-schedule
+LRU, pinned static cache, fixed-latency fingerprints all key on it — two
+plans sharing idx/weight arrays under different semirings must never
+collide).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# The Rijndael reduction polynomial x^8 + x^4 + x^3 + x + 1.
+AES_POLY = 0x11B
+
+
+# ---------------------------------------------------------------------------
+# GF(2^8) arithmetic (vectorised, branch-free, numpy- and jax-compatible)
+# ---------------------------------------------------------------------------
+
+def gf2_8_xtime(a):
+    """Multiply by x (i.e. 2) in GF(2^8): shift, conditionally reduce."""
+    a = a.astype(jnp.int32) if isinstance(a, jax.Array) else \
+        np.asarray(a, np.int32)
+    return ((a << 1) ^ ((a >> 7) * (AES_POLY & 0xFF))) & 0xFF
+
+
+def gf2_8_mul(a, b):
+    """Elementwise GF(2^8) product via the xtime chain (8 fixed steps).
+
+    Works on numpy arrays, python ints, and traced jax arrays alike;
+    branch-free (fixed latency) in all cases.  Broadcasting follows the
+    operands'.
+    """
+    if isinstance(a, jax.Array) or isinstance(b, jax.Array):
+        a = jnp.asarray(a, jnp.int32)
+        b = jnp.asarray(b, jnp.int32)
+        where = jnp.where
+    else:
+        a = np.asarray(a, np.int32)
+        b = np.asarray(b, np.int32)
+        where = np.where
+    acc = a * 0
+    for i in range(8):
+        acc = acc ^ where(((b >> i) & 1) != 0, a, 0)
+        a = gf2_8_xtime(a)
+    return acc
+
+
+def gf2_8_pow(a: int, e: int) -> int:
+    """Scalar GF(2^8) exponentiation (host-side table generation)."""
+    acc, base = 1, a & 0xFF
+    while e:
+        if e & 1:
+            acc = int(gf2_8_mul(np.int32(acc), np.int32(base)))
+        base = int(gf2_8_mul(np.int32(base), np.int32(base)))
+        e >>= 1
+    return acc
+
+
+def gf2_8_inv(a: int) -> int:
+    """Multiplicative inverse in GF(2^8) (0 maps to 0, per AES S-box)."""
+    return 0 if a == 0 else gf2_8_pow(a, 254)
+
+
+@functools.lru_cache(maxsize=None)
+def gf2_8_bit_matrix_table() -> np.ndarray:
+    """(256, 8, 8) int8: ``T[w, b, j]`` = bit ``b`` of ``w · 2^j``.
+
+    The GF(2)-linear representation of multiplication by each constant:
+    ``(w·x)_b = XOR_j T[w, b, j] · x_j``.  This is the lookup the
+    GF2_8 -> GF2 plan lift is built from.
+    """
+    w = np.arange(256, dtype=np.int32)
+    cols = np.empty((8, 256), np.int32)
+    cur = w.copy()
+    for j in range(8):
+        cols[j] = cur                      # w * 2^j
+        cur = gf2_8_xtime(cur)
+    # T[w, b, j] = bit b of cols[j, w]
+    bits = (cols[:, :, None] >> np.arange(8)) & 1      # (j, w, b)
+    return bits.transpose(1, 2, 0).astype(np.int8)     # (w, b, j)
+
+
+# ---------------------------------------------------------------------------
+# The Semiring bundle
+# ---------------------------------------------------------------------------
+
+def _xor_reduce(x: Array, axis: int) -> Array:
+    """XOR fold along ``axis`` (log-depth, branch-free)."""
+    n = x.shape[axis]
+    if n == 0:
+        return jnp.zeros(x.shape[:axis] + x.shape[axis + 1:], x.dtype)
+    while n > 1:
+        half = n // 2
+        lo = jax.lax.slice_in_dim(x, 0, half, axis=axis)
+        hi = jax.lax.slice_in_dim(x, half, 2 * half, axis=axis)
+        rest = jax.lax.slice_in_dim(x, 2 * half, n, axis=axis)
+        x = jnp.concatenate([lo ^ hi, rest], axis=axis)
+        n = x.shape[axis]
+    return jnp.squeeze(x, axis=axis)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Semiring:
+    """A named (add, mul, zero, one) with backend execution hooks.
+
+    Attributes:
+      name:   stable identity for cache keys / fingerprints / repr.
+      add/mul: elementwise jnp ops (broadcasting).
+      zero/one: python scalars (additive / multiplicative identities).
+      weight_dtype: dtype weights materialise in (f32 for REAL, int32
+        for the finite fields — carriers are exact small integers).
+      integer_carrier: True when payloads/weights must be integers.
+      mod2_fold: True when a dense integer/f32 sum-of-products equals
+        the semiring accumulation after a mod-2 fold (GF2's parity
+        trick; the MXU path for both finite fields via the bit lift).
+      carrier_mask: bitmask of the carrier set for finite fields (GF2:
+        1, GF2_8: 0xFF; None for REAL) — pure-routing lowerings fold
+        picked values with it so every lowering agrees even for
+        payloads outside the carrier range.
+    """
+
+    name: str
+    add: Callable[[Array, Array], Array]
+    mul: Callable[[Array, Array], Array]
+    zero: int
+    one: int
+    weight_dtype: jnp.dtype
+    integer_carrier: bool = False
+    mod2_fold: bool = False
+    carrier_mask: int | None = None
+
+    def __repr__(self) -> str:
+        return f"Semiring({self.name!r})"
+
+    def reduce(self, x: Array, axis: int) -> Array:
+        """Fold ``add`` along ``axis`` (the crossbar's select axis)."""
+        if self.name == "real":
+            return jnp.sum(x, axis=axis)
+        return _xor_reduce(x, axis)
+
+    def ones(self, shape, like=None) -> Array:
+        del like
+        return jnp.full(shape, self.one, self.weight_dtype)
+
+    def cast_weights(self, w: Array) -> Array:
+        return jnp.asarray(w).astype(self.weight_dtype)
+
+
+REAL = Semiring(
+    name="real", add=lambda a, b: a + b, mul=lambda a, b: a * b,
+    zero=0, one=1, weight_dtype=jnp.float32)
+
+GF2 = Semiring(
+    name="gf2", add=jnp.bitwise_xor, mul=jnp.bitwise_and,
+    zero=0, one=1, weight_dtype=jnp.int32,
+    integer_carrier=True, mod2_fold=True, carrier_mask=1)
+
+GF2_8 = Semiring(
+    name="gf2_8", add=jnp.bitwise_xor, mul=gf2_8_mul,
+    zero=0, one=1, weight_dtype=jnp.int32,
+    integer_carrier=True, carrier_mask=0xFF)
+
+_BY_NAME = {s.name: s for s in (REAL, GF2, GF2_8)}
+
+
+def get(name: str) -> Semiring:
+    """Look a semiring up by its stable name."""
+    try:
+        return _BY_NAME[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown semiring {name!r} (have {sorted(_BY_NAME)})") from None
+
+
+def join(s1: Semiring, s2: Semiring, *, neutral1: bool = False,
+         neutral2: bool = False) -> Semiring:
+    """The common semiring of two plans being combined.
+
+    Equal semirings join to themselves.  An *unweighted* plan still
+    carrying the REAL default is semiring-neutral — pure routing has the
+    same meaning in every semiring — and adopts the other operand's
+    (``neutralN`` flags declare that property per operand).  Anything
+    else is a real algebra mismatch and raises.
+    """
+    if s1 is s2:
+        return s1
+    if s1 is REAL and neutral1:
+        return s2
+    if s2 is REAL and neutral2:
+        return s1
+    raise ValueError(
+        f"semiring mismatch: cannot combine plans over {s1.name!r} and "
+        f"{s2.name!r}; reweight one side (plan_algebra.with_weights / "
+        "with_semiring) so both agree")

@@ -67,9 +67,21 @@ def schedule_fingerprint(plan: xb.PermutePlan, *, block_o: int = 128,
     """
     compiled = xb.compile_plan(plan, block_o=block_o, block_n=block_n,
                                pin=True)
-    return (plan.mode, plan.n_in, plan.n_out, plan.k,
-            compiled.n_o_tiles, compiled.n_n_tiles,
-            int(compiled.num_active))
+    fp = (plan.mode, plan.n_in, plan.n_out, plan.k, plan.semiring.name,
+          compiled.n_o_tiles, compiled.n_n_tiles,
+          int(compiled.num_active))
+    if plan.semiring is xb.GF2_8:
+        # The matmul backends never execute the byte-level schedule —
+        # they run the plan's GF(2) bit lift.  Fingerprint (and pin)
+        # that executed schedule too, or the contract would be checking
+        # a plan the datapath never touches while the real one sits in
+        # the evictable LRU.
+        lifted = xb.lift_gf2_8(plan)
+        lc = xb.compile_plan(lifted, block_o=block_o, block_n=block_n,
+                             pin=True)
+        fp = fp + (("lift", lifted.n_in, lifted.n_out, lifted.k,
+                    lc.n_o_tiles, lc.n_n_tiles, int(lc.num_active)),)
+    return fp
 
 
 class StaticPlanRegistry:
@@ -102,6 +114,9 @@ class StaticPlanRegistry:
             # concrete and must not be staged into that trace.
             with jax.ensure_compile_time_eval():
                 xb.compile_plan(plan, pin=True)
+                if plan.semiring is xb.GF2_8:
+                    # Pin the executed (bit-lifted) schedule as well.
+                    xb.compile_plan(xb.lift_gf2_8(plan), pin=True)
         return plan
 
     def get_or_register(self, key: str,
@@ -172,7 +187,8 @@ class StaticPlanRegistry:
     def observe(self, name: Any, *, shapes: Sequence = (),
                 backend: Optional[str] = None,
                 plan_keys: Sequence[str] = (),
-                expect_apply_calls: Optional[int] = None):
+                expect_apply_calls: Optional[int] = None,
+                audit_host_syncs: bool = False):
         """Assert the wrapped block's schedule signature is call-invariant.
 
         ``name``/``shapes``/``backend`` key the signature: a different
@@ -183,9 +199,35 @@ class StaticPlanRegistry:
         ``expect_apply_calls`` additionally hard-checks the pass count
         (e.g. 24 for fused-ρπ Keccak-f[1600]: one crossbar pass per
         round).
+
+        ``audit_host_syncs=True`` additionally forbids value-dependent
+        host syncs inside the block: a disallowed device->host transfer
+        (caught by JAX's transfer guard on accelerators, where a sync is
+        a real copy) or an ``int()`` / ``np.asarray()`` on a *traced*
+        value (JAX's own concretization errors) raises
+        ``FixedLatencyError``.  Schedule invariance says latency didn't
+        drift *between* these calls; the audit says nothing inside the
+        region could have read payload values to make it drift.  On CPU
+        hosts device->host views are zero-copy and invisible to the
+        transfer guard — use ``audit_constant_time`` (abstract tracing)
+        for a backend-independent static check.
         """
-        with telemetry.delta() as d:
-            yield
+        audit = (telemetry.no_host_sync() if audit_host_syncs
+                 else contextlib.nullcontext())
+        try:
+            with telemetry.delta() as d, audit:
+                yield
+        except telemetry.HostSyncError as e:
+            raise FixedLatencyError(
+                f"{self.name}:{name}: value-dependent host sync inside "
+                f"an observed fixed-latency region — {e}") from e
+        except jax.errors.JAXTypeError as e:
+            if not audit_host_syncs:
+                raise
+            raise FixedLatencyError(
+                f"{self.name}:{name}: traced-value concretization "
+                f"(int()/np.asarray() on a tracer) inside an observed "
+                f"fixed-latency region — {e}") from e
         delta = d()
         calls = delta["apply_calls"]
         if expect_apply_calls is not None and calls != expect_apply_calls:
@@ -205,6 +247,32 @@ class StaticPlanRegistry:
                 "(mode, n_in, n_out, k, o_tiles, n_tiles, active_tiles) "
                 "per plan)")
 
+    def audit_constant_time(self, name: Any, fn: Callable, *example_args,
+                            **example_kwargs):
+        """Statically assert ``fn``'s schedule cannot read payload values.
+
+        The region is abstract-evaluated (``jax.eval_shape``) with every
+        array argument replaced by a tracer: any value-dependent host
+        sync in the implementation — ``int(tracer)``, ``np.asarray`` on
+        a traced value, a data-dependent Python branch — necessarily
+        concretizes a tracer and raises, which is converted to
+        ``FixedLatencyError``.  Backend-independent (works on CPU hosts
+        where zero-copy device->host views evade the transfer guard)
+        and free: abstract evaluation moves no data and runs no FLOPs.
+
+        Returns the abstract output (ShapeDtypeStructs) on success, so
+        callers can additionally pin the output geometry.
+        """
+        try:
+            return jax.eval_shape(fn, *example_args, **example_kwargs)
+        except jax.errors.JAXTypeError as e:
+            raise FixedLatencyError(
+                f"{self.name}:{name}: implementation performs a "
+                f"value-dependent host sync (int()/np.asarray()/branch "
+                f"on payload values) — schedule is not a function of "
+                f"static control information alone. Root cause: {e}"
+            ) from e
+
     # -- execution ----------------------------------------------------------
 
     def execute(self, key: str, x: jax.Array, *,
@@ -212,12 +280,15 @@ class StaticPlanRegistry:
                 backend: str = "einsum",
                 out_mask: Optional[jax.Array] = None,
                 interpret: Optional[bool] = None,
-                fixed_latency: bool = False) -> jax.Array:
+                fixed_latency: bool = False,
+                audit_host_syncs: bool = False) -> jax.Array:
         """One crossbar pass of a registered plan over ``x``.
 
         With ``fixed_latency=True`` the pass is observed: exactly one
         ``apply_plan`` call, schedule fingerprint invariant across calls
-        for this (key, payload shape/dtype, backend).
+        for this (key, payload shape/dtype, backend);
+        ``audit_host_syncs=True`` additionally forbids device->host
+        syncs during the pass (see ``observe``).
         """
         plan = self[key]
         if not fixed_latency:
@@ -226,7 +297,8 @@ class StaticPlanRegistry:
         with self.observe(("execute", key),
                           shapes=(tuple(x.shape), str(x.dtype)),
                           backend=backend, plan_keys=(key,),
-                          expect_apply_calls=1):
+                          expect_apply_calls=1,
+                          audit_host_syncs=audit_host_syncs):
             out = xb.apply_plan(plan, x, merge=merge, backend=backend,
                                 out_mask=out_mask, interpret=interpret)
         return out

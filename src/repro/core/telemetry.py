@@ -11,6 +11,14 @@ One tiny aggregation point over three counter sources:
   hits mean a composed/batched/transposed plan was rebuilt from the same
   operand arrays and returned the *same* object, which is what keeps the
   CompiledPlan cache warm across serving decode steps.
+* the GF(2^8) bit-lift memo (``crossbar.lift_cache_info``) — hits mean a
+  finite-field plan reused its lifted GF(2) bit plan (and therefore its
+  compiled schedule) instead of rebuilding it.
+
+``no_host_sync()`` is the constant-time audit primitive: it turns any
+device->host transfer inside the block into a ``HostSyncError`` —
+``StaticPlanRegistry.observe(audit_host_syncs=True)`` wraps observed
+regions in it and converts violations to ``FixedLatencyError``.
 
 ``snapshot()`` returns all counters; ``delta()`` is a context manager for
 "how many crossbar passes did this block take?" assertions:
@@ -24,14 +32,21 @@ from __future__ import annotations
 
 import contextlib
 
+import jax
+
 from repro.core import crossbar as xb
 from repro.core import plan_algebra as pa
+
+
+class HostSyncError(RuntimeError):
+    """A device->host sync happened inside a no-host-sync region."""
 
 
 def snapshot() -> dict:
     """All engine counters, flattened into one dict."""
     compile_info = xb.compile_cache_info()
     plan_info = pa.plan_cache_info()
+    lift_info = xb.lift_cache_info()
     return {
         "apply_calls": xb.apply_call_count(),
         "compile_cache_hits": compile_info["hits"],
@@ -40,14 +55,51 @@ def snapshot() -> dict:
         "plan_cache_hits": plan_info["hits"],
         "plan_cache_misses": plan_info["misses"],
         "plan_cache_size": plan_info["size"],
+        "lift_cache_hits": lift_info["hits"],
+        "lift_cache_misses": lift_info["misses"],
+        "lift_cache_size": lift_info["size"],
     }
 
 
 def reset() -> None:
-    """Zero every counter and drop both caches (test isolation)."""
+    """Zero every counter and drop the caches (test isolation)."""
     xb.clear_compile_cache()
     xb.reset_apply_call_count()
+    xb.clear_lift_cache()
     pa.clear_plan_cache()
+
+
+@contextlib.contextmanager
+def no_host_sync():
+    """Raise ``HostSyncError`` on any device->host transfer in the block.
+
+    The constant-time audit primitive: a fixed-latency region's schedule
+    must be a function of static control information only, so any
+    value-dependent host sync inside it — ``int()`` / ``float()`` /
+    ``np.asarray()`` on a device value, an implicit bool coercion — is a
+    data-dependent-schedule bug, not a convenience.  Implemented with
+    JAX's transfer guard (explicit ``jax.device_get`` escapes remain
+    available, deliberately: an *audited* region has no business using
+    them, and they would be caught in review, not silently tolerated).
+
+    ``int(tracer)`` / ``np.asarray(tracer)`` inside a jit trace raise
+    JAX concretization errors on their own; callers converting those to
+    contract violations (``StaticPlanRegistry.observe``) catch both.
+    """
+    try:
+        with jax.transfer_guard_device_to_host("disallow"):
+            yield
+    except Exception as e:  # noqa: BLE001 — classify, then re-raise
+        # Only rebrand the transfer guard's own error ("Disallowed
+        # device-to-host transfer: ..."), never an unrelated
+        # RuntimeError that happens to mention transfers.
+        msg = str(e)
+        if (isinstance(e, RuntimeError)
+                and "disallowed" in msg.lower() and "transfer" in msg.lower()):
+            raise HostSyncError(
+                f"device->host sync inside a no-host-sync region: {msg}"
+            ) from e
+        raise
 
 
 @contextlib.contextmanager

@@ -12,6 +12,11 @@ than a happy accident:
                    rotations execute as one block-diagonal vslide-style
                    plan (``block_diag`` of per-row rotations) and its
                    transpose.
+* ``aes``        — full AES-128: MixColumns as ONE GF(2^8)-weighted
+                   crossbar pass (the ``core.semiring`` abstraction),
+                   SubBytes as a static 256-row one-hot-domain LUT
+                   plan, ShiftRows∘MixColumns fused per round by the
+                   plan algebra; FIPS-197-exact encrypt/decrypt.
 * ``aes_layers`` — AES ShiftRows / InvShiftRows as 16-byte plans.
 * ``bitperm``    — PRESENT-style bit permutations through the
                    sub-element-width pack/permute/unpack path
@@ -43,6 +48,13 @@ from repro.crypto.chacha import (
     chacha20_encrypt,
 )
 from repro.crypto.aes_layers import inv_shift_rows, shift_rows
+from repro.crypto.aes import (
+    aes128_decrypt,
+    aes128_encrypt,
+    key_expansion,
+    mix_columns,
+    sub_bytes,
+)
 from repro.crypto.bitperm import (
     BitPermutation,
     bit_reversal,
@@ -56,5 +68,7 @@ __all__ = [
     "sha3_256", "sha3_256_batched", "sha3_512", "shake_128", "shake_256",
     "chacha20_block", "chacha20_blocks", "chacha20_encrypt",
     "inv_shift_rows", "shift_rows",
+    "aes128_decrypt", "aes128_encrypt", "key_expansion", "mix_columns",
+    "sub_bytes",
     "BitPermutation", "bit_reversal", "present_player",
 ]

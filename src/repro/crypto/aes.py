@@ -1,0 +1,398 @@
+"""AES-128 on the crossbar: the repo's first complete block cipher.
+
+Every AES layer is a crossbar pass over a *static* plan — the semiring
+abstraction (``core.semiring``) is what makes the last hold-out
+expressible:
+
+* **MixColumns / InvMixColumns** — the textbook "AES is a permutation
+  unit workload" case: a 16-row crossbar whose per-select weights are
+  GF(2^8) field coefficients (the circulant {2,3,1,1} / {e,b,d,9}
+  matrices over the Rijndael polynomial 0x11B).  ONE ``apply_plan``
+  pass per application, on any backend (the matmul backends execute the
+  plan's GF(2) bit lift — 128 bit rows — with a parity fold).
+
+* **SubBytes / InvSubBytes** — a value substitution, not a positional
+  permutation, so the *data moves into the control path* of a naive
+  vrgather LUT (``table[state[i]]``), which would make the schedule
+  data-dependent — exactly what the fixed-latency contract forbids.
+  Instead the state is one-hot encoded (byte value v -> basis vector
+  e_v of length 256; an iota compare, branch-free) and the S-box
+  becomes a STATIC 256-row permutation plan ``e_v -> e_{S(v)}``: the
+  256-entry vrgather LUT with the lookup *indices* as payload and the
+  table as control, rather than the reverse.  The S-box itself is
+  generated (GF(2^8) inversion + affine map), not transcribed.
+
+* **ShiftRows / InvShiftRows** — the byte-position permutations already
+  registered by ``crypto.aes_layers``.
+
+With ``fuse_layers=True`` (default) ShiftRows∘MixColumns is composed by
+the plan algebra into ONE GF(2^8)-weighted plan per round — the round
+is then 2 crossbar passes (S-box pass + fused linear pass) instead of 3.
+Decryption uses the FIPS-197 equivalent inverse cipher (§5.3.5) so
+InvShiftRows∘InvMixColumns fuses the same way (round keys for rounds
+1..9 get InvMixColumns applied host-side at schedule time).
+
+AddRoundKey is XOR arithmetic between passes (like Keccak's θ/χ/ι); the
+key schedule runs host-side in NumPy — key agility is out of the fixed-
+latency data path.
+
+``aes128_encrypt``/``aes128_decrypt`` process B blocks as payload width
+(state (16, B)): the pass count per *call* is constant (20 fused / 29
+chained) no matter how many blocks ride along.  Raw block-function
+application (ECB) — a primitive for tests/benchmarks, not an
+authenticated encryption mode.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import crossbar as xb
+from repro.core import plan_algebra as pa
+from repro.core import semiring as sr
+from repro.crypto import aes_layers
+from repro.crypto.registry import REGISTRY
+
+Array = jax.Array
+
+STATE_BYTES = 16
+ROUNDS = 10
+
+# MixColumns circulants, M[r, j]: out[r] = XOR_j M[r,j] * in[j] per column.
+_MC_MAT = np.array([[2, 3, 1, 1],
+                    [1, 2, 3, 1],
+                    [1, 1, 2, 3],
+                    [3, 1, 1, 2]], np.int32)
+_INV_MC_MAT = np.array([[14, 11, 13, 9],
+                        [9, 14, 11, 13],
+                        [13, 9, 14, 11],
+                        [11, 13, 9, 14]], np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Generated tables: S-box from GF(2^8) inversion + affine map (FIPS 197 §5.1.1)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def sbox_tables() -> Tuple[np.ndarray, np.ndarray]:
+    """(sbox, inv_sbox) as (256,) int32 — generated, not transcribed.
+
+    Inversion via exp/log tables over the generator 0x03; the affine
+    map is ``b ^ rotl(b,1) ^ rotl(b,2) ^ rotl(b,3) ^ rotl(b,4) ^ 0x63``
+    on the inverse.  Anchored end-to-end by the FIPS-197 cipher vectors
+    in tests.
+    """
+    exp = np.zeros(256, np.int32)
+    log = np.zeros(256, np.int32)
+    v = 1
+    for i in range(255):
+        exp[i] = v
+        log[v] = i
+        v = int(sr.gf2_8_mul(np.int32(v), np.int32(3)))
+    inv = np.zeros(256, np.int32)
+    inv[1:] = exp[(255 - log[np.arange(1, 256)]) % 255]
+
+    def rotl(b, n):
+        return ((b << n) | (b >> (8 - n))) & 0xFF
+
+    b = inv
+    sbox = (b ^ rotl(b, 1) ^ rotl(b, 2) ^ rotl(b, 3) ^ rotl(b, 4)
+            ^ 0x63).astype(np.int32)
+    inv_sbox = np.zeros(256, np.int32)
+    inv_sbox[sbox] = np.arange(256)
+    return sbox, inv_sbox
+
+
+# ---------------------------------------------------------------------------
+# Static plans
+# ---------------------------------------------------------------------------
+
+def _mc_gather(mat: np.ndarray) -> tuple:
+    """(idx, weights) of a column-circulant as a 16-row k=4 gather."""
+    idx = np.zeros((STATE_BYTES, 4), np.int32)
+    w = np.zeros((STATE_BYTES, 4), np.int32)
+    for c in range(4):
+        for r in range(4):
+            idx[4 * c + r] = 4 * c + np.arange(4)
+            w[4 * c + r] = mat[r]
+    return idx, w
+
+
+def mix_columns_plan(*, inverse: bool = False) -> xb.PermutePlan:
+    key = "aes/inv_mix_columns" if inverse else "aes/mix_columns"
+    mat = _INV_MC_MAT if inverse else _MC_MAT
+
+    def build():
+        idx, w = _mc_gather(mat)
+        return xb.gather_plan(jnp.asarray(idx), STATE_BYTES,
+                              weights=jnp.asarray(w), semiring=sr.GF2_8)
+
+    return REGISTRY.get_or_register(key, build)
+
+
+def sbox_plan(*, inverse: bool = False) -> xb.PermutePlan:
+    """The S-box as a static 256-row one-hot-domain permutation.
+
+    ``out_onehot[v] = in_onehot[S^{-1}(v)]`` — value substitution as a
+    position permutation of the one-hot axis, with program-constant
+    control (the generated inverse table).
+    """
+    key = "aes/inv_sbox" if inverse else "aes/sbox"
+    sbox, inv_sbox = sbox_tables()
+    table = sbox if inverse else inv_sbox  # gather sources
+
+    def build():
+        return xb.gather_plan(jnp.asarray(table), 256)
+
+    return REGISTRY.get_or_register(key, build)
+
+
+def round_linear_plan(*, inverse: bool = False) -> xb.PermutePlan:
+    """The fused per-round linear layer: (Inv)ShiftRows∘(Inv)MixColumns.
+
+    Encrypt rounds apply ShiftRows then MixColumns -> ``compose(MC, SR)``;
+    the equivalent inverse cipher applies InvShiftRows then
+    InvMixColumns -> ``compose(InvMC, InvSR)``.  Either way ONE
+    GF(2^8)-weighted k=4 plan — the pure permutation operand is
+    semiring-neutral and adopts GF2_8 through the compose weight fold.
+    """
+    aes_layers._register()
+    if inverse:
+        return REGISTRY.get_or_register(
+            "aes/inv_shift_rows_inv_mix_columns",
+            lambda: pa.compose(mix_columns_plan(inverse=True),
+                               REGISTRY["aes/inv_shift_rows"]))
+    return REGISTRY.get_or_register(
+        "aes/shift_rows_mix_columns",
+        lambda: pa.compose(mix_columns_plan(),
+                           REGISTRY["aes/shift_rows"]))
+
+
+# ---------------------------------------------------------------------------
+# Layer entry points (each = exactly one crossbar pass)
+# ---------------------------------------------------------------------------
+
+def _canon_state(state: Array) -> Tuple[Array, bool]:
+    single = state.ndim == 1
+    st = state[:, None] if single else state
+    if st.shape[0] != STATE_BYTES:
+        raise ValueError(f"AES state must have {STATE_BYTES} byte rows, "
+                         f"got shape {state.shape}")
+    return st.astype(jnp.int32), single
+
+
+def mix_columns(state: Array, *, inverse: bool = False,
+                backend: str = "einsum", fixed_latency: bool = False,
+                interpret: Optional[bool] = None) -> Array:
+    """(Inv)MixColumns on a (16,) or (16, B) byte state: ONE GF(2^8) pass."""
+    mix_columns_plan(inverse=inverse)
+    key = "aes/inv_mix_columns" if inverse else "aes/mix_columns"
+    st, single = _canon_state(state)
+    out = REGISTRY.execute(key, st, backend=backend,
+                           fixed_latency=fixed_latency, interpret=interpret)
+    out = out.astype(state.dtype)
+    return out[:, 0] if single else out
+
+
+def _onehot_encode(st: Array) -> Array:
+    """(16, B) byte values -> (256, 16, B) one-hot payload (iota compare)."""
+    vals = jnp.arange(256, dtype=jnp.int32)
+    return (st[None, :, :] == vals[:, None, None]).astype(jnp.int32)
+
+
+def _onehot_decode(onehot: Array) -> Array:
+    """(256, 16, B) one-hot -> (16, B) byte values (weighted sum)."""
+    vals = jnp.arange(256, dtype=jnp.int32)
+    return jnp.sum(onehot * vals[:, None, None], axis=0)
+
+
+def sub_bytes(state: Array, *, inverse: bool = False,
+              backend: str = "einsum", fixed_latency: bool = False,
+              interpret: Optional[bool] = None) -> Array:
+    """(Inv)SubBytes via the one-hot-domain S-box plan: ONE pass.
+
+    Encode (iota compare) and decode (weighted sum) are branch-free
+    arithmetic around the crossbar, like Keccak's θ/χ — the lookup
+    itself is the static 256-row permutation, so the schedule never
+    sees the state values.
+    """
+    sbox_plan(inverse=inverse)
+    key = "aes/inv_sbox" if inverse else "aes/sbox"
+    st, single = _canon_state(state)
+    out = _onehot_decode(REGISTRY.execute(
+        key, _onehot_encode(st), backend=backend,
+        fixed_latency=fixed_latency, interpret=interpret))
+    out = out.astype(state.dtype)
+    return out[:, 0] if single else out
+
+
+def shift_rows(state: Array, **kw) -> Array:
+    """Re-export of the registered byte permutation (crypto.aes_layers)."""
+    return aes_layers.shift_rows(state, **kw)
+
+
+def inv_shift_rows(state: Array, **kw) -> Array:
+    return aes_layers.inv_shift_rows(state, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Key schedule (host-side NumPy; FIPS 197 §5.2)
+# ---------------------------------------------------------------------------
+
+def key_expansion(key: bytes) -> np.ndarray:
+    """(11, 16) int32 round keys, flat in the state's column-major order."""
+    if len(key) != 16:
+        raise ValueError(f"AES-128 key must be 16 bytes, got {len(key)}")
+    sbox, _ = sbox_tables()
+    w = [np.frombuffer(key, np.uint8)[4 * i:4 * i + 4].astype(np.int32)
+         for i in range(4)]
+    rcon = 1
+    for i in range(4, 44):
+        temp = w[i - 1]
+        if i % 4 == 0:
+            temp = sbox[np.roll(temp, -1)].copy()
+            temp[0] ^= rcon
+            rcon = int(sr.gf2_8_xtime(np.int32(rcon)))
+        w.append(w[i - 4] ^ temp)
+    return np.stack([np.concatenate(w[4 * r:4 * r + 4])
+                     for r in range(ROUNDS + 1)]).astype(np.int32)
+
+
+def _inv_mix_key(rk_flat: np.ndarray) -> np.ndarray:
+    """InvMixColumns of one flat round key (host-side, for §5.3.5 dw)."""
+    s = rk_flat.reshape(4, 4).T           # s[r, c] = flat[4c + r]
+    out = np.zeros_like(s)
+    for r in range(4):
+        for j in range(4):
+            out[r] ^= sr.gf2_8_mul(np.int32(_INV_MC_MAT[r, j]), s[j])
+    return out.T.reshape(16)
+
+
+# ---------------------------------------------------------------------------
+# The block function
+# ---------------------------------------------------------------------------
+
+def _passes(fuse_layers: bool) -> int:
+    # 9 full rounds + final round; fused: (sbox + SR∘MC) * 9 + (sbox + SR).
+    return (2 * 9 + 2) if fuse_layers else (3 * 9 + 2)
+
+
+def _cipher_state(st: Array, rks, *, inverse: bool, fuse_layers: bool,
+                  backend: str, interpret) -> Array:
+    """The (equivalent-inverse-)cipher round function on a (16, B) state.
+
+    ``rks`` is an (11, 16) array: for decryption, already transformed to
+    the §5.3.5 dw schedule and indexed in application order.
+    """
+    run = functools.partial(REGISTRY.execute, backend=backend,
+                            interpret=interpret)
+
+    def lut(s):
+        return _onehot_decode(run(
+            "aes/inv_sbox" if inverse else "aes/sbox", _onehot_encode(s)))
+
+    sr_key = "aes/inv_shift_rows" if inverse else "aes/shift_rows"
+    mc_key = "aes/inv_mix_columns" if inverse else "aes/mix_columns"
+    fused_key = ("aes/inv_shift_rows_inv_mix_columns" if inverse
+                 else "aes/shift_rows_mix_columns")
+
+    st = st ^ rks[0][:, None]
+    for rnd in range(1, ROUNDS):
+        st = lut(st)
+        if fuse_layers:
+            st = run(fused_key, st)
+        else:
+            st = run(sr_key, st)
+            st = run(mc_key, st)
+        st = st ^ rks[rnd][:, None]
+    st = lut(st)
+    st = run(sr_key, st)
+    return st ^ rks[ROUNDS][:, None]
+
+
+def _ensure_plans(inverse: bool, fuse_layers: bool) -> tuple:
+    """Register every plan the cipher touches; return their keys."""
+    aes_layers._register()
+    sbox_plan(inverse=inverse)
+    mix_columns_plan(inverse=inverse)
+    keys = ["aes/inv_sbox" if inverse else "aes/sbox",
+            "aes/inv_shift_rows" if inverse else "aes/shift_rows",
+            "aes/inv_mix_columns" if inverse else "aes/mix_columns"]
+    if fuse_layers:
+        round_linear_plan(inverse=inverse)
+        keys.append("aes/inv_shift_rows_inv_mix_columns" if inverse
+                    else "aes/shift_rows_mix_columns")
+    return tuple(keys)
+
+
+def _blocks_to_state(data: bytes) -> jnp.ndarray:
+    if len(data) == 0 or len(data) % STATE_BYTES:
+        raise ValueError(
+            f"data length must be a positive multiple of {STATE_BYTES} "
+            f"bytes, got {len(data)} (the block function has no padding)")
+    arr = np.frombuffer(data, np.uint8).reshape(-1, STATE_BYTES)
+    return jnp.asarray(arr.T.astype(np.int32))       # (16, B)
+
+
+def _state_to_blocks(st: Array) -> bytes:
+    return np.asarray(st).T.astype(np.uint8).tobytes()
+
+
+def _run_cipher(key: bytes, data: bytes, *, inverse: bool, backend: str,
+                fuse_layers: bool, fixed_latency: bool, interpret) -> bytes:
+    plan_keys = _ensure_plans(inverse, fuse_layers)
+    rks = key_expansion(key)
+    if inverse:
+        # Equivalent inverse cipher (§5.3.5): reverse application order,
+        # InvMixColumns folded into the inner round keys host-side.
+        order = [rks[ROUNDS]] + [_inv_mix_key(rks[r])
+                                 for r in range(ROUNDS - 1, 0, -1)] + [rks[0]]
+        rks = np.stack(order)
+    rks_dev = jnp.asarray(rks)
+    st = _blocks_to_state(data)
+
+    def run():
+        return _cipher_state(st, rks_dev, inverse=inverse,
+                             fuse_layers=fuse_layers, backend=backend,
+                             interpret=interpret)
+
+    if not fixed_latency:
+        return _state_to_blocks(run())
+    with REGISTRY.observe(
+            ("aes128", "decrypt" if inverse else "encrypt", fuse_layers),
+            shapes=(tuple(st.shape), str(st.dtype)),
+            backend=backend, plan_keys=plan_keys,
+            expect_apply_calls=_passes(fuse_layers)):
+        out = run()
+    return _state_to_blocks(out)
+
+
+def aes128_encrypt(key: bytes, plaintext: bytes, *, backend: str = "einsum",
+                   fuse_layers: bool = True, fixed_latency: bool = False,
+                   interpret: Optional[bool] = None) -> bytes:
+    """AES-128 block encryption of B=len/16 blocks in one payload batch.
+
+    Fused mode: 20 crossbar passes per call (9 rounds x [S-box pass +
+    ShiftRows∘MixColumns pass] + final [S-box + ShiftRows]); chained
+    pays 29 (separate ShiftRows and MixColumns passes).  The pass count
+    and every plan's pinned schedule are payload-independent;
+    ``fixed_latency=True`` asserts it via the registry contract.
+    """
+    return _run_cipher(key, plaintext, inverse=False, backend=backend,
+                       fuse_layers=fuse_layers, fixed_latency=fixed_latency,
+                       interpret=interpret)
+
+
+def aes128_decrypt(key: bytes, ciphertext: bytes, *,
+                   backend: str = "einsum", fuse_layers: bool = True,
+                   fixed_latency: bool = False,
+                   interpret: Optional[bool] = None) -> bytes:
+    """AES-128 block decryption (equivalent inverse cipher, §5.3.5)."""
+    return _run_cipher(key, ciphertext, inverse=True, backend=backend,
+                       fuse_layers=fuse_layers, fixed_latency=fixed_latency,
+                       interpret=interpret)

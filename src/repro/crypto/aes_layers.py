@@ -4,11 +4,14 @@ The AES state is 16 bytes in FIPS-197 column-major order
 (``flat[4c + r] = s[r, c]``).  ShiftRows rotates row r left by r —
 a pure byte permutation, i.e. a 16-row crossbar gather plan; the
 inverse is its operator transpose (registered separately so both
-directions are gather-form and schedule-pinned).  The non-permutation
-AES layers (SubBytes, MixColumns, AddRoundKey) are arithmetic outside
-the crossbar and out of scope here — this module exists to give the
-fixed-latency contract a third, minimal cipher geometry (16 rows)
-alongside Keccak's 1600 and PRESENT's 64.
+directions are gather-form and schedule-pinned).
+
+The remaining AES layers live in ``crypto.aes``, all on the crossbar
+too: MixColumns as a GF(2^8)-weighted plan (the ``core.semiring``
+abstraction), SubBytes as a one-hot-domain LUT plan, and the full
+fixed-latency AES-128 cipher composing them with the plans registered
+here (``plan_algebra.compose`` fuses ShiftRows into the MixColumns
+pass per round).
 
 Payloads are byte values (0..255), exact on every backend: the einsum
 integer path accumulates in int32 and the kernel paths' f32 routing is

@@ -69,7 +69,7 @@ def _onehot_tile(idx_blk, w_blk, o_base, n_base, bo, bn, mode, compute_dtype):
 
 
 def _kernel(idx_ref, x_ref, *refs, mode, weighted, use_merge,
-            bo, bn, n_tiles, n_in_valid):
+            bo, bn, n_tiles, n_in_valid, fold_mod2=False):
     """One grid step of the crossbar contraction."""
     if weighted and use_merge:
         w_ref, merge_ref, out_ref, acc_ref, cov_ref = refs
@@ -123,6 +123,10 @@ def _kernel(idx_ref, x_ref, *refs, mode, weighted, use_merge,
     @pl.when(n_i == n_tiles - 1)
     def _emit():
         result = acc_ref[...]
+        if fold_mod2:
+            # GF(2) accumulate: the f32 sum of 0/1 AND-products is exact
+            # below 2^24, and its parity IS the XOR accumulation.
+            result = result - 2.0 * jnp.floor(result * 0.5)
         if merge_ref is not None:
             covered = cov_ref[...] > 0.0
             result = jnp.where(covered, result,
@@ -139,6 +143,7 @@ def crossbar_permute_pallas(
     weights: jax.Array | None = None,
     merge: jax.Array | None = None,
     n_in_valid: int | None = None,
+    fold_mod2: bool = False,
     block_o: int = DEFAULT_BO,
     block_n: int = DEFAULT_BN,
     block_d: int = DEFAULT_BD,
@@ -147,7 +152,9 @@ def crossbar_permute_pallas(
     """Raw kernel entry; shapes must already be block-aligned.
 
     idx: (n_ctrl, K) int32;  x: (n_in, D);  weights: like idx (f32);
-    merge: (n_out, D) or None.  Returns (n_out, D) in x.dtype.
+    merge: (n_out, D) or None.  ``fold_mod2`` reduces the accumulated
+    sum mod 2 at emission — the GF(2) semiring's XOR accumulation on
+    0/1 payloads/weights.  Returns (n_out, D) in x.dtype.
     """
     n_in, d = x.shape
     assert n_in % block_n == 0 and n_out % block_o == 0 and d % block_d == 0, (
@@ -176,7 +183,7 @@ def crossbar_permute_pallas(
     kernel = functools.partial(
         _kernel, mode=mode, weighted=weights is not None,
         use_merge=merge is not None, bo=block_o, bn=block_n,
-        n_tiles=n_tiles,
+        n_tiles=n_tiles, fold_mod2=fold_mod2,
         n_in_valid=n_in if n_in_valid is None else n_in_valid)
 
     return pl.pallas_call(
@@ -215,7 +222,8 @@ def crossbar_permute_pallas(
 
 
 def _sparse_kernel(po_ref, pn_ref, act_ref, idx_ref, x_ref, *refs,
-                   mode, weighted, bo, bn, num_pairs, guard):
+                   mode, weighted, bo, bn, num_pairs, guard,
+                   fold_mod2=False):
     """One grid step over (d_tile, schedule_slot)."""
     if weighted:
         w_ref, out_ref, acc_ref = refs
@@ -263,7 +271,11 @@ def _sparse_kernel(po_ref, pn_ref, act_ref, idx_ref, x_ref, *refs,
 
     @pl.when(emit)
     def _emit():
-        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+        result = acc_ref[...]
+        if fold_mod2:
+            # GF(2) accumulate: parity of the exact f32 0/1-product sum.
+            result = result - 2.0 * jnp.floor(result * 0.5)
+        out_ref[...] = result.astype(out_ref.dtype)
 
 
 def crossbar_permute_sparse_pallas(
@@ -277,6 +289,7 @@ def crossbar_permute_sparse_pallas(
     n_out: int,
     weights: jax.Array | None = None,
     guard: bool = False,
+    fold_mod2: bool = False,
     block_o: int = DEFAULT_BO,
     block_n: int = DEFAULT_BN,
     block_d: int = DEFAULT_BD,
@@ -325,7 +338,8 @@ def crossbar_permute_sparse_pallas(
     )
     kernel = functools.partial(
         _sparse_kernel, mode=mode, weighted=weights is not None,
-        bo=block_o, bn=block_n, num_pairs=num_pairs, guard=guard)
+        bo=block_o, bn=block_n, num_pairs=num_pairs, guard=guard,
+        fold_mod2=fold_mod2)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

@@ -72,6 +72,24 @@ def _pad_to(x, mult, axis, value=0):
     return jnp.pad(x, widths, constant_values=value)
 
 
+def _semiring_fold(plan):
+    """The kernel-level accumulate mode of a plan's semiring.
+
+    REAL accumulates natively; GF2 folds the exact f32 sum mod 2 at
+    emission.  GF2_8 plans never reach the kernels directly — the
+    crossbar engine lowers them through their GF(2) bit lift first
+    (``core.crossbar.lift_gf2_8``), so seeing one here is a bug.
+    """
+    sr = plan.semiring
+    if sr.mod2_fold:
+        return True
+    if sr.name == "real":
+        return False
+    raise ValueError(
+        f"semiring {sr.name!r} has no direct kernel path; execute via "
+        "core.crossbar.apply_plan (which lifts it to GF(2) bit rows)")
+
+
 def crossbar_permute(plan, x, *, merge=None, interpret=None,
                      block_o=128, block_n=128, block_d=128):
     """Execute a repro.core PermutePlan via the Pallas crossbar kernel.
@@ -81,6 +99,7 @@ def crossbar_permute(plan, x, *, merge=None, interpret=None,
     from repro.core import crossbar as xb  # avoid import cycle at load time
 
     interpret = _default_interpret(interpret)
+    fold_mod2 = _semiring_fold(plan)
     n_in, n_out = plan.n_in, plan.n_out
     mode = "gather" if plan.mode == xb.GATHER else "scatter"
 
@@ -101,7 +120,7 @@ def crossbar_permute(plan, x, *, merge=None, interpret=None,
     n_out_pad = n_out + ((-n_out) % block_o)
     out = crossbar_permute_pallas(
         idxp, xp, mode=mode, n_out=n_out_pad, weights=wp, merge=mp,
-        n_in_valid=n_in,
+        n_in_valid=n_in, fold_mod2=fold_mod2,
         block_o=block_o, block_n=block_n, block_d=block_d,
         interpret=interpret)
     out = out[:n_out, :x.shape[1]]
@@ -126,6 +145,7 @@ def crossbar_permute_sparse(plan, x, *, compiled=None, interpret=None,
     from repro.core import crossbar as xb  # avoid import cycle at load time
 
     interpret = _default_interpret(interpret)
+    fold_mod2 = _semiring_fold(plan)
     n_in, n_out = plan.n_in, plan.n_out
     mode = "gather" if plan.mode == xb.GATHER else "scatter"
 
@@ -156,6 +176,7 @@ def crossbar_permute_sparse(plan, x, *, compiled=None, interpret=None,
                 compiled.pair_o[:num], compiled.pair_n[:num],
                 compiled.active[:num], idxp, xp,
                 mode=mode, n_out=n_out_pad, weights=wp, guard=False,
+                fold_mod2=fold_mod2,
                 block_o=block_o, block_n=block_n, block_d=block_d,
                 interpret=interpret)
     else:
@@ -163,6 +184,7 @@ def crossbar_permute_sparse(plan, x, *, compiled=None, interpret=None,
         out = crossbar_permute_sparse_pallas(
             compiled.pair_o, compiled.pair_n, compiled.active, idxp, xp,
             mode=mode, n_out=n_out_pad, weights=wp, guard=True,
+            fold_mod2=fold_mod2,
             block_o=block_o, block_n=block_n, block_d=block_d,
             interpret=interpret)
     out = out[:n_out, :x.shape[1]]

@@ -321,6 +321,280 @@ class TestChaCha20:
 
 
 # ---------------------------------------------------------------------------
+# AES-128 (full cipher on the crossbar, GF(2^8) semiring)
+# ---------------------------------------------------------------------------
+
+_REF_SBOX = None
+
+
+def _ref_gf_mul(a, b):
+    """Independent scalar GF(2^8) multiply (russian peasant, 0x11B)."""
+    p = 0
+    for _ in range(8):
+        if b & 1:
+            p ^= a
+        hi = a & 0x80
+        a = (a << 1) & 0xFF
+        if hi:
+            a ^= 0x1B
+        b >>= 1
+    return p
+
+
+def _ref_sbox():
+    global _REF_SBOX
+    if _REF_SBOX is None:
+        inv = [0] * 256
+        for a in range(1, 256):
+            for b in range(1, 256):
+                if _ref_gf_mul(a, b) == 1:
+                    inv[a] = b
+                    break
+        box = []
+        for v in inv:
+            r = v
+            for sh in (1, 2, 3, 4):
+                r ^= ((v << sh) | (v >> (8 - sh))) & 0xFF
+            box.append(r ^ 0x63)
+        _REF_SBOX = box
+    return _REF_SBOX
+
+
+def _ref_key_expand(key):
+    sbox = _ref_sbox()
+    w = [list(key[4 * i:4 * i + 4]) for i in range(4)]
+    rcon = 1
+    for i in range(4, 44):
+        t = list(w[i - 1])
+        if i % 4 == 0:
+            t = t[1:] + t[:1]
+            t = [sbox[v] for v in t]
+            t[0] ^= rcon
+            rcon = _ref_gf_mul(rcon, 2)
+        w.append([a ^ b for a, b in zip(w[i - 4], t)])
+    return [sum((w[4 * r + c] for c in range(4)), [])
+            for r in range(11)]
+
+
+def _ref_aes_encrypt_block(key, block, collect_rounds=False):
+    """Pure-python-int FIPS-197 cipher; optionally returns the state
+    after each full round (for round-vector checks)."""
+    sbox = _ref_sbox()
+    rks = _ref_key_expand(key)
+    s = [b ^ k for b, k in zip(block, rks[0])]
+    trace = []
+    for rnd in range(1, 10):
+        s = [sbox[v] for v in s]
+        # ShiftRows on flat[4c + r]
+        s = [s[4 * ((o // 4 + o % 4) % 4) + o % 4] for o in range(16)]
+        # MixColumns
+        m = []
+        for c in range(4):
+            col = s[4 * c:4 * c + 4]
+            for r in range(4):
+                coef = [[2, 3, 1, 1], [1, 2, 3, 1],
+                        [1, 1, 2, 3], [3, 1, 1, 2]][r]
+                m.append(_ref_gf_mul(coef[0], col[0])
+                         ^ _ref_gf_mul(coef[1], col[1])
+                         ^ _ref_gf_mul(coef[2], col[2])
+                         ^ _ref_gf_mul(coef[3], col[3]))
+        s = [a ^ k for a, k in zip(m, rks[rnd])]
+        trace.append(bytes(s))
+    s = [sbox[v] for v in s]
+    s = [s[4 * ((o // 4 + o % 4) % 4) + o % 4] for o in range(16)]
+    s = [a ^ k for a, k in zip(s, rks[10])]
+    trace.append(bytes(s))
+    return (bytes(s), trace) if collect_rounds else bytes(s)
+
+
+class TestAES128:
+    # FIPS-197 Appendix B
+    KEY_B = bytes.fromhex("2b7e151628aed2a6abf7158809cf4f3c")
+    PT_B = bytes.fromhex("3243f6a8885a308d313198a2e0370734")
+    CT_B = bytes.fromhex("3925841d02dc09fbdc118597196a0b32")
+    # FIPS-197 Appendix C.1
+    KEY_C = bytes.fromhex("000102030405060708090a0b0c0d0e0f")
+    PT_C = bytes.fromhex("00112233445566778899aabbccddeeff")
+    CT_C = bytes.fromhex("69c4e0d86a7b0430d8cdb78070b4c55a")
+
+    def test_generated_sbox_matches_independent_search(self):
+        from repro.crypto.aes import sbox_tables
+        sbox, inv_sbox = sbox_tables()
+        ref = _ref_sbox()
+        np.testing.assert_array_equal(np.asarray(sbox), np.asarray(ref))
+        assert all(inv_sbox[sbox[v]] == v for v in range(256))
+        assert sbox[0x53] == 0xED  # FIPS-197 §5.1.1 worked example
+
+    def test_fips197_appendix_b_vector(self):
+        assert crypto.aes128_encrypt(self.KEY_B, self.PT_B) == self.CT_B
+
+    def test_fips197_appendix_c1_vector(self):
+        assert crypto.aes128_encrypt(self.KEY_C, self.PT_C) == self.CT_C
+
+    def test_fips197_round_vectors(self):
+        """Appendix B round-by-round: the published round-1 state plus
+        every later round against the independent reference."""
+        from repro.crypto import aes as aes_mod
+        want_final, ref_rounds = _ref_aes_encrypt_block(
+            self.KEY_B, self.PT_B, collect_rounds=True)
+        # Published FIPS-197 Appendix B round-1 output.
+        assert ref_rounds[0].hex() == "a49c7ff2689f352b6b5bea43026a5049"
+        # Drive the crossbar cipher one round at a time via its layers.
+        rks = aes_mod.key_expansion(self.KEY_B)
+        st = jnp.asarray(np.frombuffer(self.PT_B, np.uint8).astype(
+            np.int32)) ^ jnp.asarray(rks[0])
+        for rnd in range(1, 10):
+            st = crypto.sub_bytes(st)
+            st = crypto.shift_rows(st)
+            st = crypto.mix_columns(st)
+            st = st ^ jnp.asarray(rks[rnd])
+            assert bytes(np.asarray(st).astype(np.uint8)) == \
+                ref_rounds[rnd - 1], f"round {rnd}"
+        st = crypto.sub_bytes(st)
+        st = crypto.shift_rows(st)
+        st = st ^ jnp.asarray(rks[10])
+        assert bytes(np.asarray(st).astype(np.uint8)) == self.CT_B
+        assert want_final == self.CT_B
+
+    def test_matches_pure_python_reference_random_keys(self):
+        r = np.random.default_rng(0)
+        for _ in range(3):
+            key = bytes(r.integers(0, 256, 16).astype(np.uint8))
+            pt = bytes(r.integers(0, 256, 16).astype(np.uint8))
+            assert crypto.aes128_encrypt(key, pt) == \
+                _ref_aes_encrypt_block(key, pt)
+
+    @pytest.mark.parametrize("fuse_layers", [True, False])
+    def test_decrypt_roundtrips_and_matches(self, fuse_layers):
+        ct = crypto.aes128_encrypt(self.KEY_C, self.PT_C,
+                                   fuse_layers=fuse_layers)
+        assert ct == self.CT_C
+        assert crypto.aes128_decrypt(self.KEY_C, ct,
+                                     fuse_layers=fuse_layers) == self.PT_C
+
+    def test_batched_blocks_match_per_block(self):
+        r = np.random.default_rng(1)
+        data = bytes(r.integers(0, 256, 16 * 4).astype(np.uint8))
+        got = crypto.aes128_encrypt(self.KEY_B, data)
+        want = b"".join(crypto.aes128_encrypt(
+            self.KEY_B, data[16 * i:16 * (i + 1)]) for i in range(4))
+        assert got == want
+        assert crypto.aes128_decrypt(self.KEY_B, got) == data
+
+    def test_fused_pass_counts(self):
+        """Fused: 20 passes (2/round); chained: 29 (3/round + final 2).
+        MixColumns is exactly ONE crossbar pass per round either way."""
+        telemetry.reset()
+        with telemetry.delta() as d:
+            crypto.aes128_encrypt(self.KEY_B, self.PT_B)
+        assert d()["apply_calls"] == 20
+        with telemetry.delta() as d:
+            crypto.aes128_encrypt(self.KEY_B, self.PT_B, fuse_layers=False)
+        assert d()["apply_calls"] == 29
+
+    @pytest.mark.parametrize("backend", ["einsum", "sparse"])
+    def test_mix_columns_is_one_pass(self, backend):
+        """Acceptance: MixColumns = exactly one apply_plan call, on the
+        dense and the tile-skipping backend, telemetry-asserted under
+        the fixed-latency contract."""
+        state = jnp.asarray(np.random.default_rng(2).integers(0, 256, 16),
+                            jnp.int32)
+        crypto.mix_columns(state)  # ensure registration outside delta
+        telemetry.reset()
+        with telemetry.delta() as d:
+            out = crypto.mix_columns(state, backend=backend,
+                                     fixed_latency=True)
+        assert d()["apply_calls"] == 1
+        want = crypto.mix_columns(state, backend="reference")
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+    def test_mix_columns_fips_column_example(self):
+        """The §4.3 worked column: d4 bf 5d 30 -> 04 66 81 e5."""
+        state = jnp.asarray([0xd4, 0xbf, 0x5d, 0x30] + [0] * 12, jnp.int32)
+        out = np.asarray(crypto.mix_columns(state))
+        assert list(out[:4]) == [0x04, 0x66, 0x81, 0xe5]
+
+    def test_inv_mix_columns_inverts(self):
+        state = jnp.asarray(np.random.default_rng(3).integers(0, 256, 16),
+                            jnp.int32)
+        back = crypto.mix_columns(crypto.mix_columns(state), inverse=True)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(state))
+
+    def test_sub_bytes_is_one_static_pass(self):
+        state = jnp.asarray(np.random.default_rng(4).integers(0, 256, 16),
+                            jnp.int32)
+        telemetry.reset()
+        with telemetry.delta() as d:
+            out = crypto.sub_bytes(state)
+        assert d()["apply_calls"] == 1
+        sbox = np.asarray(_ref_sbox())
+        np.testing.assert_array_equal(np.asarray(out),
+                                      sbox[np.asarray(state)])
+        back = crypto.sub_bytes(out, inverse=True)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(state))
+
+    @pytest.mark.parametrize("backend", ALL_BACKENDS)
+    def test_all_backends_encrypt_identically(self, backend):
+        assert crypto.aes128_encrypt(self.KEY_C, self.PT_C,
+                                     backend=backend) == self.CT_C
+
+    @pytest.mark.parametrize("backend", ["einsum", "sparse"])
+    def test_encrypt_decrypt_vectors_on_dense_and_sparse(self, backend):
+        """Acceptance: FIPS-197 exact on the dense einsum path AND the
+        tile-skipping sparse path, both directions."""
+        assert crypto.aes128_encrypt(self.KEY_B, self.PT_B,
+                                     backend=backend) == self.CT_B
+        assert crypto.aes128_decrypt(self.KEY_B, self.CT_B,
+                                     backend=backend) == self.PT_B
+
+    def test_fixed_latency_contract_across_payloads(self):
+        """Same signature for any plaintext/key values; exactly one
+        signature recorded per (shape, backend) configuration."""
+        crypto.reset_observations()
+        r = np.random.default_rng(5)
+        for _ in range(3):
+            key = bytes(r.integers(0, 256, 16).astype(np.uint8))
+            pt = bytes(r.integers(0, 256, 16).astype(np.uint8))
+            crypto.aes128_encrypt(key, pt, fixed_latency=True)
+        sigs = [k for k in REGISTRY._observed
+                if k[0] == ("aes128", "encrypt", True)]
+        assert len(sigs) == 1
+        calls, prints = REGISTRY._observed[sigs[0]]
+        assert calls == 20
+
+    def test_round_function_passes_constant_time_audit(self):
+        """The whole fused encrypt state function abstract-traces with
+        the state as a tracer — no value-dependent host syncs."""
+        from repro.crypto import aes as aes_mod
+        aes_mod._ensure_plans(False, True)
+        rks = jnp.asarray(aes_mod.key_expansion(self.KEY_B))
+        REGISTRY.audit_constant_time(
+            "aes128-round", lambda s: aes_mod._cipher_state(
+                s, rks, inverse=False, fuse_layers=True,
+                backend="einsum", interpret=None),
+            jnp.zeros((16, 1), jnp.int32))
+
+    def test_fused_linear_plan_is_gf2_8_composition(self):
+        from repro.core.semiring import GF2_8
+        from repro.crypto import aes as aes_mod
+        plan = aes_mod.round_linear_plan()
+        assert plan.semiring is GF2_8
+        assert plan.k == 4  # MixColumns' 4 selects threaded through SR
+        # fused == sequential on a random state
+        state = jnp.asarray(np.random.default_rng(6).integers(0, 256, 16),
+                            jnp.int32)
+        seq = crypto.mix_columns(crypto.shift_rows(state))
+        got = xb.apply_plan(plan, state)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(seq))
+
+    def test_bad_lengths_rejected(self):
+        with pytest.raises(ValueError, match="key"):
+            crypto.aes128_encrypt(b"short", self.PT_B)
+        with pytest.raises(ValueError, match="multiple"):
+            crypto.aes128_encrypt(self.KEY_B, b"not a block")
+
+
+# ---------------------------------------------------------------------------
 # AES layers
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,499 @@
+"""Weight-semiring engine tests: GF(2)/GF(2^8) execution on every
+backend, semiring-aware plan algebra, cache-key isolation, the
+take-based einsum fast path, and the constant-time audit."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import crossbar as xb
+from repro.core import plan_algebra as pa
+from repro.core import telemetry
+from repro.core import semiring as sr
+from repro.core.semiring import GF2, GF2_8, REAL
+from repro.core.static_registry import (FixedLatencyError,
+                                        StaticPlanRegistry,
+                                        schedule_fingerprint)
+
+ALL_BACKENDS = ("einsum", "reference", "kernel", "sparse")
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def _rand_gf2_8_plan(seed, n, k, *, mode=xb.GATHER, oob=True):
+    r = _rng(seed)
+    lo = -3 if oob else 0
+    idx = jnp.asarray(r.integers(lo, n + (3 if oob else 0), (n, k)),
+                      jnp.int32)
+    w = jnp.asarray(r.integers(0, 256, (n, k)), jnp.int32)
+    if mode == xb.GATHER:
+        return xb.gather_plan(idx, n, weights=w, semiring=GF2_8)
+    return xb.scatter_plan(idx, n, weights=w, semiring=GF2_8)
+
+
+# ---------------------------------------------------------------------------
+# Field arithmetic
+# ---------------------------------------------------------------------------
+
+class TestGF28Arithmetic:
+    def test_fips197_worked_example(self):
+        """FIPS-197 §4.2: 57 * 83 = c1 and 57 * 13 = fe."""
+        assert int(sr.gf2_8_mul(np.int32(0x57), np.int32(0x83))) == 0xC1
+        assert int(sr.gf2_8_mul(np.int32(0x57), np.int32(0x13))) == 0xFE
+
+    def test_xtime_chain(self):
+        """FIPS-197 §4.2.1: xtime powers of 57: ae, 47, 8e, 07."""
+        v, want = np.int32(0x57), [0xAE, 0x47, 0x8E, 0x07]
+        for w in want:
+            v = sr.gf2_8_xtime(v)
+            assert int(v) == w
+
+    def test_mul_matches_on_jax_and_numpy(self):
+        r = _rng(1)
+        a = r.integers(0, 256, 64).astype(np.int32)
+        b = r.integers(0, 256, 64).astype(np.int32)
+        host = sr.gf2_8_mul(a, b)
+        dev = np.asarray(sr.gf2_8_mul(jnp.asarray(a), jnp.asarray(b)))
+        np.testing.assert_array_equal(host, dev)
+
+    def test_inverse(self):
+        for a in (1, 2, 0x53, 0xFF):
+            inv = sr.gf2_8_inv(a)
+            assert int(sr.gf2_8_mul(np.int32(a), np.int32(inv))) == 1
+        assert sr.gf2_8_inv(0) == 0
+
+    def test_bit_matrix_is_multiplication(self):
+        """T[w] @ bits(x) over GF(2) == bits(w * x) for random pairs."""
+        t = sr.gf2_8_bit_matrix_table()
+        r = _rng(2)
+        for w, x in r.integers(0, 256, (20, 2)):
+            xb_ = (x >> np.arange(8)) & 1
+            got = (t[w].astype(np.int64) @ xb_) % 2
+            want = (int(sr.gf2_8_mul(np.int32(w), np.int32(x)))
+                    >> np.arange(8)) & 1
+            np.testing.assert_array_equal(got, want)
+
+    def test_semiring_lookup(self):
+        assert sr.get("gf2_8") is GF2_8
+        assert sr.get("real") is REAL
+        with pytest.raises(ValueError, match="unknown semiring"):
+            sr.get("tropical")
+
+
+# ---------------------------------------------------------------------------
+# Backend differentials under finite-field semirings
+# ---------------------------------------------------------------------------
+
+class TestFiniteFieldBackends:
+    @pytest.mark.parametrize("backend", ALL_BACKENDS[1:])
+    def test_gf2_weighted_gather(self, backend):
+        r = _rng(3)
+        n = 40
+        plan = xb.gather_plan(
+            jnp.asarray(r.integers(-2, n + 2, (n, 3)), jnp.int32), n,
+            weights=jnp.asarray(r.integers(0, 2, (n, 3)), jnp.int32),
+            semiring=GF2)
+        x = jnp.asarray(r.integers(0, 2, (n, 5)), jnp.int32)
+        want = xb.apply_plan(plan, x, backend="einsum")
+        got = xb.apply_plan(plan, x, backend=backend)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("backend", ALL_BACKENDS[1:])
+    def test_gf2_8_weighted_gather(self, backend):
+        plan = _rand_gf2_8_plan(4, 24, 2)
+        x = jnp.asarray(_rng(5).integers(0, 256, (24, 3)), jnp.int32)
+        want = xb.apply_plan(plan, x, backend="einsum")
+        got = xb.apply_plan(plan, x, backend=backend)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("backend", ALL_BACKENDS[1:])
+    def test_gf2_8_injective_scatter(self, backend):
+        r = _rng(6)
+        n = 16
+        dest = jnp.asarray(r.permutation(n), jnp.int32)
+        w = jnp.asarray(r.integers(0, 256, n), jnp.int32)
+        plan = xb.scatter_plan(dest, n, weights=w, semiring=GF2_8)
+        x = jnp.asarray(r.integers(0, 256, (n, 2)), jnp.int32)
+        want = xb.apply_plan(plan, x, backend="einsum")
+        got = xb.apply_plan(plan, x, backend=backend)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("backend", ALL_BACKENDS[1:])
+    def test_gf2_8_non_injective_scatter(self, backend):
+        """Colliding destinations must XOR-accumulate identically on
+        every backend: the lift preserves scatter form (gather
+        normalisation would be wrong here)."""
+        plan = xb.scatter_plan(
+            jnp.asarray([[0], [0]], jnp.int32), 2,
+            weights=jnp.asarray([[1], [1]], jnp.int32), semiring=GF2_8)
+        x = jnp.asarray([[0x53], [0xCA]], jnp.int32)
+        want = xb.apply_plan(plan, x, backend="einsum")
+        assert int(want[0, 0]) == 0x53 ^ 0xCA
+        got = xb.apply_plan(plan, x, backend=backend)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        r = _rng(60)
+        p = xb.scatter_plan(
+            jnp.asarray(r.integers(-2, 12, (24, 2)), jnp.int32), 10,
+            weights=jnp.asarray(r.integers(0, 256, (24, 2)), jnp.int32),
+            semiring=GF2_8)
+        xx = jnp.asarray(r.integers(0, 256, (24, 3)), jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(xb.apply_plan(p, xx, backend=backend)),
+            np.asarray(xb.apply_plan(p, xx, backend="einsum")))
+
+    @pytest.mark.parametrize("backend", ALL_BACKENDS[1:])
+    def test_out_of_carrier_weights_and_payloads_agree(self, backend):
+        """Weights/payloads outside 0..255 fold into the carrier
+        identically on the reference oracle and every lowering."""
+        plan = xb.gather_plan(
+            jnp.asarray([[0], [1]], jnp.int32), 2,
+            weights=jnp.asarray([[300], [-1]], jnp.int32), semiring=GF2_8)
+        x = jnp.asarray([[7], [300]], jnp.int32)
+        want = xb.apply_plan(plan, x, backend="einsum")
+        got = xb.apply_plan(plan, x, backend=backend)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        expect = [int(sr.gf2_8_mul(np.int32(300 & 0xFF), np.int32(7))),
+                  int(sr.gf2_8_mul(np.int32(0xFF), np.int32(300 & 0xFF)))]
+        np.testing.assert_array_equal(np.asarray(want)[:, 0], expect)
+
+    def test_gf2_8_merge_and_mask(self):
+        plan = _rand_gf2_8_plan(7, 16, 2)
+        r = _rng(8)
+        x = jnp.asarray(r.integers(0, 256, (16, 2)), jnp.int32)
+        merge = jnp.asarray(r.integers(0, 256, (16, 2)), jnp.int32)
+        mask = jnp.asarray(r.integers(0, 2, 16).astype(bool))
+        want = xb.apply_plan(plan, x, merge=merge, out_mask=mask,
+                             backend="reference")
+        got = xb.apply_plan(plan, x, merge=merge, out_mask=mask,
+                            backend="einsum")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_gf2_xor_cancellation(self):
+        """Two selects of the same source with weight 1 cancel (XOR),
+        where REAL would double — the semirings genuinely differ."""
+        idx = jnp.asarray([[0, 0], [1, 2]], jnp.int32)
+        x = jnp.asarray([1, 1, 0], jnp.int32)
+        gf2 = xb.gather_plan(idx, 3, semiring=GF2)
+        real = xb.gather_plan(idx, 3)
+        assert int(xb.apply_plan(gf2, x)[0]) == 0
+        assert int(xb.apply_plan(real, x)[0]) == 2
+
+    def test_build_onehot_xor_accumulates(self):
+        idx = jnp.asarray([[0, 0]], jnp.int32)
+        p = xb.build_onehot(xb.gather_plan(idx, 2, semiring=GF2))
+        assert int(p[0, 0]) == 0  # 1 ^ 1, not 1 + 1
+        p8 = xb.build_onehot(xb.gather_plan(
+            idx, 2, weights=jnp.asarray([[3, 5]], jnp.int32),
+            semiring=GF2_8))
+        assert int(p8[0, 0]) == 3 ^ 5
+
+    def test_float_payload_rejected(self):
+        plan = _rand_gf2_8_plan(9, 8, 1)
+        with pytest.raises(ValueError, match="integer"):
+            xb.apply_plan(plan, jnp.zeros((8, 2), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Plan algebra over semirings
+# ---------------------------------------------------------------------------
+
+class TestSemiringAlgebra:
+    def test_compose_folds_weights_in_gf2_8(self):
+        p1 = _rand_gf2_8_plan(10, 12, 2)
+        p2 = _rand_gf2_8_plan(11, 12, 2)
+        x = jnp.asarray(_rng(12).integers(0, 256, (12, 2)), jnp.int32)
+        seq = xb.apply_plan(p2, xb.apply_plan(p1, x))
+        fused = xb.apply_plan(pa.compose(p2, p1), x)
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(seq))
+
+    def test_compose_neutral_permutation_adopts_field(self):
+        perm = xb.gather_plan(jnp.asarray([2, 0, 1, 3], jnp.int32), 4)
+        mc = _rand_gf2_8_plan(13, 4, 2, oob=False)
+        for comp, first, second in ((pa.compose(mc, perm), perm, mc),
+                                    (pa.compose(perm, mc), mc, perm)):
+            assert comp.semiring is GF2_8
+            x = jnp.asarray(_rng(14).integers(0, 256, 4), jnp.int32)
+            seq = xb.apply_plan(second, xb.apply_plan(first, x))
+            np.testing.assert_array_equal(
+                np.asarray(xb.apply_plan(comp, x)), np.asarray(seq))
+
+    def test_compose_semiring_mismatch_raises(self):
+        weighted_real = xb.gather_plan(
+            jnp.asarray([0, 1], jnp.int32), 2,
+            weights=jnp.asarray([2.0, 3.0]))
+        gf = xb.gather_plan(jnp.asarray([0, 1], jnp.int32), 2,
+                            weights=jnp.asarray([1, 1], jnp.int32),
+                            semiring=GF2_8)
+        with pytest.raises(ValueError, match="semiring mismatch"):
+            pa.compose(weighted_real, gf)
+
+    def test_block_diag_joins_and_batches(self):
+        plans = [_rand_gf2_8_plan(20 + i, 8, 2, oob=False) for i in range(3)]
+        big = pa.block_diag(plans)
+        assert big.semiring is GF2_8
+        x = jnp.asarray(_rng(15).integers(0, 256, (3, 8, 2)), jnp.int32)
+        rows = [np.asarray(xb.apply_plan(p, x[i]))
+                for i, p in enumerate(plans)]
+        got = np.asarray(xb.apply_plan(big, x.reshape(24, 2)))
+        np.testing.assert_array_equal(got, np.concatenate(rows, axis=0))
+
+    def test_batch_preserves_semiring(self):
+        p = _rand_gf2_8_plan(30, 6, 2, oob=False)
+        pb = pa.batch(p, 3)
+        assert pb.semiring is GF2_8
+        x = jnp.asarray(_rng(16).integers(0, 256, (3, 6)), jnp.int32)
+        loop = np.stack([np.asarray(xb.apply_plan(p, x[i]))
+                         for i in range(3)])
+        got = np.asarray(xb.apply_plan(pb, x.reshape(18))).reshape(3, 6)
+        np.testing.assert_array_equal(got, loop)
+
+    def test_transpose_and_to_gather_preserve_semiring(self):
+        p = _rand_gf2_8_plan(31, 8, 1, mode=xb.SCATTER, oob=False)
+        assert pa.transpose(p).semiring is GF2_8
+        assert pa.to_gather(p).semiring is GF2_8
+        assert pa.with_semiring(p, GF2).semiring is GF2
+
+    def test_with_weights_rebinds_semiring(self):
+        perm = xb.gather_plan(jnp.asarray([1, 0], jnp.int32), 2)
+        w = jnp.asarray([3, 2], jnp.int32)
+        p = pa.with_weights(perm, w, semiring=GF2_8)
+        assert p.semiring is GF2_8
+        x = jnp.asarray([0x10, 0x20], jnp.int32)
+        want = [int(sr.gf2_8_mul(np.int32(3), np.int32(0x20))),
+                int(sr.gf2_8_mul(np.int32(2), np.int32(0x10)))]
+        assert [int(v) for v in xb.apply_plan(p, x)] == want
+
+
+# ---------------------------------------------------------------------------
+# Cache-key isolation (the semiring-collision bugfix)
+# ---------------------------------------------------------------------------
+
+class TestSemiringCacheKeys:
+    def test_compile_cache_never_aliases_semirings(self):
+        """Identical idx/weight arrays under REAL vs GF2 must compile to
+        distinct cached schedules (the embedded plan differs)."""
+        idx = jnp.asarray([[0, 1], [1, 0]], jnp.int32)
+        w = jnp.asarray([[1, 1], [1, 1]], jnp.int32)
+        real = xb.PermutePlan(xb.GATHER, idx, 2, 2, w)
+        gf2 = xb.PermutePlan(xb.GATHER, idx, 2, 2, w, GF2)
+        c_real = xb.compile_plan(real)
+        c_gf2 = xb.compile_plan(gf2)
+        assert c_real is not c_gf2
+        assert c_real.plan.semiring is REAL
+        assert c_gf2.plan.semiring is GF2
+        # Cache hits keep resolving to the right entry in either order.
+        assert xb.compile_plan(gf2) is c_gf2
+        assert xb.compile_plan(real) is c_real
+
+    def test_pinned_cache_keys_semiring(self):
+        idx = jnp.asarray([0, 1, 2], jnp.int32)
+        real = xb.gather_plan(idx, 3)
+        gf2 = xb.gather_plan(idx, 3, semiring=GF2)
+        p_real = xb.compile_plan(real, pin=True)
+        p_gf2 = xb.compile_plan(gf2, pin=True)
+        assert p_real is not p_gf2
+        assert xb.compile_plan(gf2, pin=True) is p_gf2
+
+    def test_plan_memo_keys_semiring(self):
+        """to_gather of the same scatter arrays under different semirings
+        must return plans carrying their own semiring."""
+        dest = jnp.asarray([2, 0, 1], jnp.int32)
+        w = jnp.asarray([1, 1, 1], jnp.int32)
+        s_real = xb.scatter_plan(dest, 3, weights=w)
+        s_gf2 = xb.scatter_plan(dest, 3, weights=w, semiring=GF2)
+        g_real = pa.to_gather(s_real)
+        g_gf2 = pa.to_gather(s_gf2)
+        assert g_real.semiring is REAL
+        assert g_gf2.semiring is GF2
+        # memoisation still works per semiring
+        assert pa.to_gather(s_gf2) is g_gf2
+
+    def test_fingerprint_includes_semiring(self):
+        idx = jnp.asarray([0, 1], jnp.int32)
+        f_real = schedule_fingerprint(xb.gather_plan(idx, 2))
+        f_gf2 = schedule_fingerprint(xb.gather_plan(idx, 2, semiring=GF2))
+        assert f_real != f_gf2
+        assert "gf2" in f_gf2
+
+    def test_gf2_8_fingerprint_covers_executed_lift(self):
+        """The fixed-latency fingerprint of a GF2_8 plan must include
+        (and pin) the bit-lifted schedule the matmul backends actually
+        execute, not just the never-executed byte-level one."""
+        plan = _rand_gf2_8_plan(45, 16, 2, oob=False)
+        fp = schedule_fingerprint(plan)
+        lift_parts = [p for p in fp if isinstance(p, tuple)
+                      and p and p[0] == "lift"]
+        assert len(lift_parts) == 1
+        assert lift_parts[0][1:4] == (128, 128, 16)  # 8x rows, 8x selects
+        # the lifted schedule is pinned, immune to LRU churn
+        lifted = xb.lift_gf2_8(plan)
+        pinned = xb.compile_plan(lifted, pin=True)
+        for i in range(70):
+            idx = jnp.asarray((np.arange(64) + i) % 64, jnp.int32)
+            xb.compile_plan(xb.gather_plan(idx, 64))
+        assert xb.compile_plan(lifted) is pinned
+
+    def test_lift_cache_reuses_lifted_plan(self):
+        plan = _rand_gf2_8_plan(40, 8, 2)
+        x = jnp.asarray(_rng(41).integers(0, 256, (8, 2)), jnp.int32)
+        telemetry.reset()
+        xb.apply_plan(plan, x, backend="einsum")
+        misses = telemetry.snapshot()["lift_cache_misses"]
+        xb.apply_plan(plan, x, backend="einsum")
+        after = telemetry.snapshot()
+        assert after["lift_cache_misses"] == misses
+        assert after["lift_cache_hits"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Take-based einsum fast path
+# ---------------------------------------------------------------------------
+
+class TestTakeFastPath:
+    def _plan_and_x(self):
+        r = _rng(50)
+        idx = jnp.asarray(r.integers(-2, 34, 32), jnp.int32)  # incl. OOB
+        x = jnp.asarray(r.normal(size=(32, 3)), jnp.float32)
+        return xb.gather_plan(idx, 32), x
+
+    def test_matches_matmul_lowering(self):
+        plan, x = self._plan_and_x()
+        fast = xb.apply_plan(plan, x, backend="einsum")
+        xb.EINSUM_TAKE_FASTPATH = False
+        try:
+            slow = xb.apply_plan(plan, x, backend="einsum")
+        finally:
+            xb.EINSUM_TAKE_FASTPATH = True
+        np.testing.assert_allclose(np.asarray(fast), np.asarray(slow))
+
+    def test_applies_only_to_unweighted_k1_gathers(self):
+        plan, x = self._plan_and_x()
+        assert xb._take_fastpath(plan, x) is not None
+        weighted = pa.with_weights(plan, jnp.ones((32,)))
+        assert xb._take_fastpath(weighted, x) is None
+        scatter = xb.scatter_plan(plan.idx[:, 0], 32)
+        assert xb._take_fastpath(scatter, x) is None
+        multi = xb.gather_plan(jnp.tile(plan.idx, (1, 2)), 32)
+        assert xb._take_fastpath(multi, x) is None
+
+    def test_take_lowering_parity_folds_for_gf2(self):
+        """The two einsum lowerings must agree even for payloads outside
+        the {0,1} carrier: the matmul path parity-folds its single pick,
+        so the take path must too."""
+        plan = xb.gather_plan(jnp.asarray([0, 1, 2], jnp.int32), 3,
+                              semiring=GF2)
+        x = jnp.asarray([2, 3, 1], jnp.int32)  # out-of-carrier ints
+        fast = xb.apply_plan(plan, x, backend="einsum")
+        xb.EINSUM_TAKE_FASTPATH = False
+        try:
+            slow = xb.apply_plan(plan, x, backend="einsum")
+        finally:
+            xb.EINSUM_TAKE_FASTPATH = True
+        np.testing.assert_array_equal(np.asarray(fast), np.asarray(slow))
+        np.testing.assert_array_equal(np.asarray(fast), [0, 1, 1])
+
+    def test_take_lowering_carrier_folds_for_gf2_8(self):
+        """Out-of-carrier bytes fold to & 0xFF identically in the take
+        and bit-lift lowerings."""
+        plan = xb.gather_plan(jnp.asarray([0, 1], jnp.int32), 2,
+                              semiring=GF2_8)
+        x = jnp.asarray([300, 7], jnp.int32)
+        fast = xb.apply_plan(plan, x, backend="einsum")
+        xb.EINSUM_TAKE_FASTPATH = False
+        try:
+            slow = xb.apply_plan(plan, x, backend="einsum")
+        finally:
+            xb.EINSUM_TAKE_FASTPATH = True
+        np.testing.assert_array_equal(np.asarray(fast), np.asarray(slow))
+        np.testing.assert_array_equal(np.asarray(fast), [300 & 0xFF, 7])
+
+    def test_explicit_kernel_backends_bypass_take_path(self):
+        """backend='kernel'/'sparse' on an eligible GF2_8 plan must run
+        the requested Pallas path (via the lift), not jnp.take — the
+        schedule the fixed-latency contract pins is the one executed."""
+        plan = xb.gather_plan(jnp.asarray([1, 0], jnp.int32), 2,
+                              semiring=GF2_8)
+        x = jnp.asarray([[5], [9]], jnp.int32)
+        telemetry.reset()
+        xb.apply_plan(plan, x, backend="sparse")
+        # the lift ran (take would never touch the lift cache)
+        assert telemetry.snapshot()["lift_cache_misses"] >= 1
+
+    def test_traced_control_falls_back(self):
+        plan, x = self._plan_and_x()
+
+        @jax.jit
+        def go(idx, x):
+            p = xb.gather_plan(idx, 32)
+            assert xb._take_fastpath(p, x) is None  # traced idx
+            return xb.apply_plan(p, x)
+
+        out = go(plan.idx, x)
+        want = xb.apply_plan(plan, x, backend="reference")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-6)
+
+    def test_fast_path_under_jit_with_concrete_plan(self):
+        plan, x = self._plan_and_x()
+        out = jax.jit(lambda v: xb.apply_plan(plan, v))(x)
+        want = xb.apply_plan(plan, x, backend="reference")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Constant-time audit
+# ---------------------------------------------------------------------------
+
+class TestConstantTimeAudit:
+    def test_value_dependent_sync_trips(self):
+        reg = StaticPlanRegistry("unit-audit")
+
+        def leaky(x):
+            return x * int(jnp.sum(x))  # schedule depends on payload
+
+        with pytest.raises(FixedLatencyError, match="host sync"):
+            reg.audit_constant_time("leaky", leaky,
+                                    jnp.zeros(4, jnp.int32))
+
+    def test_value_dependent_branch_trips(self):
+        reg = StaticPlanRegistry("unit-audit")
+
+        def branchy(x):
+            if jnp.sum(x) > 0:  # bool() on payload
+                return x
+            return -x
+
+        with pytest.raises(FixedLatencyError, match="host sync"):
+            reg.audit_constant_time("branchy", branchy,
+                                    jnp.ones(4, jnp.int32))
+
+    def test_clean_crossbar_pass_passes(self):
+        reg = StaticPlanRegistry("unit-audit")
+        plan = xb.gather_plan(jnp.asarray([1, 0, 2], jnp.int32), 3)
+        out = reg.audit_constant_time(
+            "clean", lambda v: xb.apply_plan(plan, v),
+            jnp.zeros((3, 2), jnp.float32))
+        assert out.shape == (3, 2)
+
+    def test_crypto_round_functions_are_constant_time(self):
+        from repro.crypto import keccak as kk
+        reg = StaticPlanRegistry("unit-audit")
+        reg.audit_constant_time(
+            "keccak", lambda b: kk.keccak_f1600(b),
+            jnp.zeros(1600, jnp.int32))
+
+    def test_observe_audit_flag_converts_concretization(self):
+        reg = StaticPlanRegistry("unit-audit")
+        with pytest.raises(FixedLatencyError):
+            with reg.observe("concretize", audit_host_syncs=True):
+                jax.jit(lambda v: int(v))(jnp.int32(3))
+
+    def test_observe_without_audit_reraises_jax_errors(self):
+        reg = StaticPlanRegistry("unit-audit")
+        with pytest.raises(jax.errors.JAXTypeError):
+            with reg.observe("concretize-noaudit"):
+                jax.jit(lambda v: int(v))(jnp.int32(3))

@@ -1,0 +1,150 @@
+"""Hypothesis property sweeps for the weight-semiring algebra.
+
+Two layers of laws:
+
+* **element laws** — add/mul associativity, commutativity of add,
+  distributivity, and identities, checked directly on random carrier
+  arrays for REAL (ints — exact), GF2, and GF2_8;
+
+* **plan laws** — compose associativity and the compose/block_diag
+  weight folding agreeing element-for-element with sequential
+  application under every semiring, i.e. the operator-algebra
+  consequences of the element laws actually hold through the
+  gather-normalisation, DROP propagation, and weight-fold code paths.
+
+Deterministic smoke versions live in test_semiring.py; this module is
+the broad randomized sweep (importorskip-guarded like the other
+property suites)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import crossbar as xb
+from repro.core import plan_algebra as pa
+from repro.core import semiring as sr
+from repro.core.semiring import GF2, GF2_8, REAL
+
+SEMIRINGS = {"real": REAL, "gf2": GF2, "gf2_8": GF2_8}
+
+
+def _carrier(ring, rng, shape):
+    hi = {"real": 64, "gf2": 2, "gf2_8": 256}[ring]
+    return jnp.asarray(rng.integers(0, hi, shape), jnp.int32)
+
+
+def _plan(ring, rng, n, k, *, oob=True):
+    s = SEMIRINGS[ring]
+    lo = -2 if oob else 0
+    hi = n + 2 if oob else n
+    idx = jnp.asarray(rng.integers(lo, hi, (n, k)), jnp.int32)
+    w = _carrier(ring, rng, (n, k))
+    if s is REAL:
+        return xb.gather_plan(idx, n, weights=w.astype(jnp.float32))
+    return xb.gather_plan(idx, n, weights=w, semiring=s)
+
+
+class TestElementLaws:
+    @given(st.integers(0, 10_000), st.sampled_from(list(SEMIRINGS)))
+    @settings(max_examples=60, deadline=None)
+    def test_add_mul_assoc_comm_distrib(self, seed, ring):
+        s = SEMIRINGS[ring]
+        rng = np.random.default_rng(seed)
+        a, b, c = (_carrier(ring, rng, 16) for _ in range(3))
+        eq = np.testing.assert_array_equal
+        eq(np.asarray(s.add(s.add(a, b), c)),
+           np.asarray(s.add(a, s.add(b, c))))
+        eq(np.asarray(s.add(a, b)), np.asarray(s.add(b, a)))
+        eq(np.asarray(s.mul(s.mul(a, b), c)),
+           np.asarray(s.mul(a, s.mul(b, c))))
+        # distributivity: a*(b+c) == a*b + a*c
+        eq(np.asarray(s.mul(a, s.add(b, c))),
+           np.asarray(s.add(s.mul(a, b), s.mul(a, c))))
+
+    @given(st.integers(0, 10_000), st.sampled_from(list(SEMIRINGS)))
+    @settings(max_examples=30, deadline=None)
+    def test_identities(self, seed, ring):
+        s = SEMIRINGS[ring]
+        rng = np.random.default_rng(seed)
+        a = _carrier(ring, rng, 16)
+        zero = jnp.full_like(a, s.zero)
+        one = jnp.full_like(a, s.one)
+        np.testing.assert_array_equal(np.asarray(s.add(a, zero)),
+                                      np.asarray(a))
+        np.testing.assert_array_equal(np.asarray(s.mul(a, one)),
+                                      np.asarray(a))
+        np.testing.assert_array_equal(np.asarray(s.mul(a, zero)),
+                                      np.asarray(zero))
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=30, deadline=None)
+    def test_gf2_8_is_a_field(self, seed):
+        """Nonzero elements invert; mul is the FIPS xtime chain."""
+        rng = np.random.default_rng(seed)
+        a = int(rng.integers(1, 256))
+        inv = sr.gf2_8_inv(a)
+        assert int(sr.gf2_8_mul(np.int32(a), np.int32(inv))) == 1
+
+
+class TestPlanLaws:
+    @given(st.integers(0, 10_000), st.sampled_from(list(SEMIRINGS)),
+           st.sampled_from([6, 10, 16]))
+    @settings(max_examples=40, deadline=None)
+    def test_compose_matches_sequential(self, seed, ring, n):
+        rng = np.random.default_rng(seed)
+        p1 = _plan(ring, rng, n, int(rng.integers(1, 3)))
+        p2 = _plan(ring, rng, n, int(rng.integers(1, 3)))
+        x = _carrier(ring, rng, (n, 2))
+        seq = xb.apply_plan(p2, xb.apply_plan(p1, x))
+        fused = xb.apply_plan(pa.compose(p2, p1), x)
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(seq))
+
+    @given(st.integers(0, 10_000), st.sampled_from(list(SEMIRINGS)))
+    @settings(max_examples=25, deadline=None)
+    def test_compose_associativity(self, seed, ring):
+        """(p3∘p2)∘p1 == p3∘(p2∘p1) applied to payloads — the weight
+        fold respects mul-associativity and add-distributivity."""
+        rng = np.random.default_rng(seed)
+        n = 8
+        p1, p2, p3 = (_plan(ring, rng, n, int(rng.integers(1, 3)))
+                      for _ in range(3))
+        x = _carrier(ring, rng, (n, 2))
+        left = xb.apply_plan(pa.compose(pa.compose(p3, p2), p1), x)
+        right = xb.apply_plan(pa.compose(p3, pa.compose(p2, p1)), x)
+        np.testing.assert_array_equal(np.asarray(left), np.asarray(right))
+
+    @given(st.integers(0, 10_000), st.sampled_from(list(SEMIRINGS)),
+           st.integers(2, 4))
+    @settings(max_examples=25, deadline=None)
+    def test_block_diag_matches_per_row(self, seed, ring, b):
+        rng = np.random.default_rng(seed)
+        n = 8
+        plans = [_plan(ring, rng, n, int(rng.integers(1, 3)))
+                 for _ in range(b)]
+        big = pa.block_diag(plans)
+        x = _carrier(ring, rng, (b, n, 2))
+        rows = [np.asarray(xb.apply_plan(p, x[i]))
+                for i, p in enumerate(plans)]
+        got = np.asarray(xb.apply_plan(big, x.reshape(b * n, 2)))
+        np.testing.assert_array_equal(got, np.concatenate(rows, axis=0))
+
+    @given(st.integers(0, 10_000), st.sampled_from(["gf2", "gf2_8"]))
+    @settings(max_examples=25, deadline=None)
+    def test_neutral_identity_is_compose_unit(self, seed, ring):
+        """identity_plan (REAL-neutral) is a two-sided unit for
+        finite-field plans and never changes their semiring."""
+        rng = np.random.default_rng(seed)
+        n = 8
+        p = _plan(ring, rng, n, 2)
+        ident = pa.identity_plan(n)
+        x = _carrier(ring, rng, (n, 2))
+        want = np.asarray(xb.apply_plan(p, x))
+        for comp in (pa.compose(p, ident), pa.compose(ident, p)):
+            assert comp.semiring is SEMIRINGS[ring]
+            np.testing.assert_array_equal(
+                np.asarray(xb.apply_plan(comp, x)), want)
