@@ -53,10 +53,17 @@ from repro.core.plan_algebra import (
     with_semiring,
     with_weights,
 )
+from repro.core.plan_program import (
+    PlanProgram,
+    ProgramBuilder,
+    Step,
+    run_program,
+)
 from repro.core.semiring import GF2, GF2_8, REAL, Semiring
 from repro.core.static_registry import (
     FixedLatencyError,
     StaticPlanRegistry,
+    program_step_fingerprint,
     schedule_fingerprint,
 )
 from repro.core.bitwidth import bit_permute, from_bit_rows, to_bit_rows
@@ -75,8 +82,10 @@ __all__ = [
     "PlanExpr", "batch", "batched_gather_plan", "batched_scatter_plan",
     "block_diag", "compose", "compose_all", "identity_plan", "to_gather",
     "transpose", "with_semiring", "with_weights",
+    "PlanProgram", "ProgramBuilder", "Step", "run_program",
     "GF2", "GF2_8", "REAL", "Semiring",
-    "FixedLatencyError", "StaticPlanRegistry", "schedule_fingerprint",
+    "FixedLatencyError", "StaticPlanRegistry", "program_step_fingerprint",
+    "schedule_fingerprint",
     "bit_permute", "from_bit_rows", "to_bit_rows",
     "baselines", "moe_dispatch", "sequence", "telemetry",
 ]

@@ -478,19 +478,30 @@ def compile_plan(plan: PermutePlan, *, block_o: int = 128,
     return compiled
 
 
-# apply_plan invocation counter: the observable the plan algebra's
+# apply_plan invocation counters: the observable the plan algebra's
 # "K-deep chain == one crossbar pass" guarantee is asserted against
-# (core/telemetry.py aggregates it with the cache counters).
+# (core/telemetry.py aggregates it with the cache counters).  The total
+# is additionally split by *resolved* backend ('auto' counts under the
+# backend it picked): the plan-program megakernel's "passes avoided"
+# claim is only measurable if einsum passes and Pallas-kernel passes are
+# distinguishable — a megakernel launch must show up as zero of either.
 _APPLY_CALLS = 0
+_APPLY_CALLS_BY_BACKEND: "dict[str, int]" = {}
 
 
 def apply_call_count() -> int:
     return _APPLY_CALLS
 
 
+def apply_calls_by_backend() -> dict:
+    """Pass counts keyed by the backend that actually executed them."""
+    return dict(_APPLY_CALLS_BY_BACKEND)
+
+
 def reset_apply_call_count() -> None:
     global _APPLY_CALLS
     _APPLY_CALLS = 0
+    _APPLY_CALLS_BY_BACKEND.clear()
 
 
 def _canon_2d(x: Array) -> tuple[Array, tuple]:
@@ -579,6 +590,9 @@ def apply_plan(
 
     if backend == "auto":
         backend = _choose_backend(plan)
+    if backend in ("einsum", "kernel", "sparse", "reference"):
+        _APPLY_CALLS_BY_BACKEND[backend] = (
+            _APPLY_CALLS_BY_BACKEND.get(backend, 0) + 1)
 
     sr = plan.semiring
     if sr.integer_carrier and not (jnp.issubdtype(x2.dtype, jnp.integer)

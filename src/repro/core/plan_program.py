@@ -1,0 +1,562 @@
+"""Plan programs: whole permutation *schedules* as one compiled object.
+
+The plan algebra (``core.plan_algebra``) collapses a chain of pure
+permutations into one crossbar pass — but real permutation workloads
+are not pure chains.  A Keccak round is a linear crossbar pass *plus*
+branch-free XOR/AND arithmetic; a ChaCha double round interleaves lane
+rotations with 32-bit adds and word rotates.  Executed step-by-step,
+every round pays an HBM round-trip of the state between the crossbar
+pass and the elementwise arithmetic (23 avoidable trips per
+Keccak-f[1600], per the ROADMAP).
+
+``PlanProgram`` is the IR that closes that gap: an ordered sequence of
+
+* ``PERMUTE``   — a full crossbar pass of a static ``PermutePlan``
+                  (k-select gather, semiring accumulation: REAL add or
+                  GF(2) XOR),
+* ``XOR/AND/ANDN/ADD`` — branch-free elementwise steps between two
+                  registers (``ANDN`` is χ's ``(~a) & b``; ``ADD`` is
+                  the wrapping 32-bit add of ARX ciphers),
+* ``ROTLV``     — per-row bitwise rotate-left by a *static* amount
+                  vector (a constants-table row; rows that must not
+                  rotate carry amount 0),
+* ``XOR_CONST`` — XOR with a constants-table row broadcast over the
+                  payload (ι round constants, pre-scheduled keys),
+
+over a small register file of ``(n, D)`` state buffers.  All control
+information — plans, constants, rotation amounts, the step list itself
+— is concrete program data; payload values never influence which steps
+run (the fixed-latency property, now checkable for a whole *schedule*
+via ``StaticPlanRegistry.register_program`` / ``program_fingerprint``).
+
+Two executors share the IR:
+
+* ``backend='chained'`` — the reference lowering: one
+  ``crossbar.apply_plan`` call per PERMUTE step and XLA elementwise ops
+  between them (state bounces through HBM each step).  This is the
+  differential baseline and the pass-count ledger.
+* ``backend='megakernel'`` — ONE ``pl.pallas_call``
+  (``kernels.plan_program_kernel``): the state is loaded into VMEM
+  once, every step executes on the VMEM-resident registers (in-VMEM
+  gathers, integer-exact XOR folds), and the result is written back
+  once.  A Keccak-f[1600] is 24 rounds — 72 would-be crossbar passes —
+  in a single launch.
+
+Compiled megakernel executables are cached on (program identity,
+payload geometry, interpret mode); ``core.telemetry`` counts program
+launches and the crossbar passes they avoided, so "one launch per
+permutation" is assertable the same way "one pass per chain" is.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import OrderedDict
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import crossbar as xb
+from repro.core import plan_algebra as pa
+from repro.core.semiring import GF2, REAL
+
+Array = jax.Array
+
+# Step opcodes.  Kept as strings (not an enum) so step tuples print
+# readably in fingerprints and error messages.
+PERMUTE = "permute"      # dst = plans[plan] @ regs[a]
+XOR = "xor"              # dst = regs[a] ^ regs[b]
+AND = "and"              # dst = regs[a] & regs[b]
+ANDN = "andn"            # dst = (~regs[a]) & regs[b]     (χ's not-and)
+ADD = "add"              # dst = regs[a] + regs[b]        (wrapping)
+ROTLV = "rotlv"          # dst = rotl(regs[a], consts[const])  per-row
+XOR_CONST = "xor_const"  # dst = regs[a] ^ consts[const][:, None]
+
+_BINARY_OPS = (XOR, AND, ANDN, ADD)
+_CONST_OPS = (ROTLV, XOR_CONST)
+OPS = (PERMUTE,) + _BINARY_OPS + _CONST_OPS
+
+
+@dataclasses.dataclass(frozen=True)
+class Step:
+    """One program step.  ``a``/``b`` are register indices; ``plan`` and
+    ``const`` index the program's plan and constants tables."""
+
+    op: str
+    dst: int
+    a: int
+    b: int = -1
+    plan: int = -1
+    const: int = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanProgram:
+    """A validated, immutable schedule over ``n``-row states.
+
+    Attributes:
+      name:   diagnostic label (registry keys carry the real identity).
+      n:      state rows — every plan is an (n -> n) crossbar.
+      steps:  the ordered step tuple of ONE round.
+      plans:  plan table, gather-normal form, concrete control.
+      consts: (n_consts, n) int32 table (ι masks, rotation amounts);
+              None when no step references a constant.
+      n_regs: register-file size (register 0 is the state in/out).
+      rounds: trip count — the step tuple executes ``rounds`` times.
+              Round structure is *first-class* rather than unrolled:
+              the megakernel compiles one round body inside a
+              ``fori_loop`` (XLA-CPU's gather fusion is exponential in
+              unrolled multi-select gather chains — measured: 4
+              unrolled Keccak rounds already blow the compile budget),
+              and the trip count is part of the program's fingerprint.
+      const_stride: per-round advance of every constant reference —
+              step ``const`` reads row ``const + round * const_stride``
+              (stride 1 walks Keccak's 24 ι rows; stride 0 reuses
+              ChaCha's rotation-amount rows every round).
+    """
+
+    name: str
+    n: int
+    steps: Tuple[Step, ...]
+    plans: Tuple[xb.PermutePlan, ...]
+    consts: Optional[np.ndarray]
+    n_regs: int
+    rounds: int = 1
+    const_stride: int = 0
+
+    def __post_init__(self):
+        n_consts = 0 if self.consts is None else self.consts.shape[0]
+        if self.rounds < 1:
+            raise ValueError(f"rounds must be >= 1, got {self.rounds}")
+        for i, plan in enumerate(self.plans):
+            if plan.mode != xb.GATHER:
+                raise ValueError(
+                    f"program {self.name!r} plan slot {i} is in scatter "
+                    "form; gather-normalise with plan_algebra.to_gather "
+                    "before building the program")
+            if plan.n_in != self.n or plan.n_out != self.n:
+                raise ValueError(
+                    f"program {self.name!r} plan slot {i} is "
+                    f"{plan.n_in}->{plan.n_out}, not {self.n}->{self.n}: "
+                    "program plans must preserve the state geometry")
+            if plan.semiring not in (REAL, GF2):
+                raise ValueError(
+                    f"program {self.name!r} plan slot {i} uses semiring "
+                    f"{plan.semiring.name!r}; the megakernel's integer "
+                    "datapath executes REAL and GF2 plans only")
+            if isinstance(plan.idx, jax.core.Tracer) or isinstance(
+                    plan.weights, jax.core.Tracer):
+                raise ValueError(
+                    f"program {self.name!r} plan slot {i} has traced "
+                    "control; programs are static schedules")
+        for s, step in enumerate(self.steps):
+            if step.op not in OPS:
+                raise ValueError(f"step {s}: unknown op {step.op!r}")
+            regs = [step.dst, step.a] + (
+                [step.b] if step.op in _BINARY_OPS else [])
+            if not all(0 <= r < self.n_regs for r in regs):
+                raise ValueError(
+                    f"step {s} ({step.op}): register out of range "
+                    f"(n_regs={self.n_regs})")
+            if step.op == PERMUTE and not 0 <= step.plan < len(self.plans):
+                raise ValueError(f"step {s}: plan slot {step.plan} out of "
+                                 f"range ({len(self.plans)} plans)")
+            if step.op in _CONST_OPS:
+                last = step.const + (self.rounds - 1) * self.const_stride
+                if not (0 <= step.const < n_consts and 0 <= last < n_consts):
+                    raise ValueError(
+                        f"step {s} ({step.op}): const rows "
+                        f"[{step.const}, {last}] out of range ({n_consts} "
+                        f"rows, stride {self.const_stride} x "
+                        f"{self.rounds} rounds)")
+
+    @property
+    def passes(self) -> int:
+        """Crossbar passes a chained execution would issue (PERMUTE steps
+        per round times the trip count)."""
+        return self.rounds * sum(1 for s in self.steps if s.op == PERMUTE)
+
+    @property
+    def total_steps(self) -> int:
+        return self.rounds * len(self.steps)
+
+    @property
+    def uses_rotlv(self) -> bool:
+        return any(s.op == ROTLV for s in self.steps)
+
+    def unroll(self) -> "PlanProgram":
+        """The explicit single-trip form: every round's steps spelled out
+        with their constant references resolved.  Semantically identical;
+        used by the differential suite to truncate at arbitrary step
+        counts (``prefix``)."""
+        steps = []
+        for r in range(self.rounds):
+            off = r * self.const_stride
+            for s in self.steps:
+                steps.append(s if s.const < 0 else
+                             dataclasses.replace(s, const=s.const + off))
+        return PlanProgram(f"{self.name}[unrolled]", self.n, tuple(steps),
+                           self.plans, self.consts, self.n_regs)
+
+    def prefix(self, n_steps: int) -> "PlanProgram":
+        """The program truncated to its first ``n_steps`` steps.
+
+        Shares the plan and constants tables (and therefore their
+        compiled schedules); used by the differential suite to check
+        the megakernel against the chained path at every step count.
+        Only defined for single-trip programs — ``unroll()`` first.
+        """
+        if self.rounds != 1:
+            raise ValueError("prefix() needs a single-trip program; call "
+                             ".unroll() first")
+        if not 0 <= n_steps <= len(self.steps):
+            raise ValueError(f"prefix length {n_steps} out of range "
+                             f"(program has {len(self.steps)} steps)")
+        return PlanProgram(f"{self.name}[:{n_steps}]", self.n,
+                           self.steps[:n_steps], self.plans, self.consts,
+                           self.n_regs)
+
+
+class ProgramBuilder:
+    """Incremental ``PlanProgram`` construction with table dedup.
+
+    Plans are deduplicated by object identity (the plan algebra's memo
+    already makes recomposed plans identity-stable), constants by
+    value, so a 24-round loop referencing the same linear plan emits
+    one table entry.
+    """
+
+    def __init__(self, name: str, n: int, *, n_regs: int = 4):
+        self.name = name
+        self.n = n
+        self.n_regs = n_regs
+        self._steps: List[Step] = []
+        self._plans: List[xb.PermutePlan] = []
+        self._consts: List[np.ndarray] = []
+
+    def plan_slot(self, plan: xb.PermutePlan) -> int:
+        if plan.mode != xb.GATHER:
+            plan = pa.to_gather(plan)
+        for i, p in enumerate(self._plans):
+            if p is plan:
+                return i
+        self._plans.append(plan)
+        return len(self._plans) - 1
+
+    def const_slot(self, row) -> int:
+        row = np.asarray(row, np.int32).reshape(-1)
+        if row.shape[0] != self.n:
+            raise ValueError(f"const row has {row.shape[0]} entries, "
+                             f"state has {self.n} rows")
+        for i, c in enumerate(self._consts):
+            if np.array_equal(c, row):
+                return i
+        self._consts.append(row)
+        return len(self._consts) - 1
+
+    def permute(self, dst: int, a: int, plan: xb.PermutePlan) -> None:
+        self._steps.append(Step(PERMUTE, dst, a, plan=self.plan_slot(plan)))
+
+    def xor(self, dst: int, a: int, b: int) -> None:
+        self._steps.append(Step(XOR, dst, a, b))
+
+    def and_(self, dst: int, a: int, b: int) -> None:
+        self._steps.append(Step(AND, dst, a, b))
+
+    def andn(self, dst: int, a: int, b: int) -> None:
+        self._steps.append(Step(ANDN, dst, a, b))
+
+    def add(self, dst: int, a: int, b: int) -> None:
+        self._steps.append(Step(ADD, dst, a, b))
+
+    def rotlv(self, dst: int, a: int, amounts) -> None:
+        self._steps.append(
+            Step(ROTLV, dst, a, const=self.const_slot(amounts)))
+
+    def xor_const(self, dst: int, a: int, row) -> None:
+        self._steps.append(
+            Step(XOR_CONST, dst, a, const=self.const_slot(row)))
+
+    def xor_const_at(self, dst: int, a: int, slot: int) -> None:
+        """XOR with a pre-placed constant row (``add_const_rows``) — the
+        form strided per-round constants use."""
+        self._steps.append(Step(XOR_CONST, dst, a, const=slot))
+
+    def rotlv_at(self, dst: int, a: int, slot: int) -> None:
+        self._steps.append(Step(ROTLV, dst, a, const=slot))
+
+    def build(self, *, rounds: int = 1,
+              const_stride: int = 0) -> PlanProgram:
+        consts = (np.stack(self._consts).astype(np.int32)
+                  if self._consts else None)
+        return PlanProgram(self.name, self.n, tuple(self._steps),
+                           tuple(self._plans), consts, self.n_regs,
+                           rounds, const_stride)
+
+    def add_const_rows(self, rows) -> int:
+        """Append a block of constant rows verbatim (no dedup); returns
+        the first row's index.  Strided round constants (Keccak's 24 ι
+        rows) need their table order preserved exactly."""
+        rows = np.asarray(rows, np.int32)
+        if rows.ndim != 2 or rows.shape[1] != self.n:
+            raise ValueError(f"const block must be (rows, {self.n}), got "
+                             f"{rows.shape}")
+        base = len(self._consts)
+        self._consts.extend(rows)
+        return base
+
+
+# ---------------------------------------------------------------------------
+# Telemetry: program launches and the passes they replaced
+# ---------------------------------------------------------------------------
+
+_PROGRAM_LAUNCHES = 0
+_PASSES_AVOIDED = 0
+
+
+def program_launch_count() -> int:
+    return _PROGRAM_LAUNCHES
+
+
+def passes_avoided_count() -> int:
+    """Crossbar passes that would have been issued by chained execution
+    of every megakernel launch so far (the fusion ledger)."""
+    return _PASSES_AVOIDED
+
+
+def reset_program_counters() -> None:
+    global _PROGRAM_LAUNCHES, _PASSES_AVOIDED
+    _PROGRAM_LAUNCHES = 0
+    _PASSES_AVOIDED = 0
+
+
+# ---------------------------------------------------------------------------
+# Megakernel executable cache
+# ---------------------------------------------------------------------------
+# One compiled (jitted pallas_call closure) per (program identity,
+# padded payload geometry, dtype, interpret mode).  Entries hold a
+# strong reference to the program so ids cannot be recycled, mirroring
+# the CompiledPlan LRU contract.
+
+_EXEC_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
+_EXEC_CACHE_CAPACITY = 16
+_EXEC_STATS = {"hits": 0, "misses": 0}
+
+
+def program_cache_info() -> dict:
+    return dict(_EXEC_STATS, size=len(_EXEC_CACHE),
+                capacity=_EXEC_CACHE_CAPACITY)
+
+
+def clear_program_cache() -> None:
+    _EXEC_CACHE.clear()
+    _EXEC_STATS.update(hits=0, misses=0)
+
+
+def _pad_axis(x, mult, axis, value=0):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _plan_fold(plan: xb.PermutePlan) -> str:
+    return "xor" if plan.semiring is GF2 else "add"
+
+
+_OPCODE = {op: i for i, op in enumerate(OPS)}
+
+
+def encode_steps(program: PlanProgram) -> np.ndarray:
+    """One round's step stream as (n_steps, 6) int32 rows — the VM's
+    bytecode: (opcode, dst, a, b, plan, const).  Unused operand fields
+    are clamped to 0 so traced register/table indexing stays in range
+    (the dispatched branch never reads them)."""
+    rows = []
+    for s in program.steps:
+        rows.append((_OPCODE[s.op], s.dst, s.a, max(s.b, 0),
+                     max(s.plan, 0), max(s.const, 0)))
+    return np.asarray(rows, np.int32)
+
+
+def _build_exec(program: PlanProgram, n_pad: int, interpret: bool):
+    """Jitted megakernel closure for one (program, geometry) pair.
+
+    Control information is encoded once here: the step stream, the
+    DROP-padded plan tables stacked to a common k_max, the per-plan
+    semiring fold flags, and the (optionally strided) constants table.
+    """
+    from repro.kernels import plan_program_kernel as ppk  # lazy: kernels opt.
+
+    # The step-stream opcodes index the kernel's switch branch list;
+    # the two orderings must never drift apart.
+    assert ppk.OPCODES == OPS, (
+        f"kernel opcode table {ppk.OPCODES} drifted from the IR's op "
+        f"order {OPS}")
+
+    k_max = max((p.k for p in program.plans), default=1)
+    idx_stack, w_stack, folds = [], [], []
+    any_weighted = any(p.weights is not None for p in program.plans)
+    for plan in program.plans:
+        idx = np.asarray(plan.idx, np.int32)
+        idx = np.pad(idx, ((0, n_pad - idx.shape[0]),
+                           (0, k_max - idx.shape[1])),
+                     constant_values=pa.DROP)
+        idx_stack.append(idx)
+        folds.append(1 if _plan_fold(plan) == "xor" else 0)
+        if any_weighted:
+            w = (np.ones((plan.idx.shape[0], plan.k), np.int32)
+                 if plan.weights is None
+                 else np.asarray(plan.weights, np.int32))
+            w_stack.append(np.pad(w, ((0, n_pad - w.shape[0]),
+                                      (0, k_max - w.shape[1]))))
+    plan_tbl = jnp.asarray(
+        np.stack(idx_stack) if idx_stack
+        else np.zeros((1, n_pad, 1), np.int32))
+    folds_op = jnp.asarray(np.asarray(folds or [0], np.int32))
+    w_tbl = jnp.asarray(np.stack(w_stack)) if any_weighted else None
+    consts_np = (np.zeros((1, program.n), np.int32)
+                 if program.consts is None else program.consts)
+    consts_op = _pad_axis(jnp.asarray(consts_np, jnp.int32), n_pad, 1)
+    steps_op = jnp.asarray(encode_steps(program))
+
+    call = functools.partial(
+        ppk.plan_program_pallas,
+        n_valid=program.n, n_regs=program.n_regs, rounds=program.rounds,
+        const_stride=program.const_stride, interpret=interpret)
+
+    @jax.jit
+    def run(xp):
+        return call(xp, steps_op, plan_tbl, folds_op, w_tbl, consts_op)
+
+    return run
+
+
+def _run_megakernel(program: PlanProgram, x2: Array,
+                    interpret: Optional[bool]) -> Array:
+    global _PROGRAM_LAUNCHES, _PASSES_AVOIDED
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, d = x2.shape
+    n_pad = n + (-n) % 8
+    d_pad = d + (-d) % 128
+    key = (id(program), n_pad, d_pad, str(x2.dtype), bool(interpret))
+    hit = _EXEC_CACHE.get(key)
+    if hit is not None and hit[0] is program:
+        _EXEC_STATS["hits"] += 1
+        _EXEC_CACHE.move_to_end(key)
+        run = hit[1]
+    else:
+        _EXEC_STATS["misses"] += 1
+        run = _build_exec(program, n_pad, interpret)
+        _EXEC_CACHE[key] = (program, run)
+        while len(_EXEC_CACHE) > _EXEC_CACHE_CAPACITY:
+            _EXEC_CACHE.popitem(last=False)
+    _PROGRAM_LAUNCHES += 1
+    _PASSES_AVOIDED += program.passes
+    xp = _pad_axis(_pad_axis(x2, 8, 0), 128, 1)
+    return run(xp)[:n, :d]
+
+
+# ---------------------------------------------------------------------------
+# Chained reference executor
+# ---------------------------------------------------------------------------
+
+def _rotlv_host(v: Array, amt: Array) -> Array:
+    bits = jnp.iinfo(v.dtype).bits
+    a = amt.astype(v.dtype)[:, None]
+    return (v << a) | (v >> ((bits - a) & (bits - 1)))
+
+
+def _apply_pass(plan: xb.PermutePlan, v: Array, pass_backend: str,
+                interpret) -> Array:
+    # uint32 payloads (ARX words) bitcast around the pass: apply_plan's
+    # integer path accumulates in int32, and routing is bit-exact at any
+    # magnitude under the bitcast (never under a value cast).
+    if v.dtype == jnp.uint32:
+        vi = jax.lax.bitcast_convert_type(v, jnp.int32)
+        out = xb.apply_plan(plan, vi, backend=pass_backend,
+                            interpret=interpret)
+        return jax.lax.bitcast_convert_type(out, jnp.uint32)
+    return xb.apply_plan(plan, v, backend=pass_backend, interpret=interpret)
+
+
+def _run_chained(program: PlanProgram, x2: Array, pass_backend: str,
+                 interpret) -> Array:
+    regs = [x2] + [jnp.zeros_like(x2)
+                   for _ in range(program.n_regs - 1)]
+    consts = (None if program.consts is None
+              else jnp.asarray(program.consts, jnp.int32))
+    for r in range(program.rounds):
+        off = r * program.const_stride
+        for step in program.steps:
+            a = regs[step.a]
+            if step.op == PERMUTE:
+                val = _apply_pass(program.plans[step.plan], a, pass_backend,
+                                  interpret)
+            elif step.op == XOR:
+                val = a ^ regs[step.b]
+            elif step.op == AND:
+                val = a & regs[step.b]
+            elif step.op == ANDN:
+                val = ~a & regs[step.b]
+            elif step.op == ADD:
+                val = a + regs[step.b]
+            elif step.op == ROTLV:
+                val = _rotlv_host(a, consts[step.const + off])
+            else:  # XOR_CONST
+                val = a ^ consts[step.const + off].astype(a.dtype)[:, None]
+            regs[step.dst] = val
+    return regs[0]
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+def run_program(
+    program: PlanProgram,
+    x: Array,
+    *,
+    backend: str = "megakernel",
+    pass_backend: str = "einsum",
+    interpret: Optional[bool] = None,
+) -> Array:
+    """Execute a plan program over an ``(n,)`` or ``(n, D)`` payload.
+
+    Args:
+      backend: 'megakernel' (one VMEM-resident Pallas launch) or
+        'chained' (one ``apply_plan`` per PERMUTE step with XLA
+        elementwise between — the reference lowering and the
+        differential baseline).
+      pass_backend: crossbar backend for the chained lowering's passes.
+      interpret: Pallas interpret-mode override (megakernel); defaults
+        to interpret off-TPU like every other kernel wrapper.
+    Returns:
+      Register 0 after the last step, in the input's shape and dtype.
+    """
+    x = jnp.asarray(x)
+    single = x.ndim == 1
+    x2 = x[:, None] if single else x
+    if x2.ndim != 2 or x2.shape[0] != program.n:
+        raise ValueError(f"program {program.name!r} runs on ({program.n}, D) "
+                         f"states, got payload shape {x.shape}")
+    if not jnp.issubdtype(x2.dtype, jnp.integer):
+        raise ValueError(f"plan programs carry integer states, got "
+                         f"{x2.dtype}")
+    if program.uses_rotlv and not jnp.issubdtype(x2.dtype, jnp.unsignedinteger):
+        raise ValueError(
+            "ROTLV needs an unsigned payload (logical right shift); got "
+            f"{x2.dtype} — bitcast ARX states to uint32 first")
+    if backend == "megakernel":
+        out2 = _run_megakernel(program, x2, interpret)
+    elif backend == "chained":
+        out2 = _run_chained(program, x2, pass_backend, interpret)
+    else:
+        raise ValueError(f"unknown program backend {backend!r}")
+    return out2[:, 0] if single else out2

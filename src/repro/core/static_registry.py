@@ -25,6 +25,16 @@ Two pieces:
   (geometry, select count, occupied-tile count) of every plan it
   declares — is recorded on first execution for each (op, payload
   shapes, backend) key and must be bit-identical on every later call.
+
+Whole ``core.plan_program.PlanProgram`` schedules are first-class
+citizens of the same contract: ``register_program`` /
+``get_or_register_program`` hold them (pinning every referenced plan's
+tile schedule), ``program_fingerprint`` folds the per-step
+fingerprints *and the step order* into one value, and
+``observe(program_keys=..., expect_program_launches=...)`` extends the
+signature with megakernel launch counts — so fixed-latency drift
+detection covers the fused single-launch path exactly like the
+chained per-pass path.
   Payload values never enter the signature, so a violation means the
   implementation's schedule depends on data — exactly the bug class the
   paper's fixed-latency datapath exists to exclude.  Violations raise
@@ -40,6 +50,7 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
 import jax
 
 from repro.core import crossbar as xb
+from repro.core import plan_program as pp
 from repro.core import telemetry
 
 
@@ -84,12 +95,31 @@ def schedule_fingerprint(plan: xb.PermutePlan, *, block_o: int = 128,
     return fp
 
 
+def program_step_fingerprint(program: "pp.PlanProgram", step) -> tuple:
+    """Value-level identity of one program step.
+
+    PERMUTE steps carry their plan's full ``schedule_fingerprint`` (so
+    a re-tiled or re-weighted plan is a different step even at the same
+    slot); arithmetic steps are identified by opcode, register wiring,
+    and constant-row slot (row *contents* enter the program fingerprint
+    through the constants-table digest, which also covers the strided
+    rows a per-round constant walks).
+    """
+    if step.op == "permute":
+        return (step.op, step.dst, step.a,
+                schedule_fingerprint(program.plans[step.plan]))
+    if step.const >= 0:
+        return (step.op, step.dst, step.a, step.const)
+    return (step.op, step.dst, step.a, step.b)
+
+
 class StaticPlanRegistry:
     """Named static plans, compiled once, executed under a latency contract."""
 
     def __init__(self, name: str):
         self.name = name
         self._plans: Dict[str, xb.PermutePlan] = {}
+        self._programs: Dict[str, "pp.PlanProgram"] = {}
         self._observed: Dict[tuple, tuple] = {}
 
     # -- registration -------------------------------------------------------
@@ -173,8 +203,73 @@ class StaticPlanRegistry:
     def fingerprint(self, key: str) -> tuple:
         return schedule_fingerprint(self[key])
 
+    # -- whole-program registration ----------------------------------------
+
+    def register_program(self, key: str, program: "pp.PlanProgram", *,
+                         precompile: bool = True) -> "pp.PlanProgram":
+        """Register a static ``PlanProgram`` (double-register is an error).
+
+        The program's *plans* stay program-private (they are slots, not
+        registry keys), but every one of them gets its tile schedule
+        pinned, so the fused path's control information is as eviction-
+        proof as a registered plan's.
+        """
+        if key in self._programs:
+            raise ValueError(
+                f"program {key!r} already registered in {self.name!r}; "
+                "static programs are immutable — use a new key")
+        for i, plan in enumerate(program.plans):
+            _require_static(plan, f"{key}[plan {i}]")
+        self._programs[key] = program
+        if precompile:
+            with jax.ensure_compile_time_eval():
+                for plan in program.plans:
+                    xb.compile_plan(plan, pin=True)
+        return program
+
+    def get_or_register_program(self, key: str, builder: Callable, *,
+                                precompile: bool = True) -> "pp.PlanProgram":
+        """Idempotent program registration (build under compile-time eval,
+        like ``get_or_register`` — first touch inside jit stays concrete)."""
+        program = self._programs.get(key)
+        if program is None:
+            with jax.ensure_compile_time_eval():
+                built = builder()
+            program = self.register_program(key, built,
+                                            precompile=precompile)
+        return program
+
+    def program(self, key: str) -> "pp.PlanProgram":
+        try:
+            return self._programs[key]
+        except KeyError:
+            raise KeyError(
+                f"no program {key!r} in static registry {self.name!r} "
+                f"(registered: {sorted(self._programs)})") from None
+
+    def program_fingerprint(self, key: str) -> tuple:
+        """Value-level identity of a whole program's schedule.
+
+        Per-step fingerprints *in step order*, plus the trip count,
+        constant stride, and a digest of the constants table:
+        reordering two steps, swapping a plan's schedule, changing the
+        round count, or editing a constant row all change the
+        fingerprint — the program-level analogue of
+        ``schedule_fingerprint``, consumed by ``observe``.
+        """
+        import hashlib
+        program = self.program(key)
+        consts_digest = (None if program.consts is None else
+                         hashlib.sha256(
+                             program.consts.tobytes()).hexdigest()[:16])
+        return (program.n, program.n_regs, program.rounds,
+                program.const_stride, len(program.steps), consts_digest,
+                tuple(program_step_fingerprint(program, s)
+                      for s in program.steps))
+
     def info(self) -> dict:
         return {"name": self.name, "plans": len(self._plans),
+                "programs": len(self._programs),
                 "observed_signatures": len(self._observed)}
 
     # -- fixed-latency contract --------------------------------------------
@@ -187,7 +282,9 @@ class StaticPlanRegistry:
     def observe(self, name: Any, *, shapes: Sequence = (),
                 backend: Optional[str] = None,
                 plan_keys: Sequence[str] = (),
+                program_keys: Sequence[str] = (),
                 expect_apply_calls: Optional[int] = None,
+                expect_program_launches: Optional[int] = None,
                 audit_host_syncs: bool = False):
         """Assert the wrapped block's schedule signature is call-invariant.
 
@@ -199,6 +296,14 @@ class StaticPlanRegistry:
         ``expect_apply_calls`` additionally hard-checks the pass count
         (e.g. 24 for fused-ρπ Keccak-f[1600]: one crossbar pass per
         round).
+
+        ``program_keys`` declares registered ``PlanProgram``s executed
+        inside the block: their whole-program fingerprints — and the
+        megakernel launch count — join the signature, and
+        ``expect_program_launches`` hard-checks the latter (e.g. 1 for
+        a megakernel Keccak-f[1600], alongside
+        ``expect_apply_calls=0``: the fused path must issue *no*
+        per-pass crossbar calls at all).
 
         ``audit_host_syncs=True`` additionally forbids value-dependent
         host syncs inside the block: a disallowed device->host transfer
@@ -234,7 +339,19 @@ class StaticPlanRegistry:
             raise FixedLatencyError(
                 f"{self.name}:{name}: expected {expect_apply_calls} "
                 f"crossbar passes, executed {calls}")
+        launches = delta["program_launches"]
+        if (expect_program_launches is not None
+                and launches != expect_program_launches):
+            raise FixedLatencyError(
+                f"{self.name}:{name}: expected {expect_program_launches} "
+                f"program launches, executed {launches}")
         sig = (calls, tuple(self.fingerprint(k) for k in plan_keys))
+        if program_keys or expect_program_launches is not None:
+            # Extended only when programs are in play, so plan-only
+            # observers keep their recorded (calls, fingerprints) shape.
+            sig = sig + (launches,
+                         tuple(self.program_fingerprint(k)
+                               for k in program_keys))
         key = (name, tuple(shapes), backend)
         prev = self._observed.get(key)
         if prev is None:

@@ -14,6 +14,13 @@ One tiny aggregation point over three counter sources:
 * the GF(2^8) bit-lift memo (``crossbar.lift_cache_info``) — hits mean a
   finite-field plan reused its lifted GF(2) bit plan (and therefore its
   compiled schedule) instead of rebuilding it.
+* the plan-program megakernel (``core.plan_program``) — program
+  launches, the crossbar passes those launches replaced
+  (``program_passes_avoided``), and the compiled-executable cache.
+  ``apply_calls`` is additionally split by *resolved* backend
+  (einsum / kernel / sparse / reference), so "the megakernel issued one
+  launch and zero passes of any kind" is a checkable statement rather
+  than an inference from the total.
 
 ``no_host_sync()`` is the constant-time audit primitive: it turns any
 device->host transfer inside the block into a ``HostSyncError`` —
@@ -36,6 +43,11 @@ import jax
 
 from repro.core import crossbar as xb
 from repro.core import plan_algebra as pa
+from repro.core import plan_program as pp
+
+# Every apply_plan backend gets its own counter key even when zero, so
+# delta() consumers can subtract without get() defaults.
+_BACKENDS = ("einsum", "kernel", "sparse", "reference")
 
 
 class HostSyncError(RuntimeError):
@@ -47,7 +59,9 @@ def snapshot() -> dict:
     compile_info = xb.compile_cache_info()
     plan_info = pa.plan_cache_info()
     lift_info = xb.lift_cache_info()
-    return {
+    by_backend = xb.apply_calls_by_backend()
+    program_info = pp.program_cache_info()
+    out = {
         "apply_calls": xb.apply_call_count(),
         "compile_cache_hits": compile_info["hits"],
         "compile_cache_misses": compile_info["misses"],
@@ -58,7 +72,15 @@ def snapshot() -> dict:
         "lift_cache_hits": lift_info["hits"],
         "lift_cache_misses": lift_info["misses"],
         "lift_cache_size": lift_info["size"],
+        "program_launches": pp.program_launch_count(),
+        "program_passes_avoided": pp.passes_avoided_count(),
+        "program_cache_hits": program_info["hits"],
+        "program_cache_misses": program_info["misses"],
+        "program_cache_size": program_info["size"],
     }
+    for b in _BACKENDS:
+        out[f"apply_calls_{b}"] = by_backend.get(b, 0)
+    return out
 
 
 def reset() -> None:
@@ -67,6 +89,8 @@ def reset() -> None:
     xb.reset_apply_call_count()
     xb.clear_lift_cache()
     pa.clear_plan_cache()
+    pp.reset_program_counters()
+    pp.clear_program_cache()
 
 
 @contextlib.contextmanager

@@ -49,6 +49,8 @@ from repro.crypto.chacha import (
 )
 from repro.crypto.aes_layers import inv_shift_rows, shift_rows
 from repro.crypto.aes import (
+    aes128_ctr_keystream,
+    aes128_ctr_xor,
     aes128_decrypt,
     aes128_encrypt,
     key_expansion,
@@ -68,6 +70,7 @@ __all__ = [
     "sha3_256", "sha3_256_batched", "sha3_512", "shake_128", "shake_256",
     "chacha20_block", "chacha20_blocks", "chacha20_encrypt",
     "inv_shift_rows", "shift_rows",
+    "aes128_ctr_keystream", "aes128_ctr_xor",
     "aes128_decrypt", "aes128_encrypt", "key_expansion", "mix_columns",
     "sub_bytes",
     "BitPermutation", "bit_reversal", "present_player",

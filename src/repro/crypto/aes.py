@@ -41,6 +41,14 @@ latency data path.
 chained) no matter how many blocks ride along.  Raw block-function
 application (ECB) — a primitive for tests/benchmarks, not an
 authenticated encryption mode.
+
+``aes128_ctr_keystream`` / ``aes128_ctr_xor`` turn that primitive into
+an actual encryption mode (NIST SP 800-38A CTR): the counter blocks
+are generated host-side (128-bit big-endian increment — counter
+agility is control information, like the key schedule) and ALL of them
+encrypt as one payload-width batch — B counter blocks cost exactly the
+same 20 fused passes as one, which is the whole point of carrying
+blocks as element width on the crossbar.
 """
 
 from __future__ import annotations
@@ -396,3 +404,53 @@ def aes128_decrypt(key: bytes, ciphertext: bytes, *,
     return _run_cipher(key, ciphertext, inverse=True, backend=backend,
                        fuse_layers=fuse_layers, fixed_latency=fixed_latency,
                        interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# CTR mode (NIST SP 800-38A §6.5)
+# ---------------------------------------------------------------------------
+
+def _ctr_blocks(iv: bytes, n_blocks: int) -> bytes:
+    """``n_blocks`` consecutive counter blocks from ``iv`` (the standard
+    128-bit big-endian increment, wrapping mod 2^128)."""
+    if len(iv) != STATE_BYTES:
+        raise ValueError(f"CTR initial counter block must be "
+                         f"{STATE_BYTES} bytes, got {len(iv)}")
+    if n_blocks < 1:
+        raise ValueError(f"need at least one counter block, got {n_blocks}")
+    base = int.from_bytes(iv, "big")
+    return b"".join(
+        ((base + i) % (1 << 128)).to_bytes(STATE_BYTES, "big")
+        for i in range(n_blocks))
+
+
+def aes128_ctr_keystream(key: bytes, iv: bytes, n_blocks: int, *,
+                         backend: str = "einsum",
+                         fuse_layers: bool = True,
+                         fixed_latency: bool = False,
+                         interpret: Optional[bool] = None) -> bytes:
+    """``n_blocks * 16`` keystream bytes: one batched block-function call.
+
+    The B counter blocks ride as payload width of the (16, B) state, so
+    the keystream costs the constant fused pass count regardless of B —
+    the "AES counter-mode throughput" shape the ROADMAP asked for.
+    """
+    return aes128_encrypt(key, _ctr_blocks(iv, n_blocks), backend=backend,
+                          fuse_layers=fuse_layers,
+                          fixed_latency=fixed_latency, interpret=interpret)
+
+
+def aes128_ctr_xor(key: bytes, iv: bytes, data: bytes, *,
+                   backend: str = "einsum", fuse_layers: bool = True,
+                   fixed_latency: bool = False,
+                   interpret: Optional[bool] = None) -> bytes:
+    """CTR encrypt/decrypt (the same XOR both ways, any data length)."""
+    if not data:
+        return b""
+    n_blocks = -(-len(data) // STATE_BYTES)
+    ks = aes128_ctr_keystream(key, iv, n_blocks, backend=backend,
+                              fuse_layers=fuse_layers,
+                              fixed_latency=fixed_latency,
+                              interpret=interpret)
+    buf = np.frombuffer(data, np.uint8)
+    return (buf ^ np.frombuffer(ks, np.uint8)[:len(buf)]).tobytes()

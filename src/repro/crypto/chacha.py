@@ -20,6 +20,15 @@ width of the single-block plan.
 Words stay ``uint32`` for the wrapping arithmetic and are bitcast to
 ``int32`` around each crossbar pass (the einsum backend's integer path
 accumulates in int32, so routing is bit-exact at any magnitude).
+
+``backend="megakernel"`` expresses the whole block function as one
+``core.plan_program`` schedule — a 42-step double round (the
+quarter-round's adds/xors/word-rotates as ADD/XOR/ROTLV steps, its
+operand alignment and the (un)diagonalisation as routing plans)
+executed 10 times inside ONE VMEM-resident Pallas launch
+(``kernels.plan_program_kernel``): the ARX demonstration that the
+program IR is not Keccak-shaped.  One kernel launch, zero per-pass
+``apply_plan`` calls, B counter blocks as payload width.
 """
 
 from __future__ import annotations
@@ -32,6 +41,7 @@ import numpy as np
 
 from repro.core import crossbar as xb
 from repro.core import plan_algebra as pa
+from repro.core import plan_program as ppr
 from repro.crypto.registry import REGISTRY
 
 Array = jax.Array
@@ -57,6 +67,82 @@ def diag_plan() -> xb.PermutePlan:
 def undiag_plan() -> xb.PermutePlan:
     return REGISTRY.get_or_register(
         "chacha/undiag", lambda: pa.transpose(diag_plan()))
+
+
+# ---------------------------------------------------------------------------
+# The megakernel program: 10 double rounds as one VMEM-resident schedule
+# ---------------------------------------------------------------------------
+
+MEGAKERNEL_PROGRAM_KEY = "chacha/block_program"
+
+# Quarter-round operand alignment as routing plans: ``x op= y`` over the
+# four vectorised lanes is "gather y's rows onto x's rows (DROP
+# elsewhere, contributing the operand identity), then one elementwise
+# step".  Row blocks: a=0..3, b=4..7, c=8..11, d=12..15.
+_QR_MAPS = {
+    "qr_b_to_a": (0, 4),     # a += b : rows 0..3  <- rows 4..7
+    "qr_a_to_d": (12, 0),    # d ^= a : rows 12..15 <- rows 0..3
+    "qr_d_to_c": (8, 12),    # c += d : rows 8..11 <- rows 12..15
+    "qr_c_to_b": (4, 8),     # b ^= c : rows 4..7  <- rows 8..11
+}
+
+
+def _qr_map_plan(key: str) -> xb.PermutePlan:
+    dst0, src0 = _QR_MAPS[key]
+
+    def build():
+        src = np.full(_WORDS, pa.DROP, np.int32)
+        src[dst0:dst0 + 4] = np.arange(src0, src0 + 4)
+        return xb.gather_plan(jnp.asarray(src), _WORDS)
+
+    return REGISTRY.get_or_register(f"chacha/{key}", build)
+
+
+def _rot_amounts(rows: range, amount: int) -> np.ndarray:
+    amt = np.zeros(_WORDS, np.int32)
+    amt[list(rows)] = amount
+    return amt
+
+
+def _build_megakernel_program() -> ppr.PlanProgram:
+    """The ChaCha20 rounds as a 42-step double round x 10 trips.
+
+    Each ``x op= y; x <<<= r`` of the vectorised quarter-round is a
+    routing gather (operand alignment), the elementwise ADD/XOR, and a
+    per-row ROTLV whose amount vector is non-zero only on x's rows —
+    every row either rotates by the RFC constant or by 0 (identity),
+    so the step stays one fixed-shape vector op.
+    """
+    b = ppr.ProgramBuilder("chacha20_block", _WORDS, n_regs=2)
+    b2a = _qr_map_plan("qr_b_to_a")
+    a2d = _qr_map_plan("qr_a_to_d")
+    d2c = _qr_map_plan("qr_d_to_c")
+    c2b = _qr_map_plan("qr_c_to_b")
+    d_rows, b_rows = range(12, 16), range(4, 8)
+
+    def column_round():
+        for rot_d, rot_b in ((16, 12), (8, 7)):
+            b.permute(1, 0, b2a)
+            b.add(0, 0, 1)                             # a += b
+            b.permute(1, 0, a2d)
+            b.xor(0, 0, 1)                             # d ^= a
+            b.rotlv(0, 0, _rot_amounts(d_rows, rot_d))
+            b.permute(1, 0, d2c)
+            b.add(0, 0, 1)                             # c += d
+            b.permute(1, 0, c2b)
+            b.xor(0, 0, 1)                             # b ^= c
+            b.rotlv(0, 0, _rot_amounts(b_rows, rot_b))
+
+    column_round()
+    b.permute(0, 0, diag_plan())
+    column_round()
+    b.permute(0, 0, undiag_plan())
+    return b.build(rounds=_DOUBLE_ROUNDS)
+
+
+def megakernel_program() -> ppr.PlanProgram:
+    return REGISTRY.get_or_register_program(
+        MEGAKERNEL_PROGRAM_KEY, _build_megakernel_program)
 
 
 def _rotl(x: Array, n: int) -> Array:
@@ -104,6 +190,28 @@ def _chacha_core(
 ) -> Array:
     """20 rounds + feed-forward on (B, 16) uint32 states."""
     b = states.shape[0]
+
+    if backend == "megakernel":
+        # The whole block function as ONE program launch: B counter
+        # blocks ride as payload width of the (16, B) word matrix, and
+        # the feed-forward is the only arithmetic outside the kernel.
+        program = megakernel_program()
+
+        def run_fused() -> Array:
+            out = ppr.run_program(program, states.T, backend="megakernel",
+                                  interpret=interpret)
+            return out.T + states
+
+        if not fixed_latency:
+            return run_fused()
+        with REGISTRY.observe(
+                ("chacha20", "megakernel"),
+                shapes=(tuple(states.shape), str(states.dtype)),
+                backend=backend, program_keys=(MEGAKERNEL_PROGRAM_KEY,),
+                expect_apply_calls=0, expect_program_launches=1):
+            out = run_fused()
+        return out
+
     use_block_diag = batch_mode == "block_diag" and b > 1
     diag_plan(), undiag_plan()  # ensure the base plans are registered
     width = b if use_block_diag else 1

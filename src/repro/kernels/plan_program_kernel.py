@@ -1,0 +1,183 @@
+"""Pallas megakernel: execute a whole ``PlanProgram`` in one launch.
+
+The per-pass kernels (``crossbar_permute.py``) rebuild a one-hot tile
+per grid step and contract on the MXU — ideal when one pass is the
+whole workload.  A crypto permutation is the opposite regime: dozens of
+*small* passes (1600-row Keccak states, 16-word ChaCha states)
+interleaved with elementwise arithmetic, where the cost is not the
+FLOPs but the HBM round-trip of the state between every step.
+
+This kernel inverts the loop: the state is DMA'd into VMEM **once**, a
+register file of ``(n, D)`` buffers lives entirely on-chip, and the
+program executes as a **bytecode VM** over the resident registers:
+
+* the step stream (opcode, register wiring, plan/const slot — all
+  int32 rows) rides along as control operands, exactly like the sparse
+  kernel's scalar-prefetched schedule;
+* a ``lax.scan`` walks one round's steps, dispatching each through a
+  ``lax.switch`` whose branches implement the seven ops (in-VMEM
+  k-select gather-fold for PERMUTE — integer XOR for GF(2), so bit
+  states never touch the f32 datapath and the MXU's 2^24 exactness
+  bound does not apply; VPU elementwise for the rest);
+* a ``fori_loop`` supplies the trip count, with per-round constants
+  indexed as ``const + round * const_stride``;
+* the result is written back once at the end.
+
+The VM structure is not a stylistic choice: each op's body is compiled
+exactly once no matter how many steps or rounds the program has.  The
+obvious alternative — unrolling the steps at trace time — hands XLA a
+deep chain of fan-out gathers whose fusion cost grows *exponentially*
+(measured on CPU: 4 unrolled Keccak rounds blow a minutes-long compile
+budget that the VM covers in under a second, `optimization_barrier`
+notwithstanding).  It is also the better fixed-latency story: every
+step runs the same dispatch code, so the launch's schedule is a
+function of the program stream alone and never of payload values —
+every branch of the switch is fixed-shape, and the switch index is
+program data.
+
+Plan tables are stacked to a common select width ``k_max`` (DROP-padded
+columns select nothing), so PERMUTE is one uniform branch; everything
+here targets states of a few thousand rows at payload widths up to a
+few hundred lanes — (1600, 128) int32 is 800 KB, far under VMEM — so a
+single un-gridded launch with whole-array operands is the right shape.
+Wider payloads shard lanes *outside* the kernel (they are independent
+by construction).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DROP = -1
+
+# Opcode numbering: the switch branch list below is BUILT from this
+# tuple, and core.plan_program's step-stream encoder asserts its OPS
+# order matches it — insert or reorder an op in one place without the
+# other and programs fail loudly at build time, never silently.
+OPCODES = ("permute", "xor", "and", "andn", "add", "rotlv", "xor_const")
+
+
+def _rotlv(v, amt):
+    """Per-row rotate-left; amount 0 is the identity (the masked ``&``
+    keeps the ``v >> bits`` shift out of UB territory at amt == 0)."""
+    bits = jnp.iinfo(v.dtype).bits
+    a = amt.astype(v.dtype)[:, None]
+    return (v << a) | (v >> ((bits - a) & (bits - 1)))
+
+
+def _kernel(state_ref, steps_ref, plans_ref, folds_ref, w_ref, consts_ref,
+            out_ref, *, n_valid, n_regs, k_max, rounds, const_stride,
+            weighted):
+    """The VM: fori_loop(rounds) { scan(steps) { switch(op) } }."""
+    state = state_ref[...]
+    steps = steps_ref[...]          # (n_steps, 6) int32 rows
+    plan_tbl = plans_ref[...]       # (n_plans, n_pad, k_max)
+    folds = folds_ref[...]          # (n_plans,) 1 = GF(2) XOR fold
+    w_tbl = w_ref[...] if weighted else None
+    consts = consts_ref[...]        # (n_consts, n_pad)
+
+    def round_body(rnd, regs):
+        def step_fn(regs, s):
+            op, dst, a, b, p, c = (s[0], s[1], s[2], s[3], s[4], s[5])
+            av = jax.lax.dynamic_index_in_dim(regs, a, 0, keepdims=False)
+            bv = jax.lax.dynamic_index_in_dim(regs, b, 0, keepdims=False)
+
+            def const_row():
+                return jax.lax.dynamic_index_in_dim(
+                    consts, c + rnd * const_stride, 0, keepdims=False)
+
+            def f_permute(_):
+                idx = jax.lax.dynamic_index_in_dim(plan_tbl, p, 0,
+                                                   keepdims=False)
+                w = (jax.lax.dynamic_index_in_dim(w_tbl, p, 0,
+                                                  keepdims=False)
+                     if weighted else None)
+                acc_add = acc_xor = None
+                for j in range(k_max):
+                    src = idx[:, j]
+                    valid = (src >= 0) & (src < n_valid)
+                    g = jnp.take(av, jnp.clip(src, 0, n_valid - 1),
+                                 axis=0)
+                    if w is not None:
+                        g = g * w[:, j][:, None].astype(g.dtype)
+                    g = jnp.where(valid[:, None], g, jnp.zeros_like(g))
+                    acc_add = g if acc_add is None else acc_add + g
+                    # GF(2) accumulates in the carrier: gathered values
+                    # fold to bit 0 (out-of-carrier payloads land where
+                    # apply_plan's ``sum & 1`` puts them), XOR = parity.
+                    gm = g & jnp.ones_like(g)
+                    acc_xor = gm if acc_xor is None else acc_xor ^ gm
+                is_xor = jax.lax.dynamic_index_in_dim(folds, p, 0,
+                                                      keepdims=False)
+                return jnp.where(is_xor != 0, acc_xor, acc_add)
+
+            dispatch = {
+                "permute": f_permute,
+                "xor": lambda _: av ^ bv,
+                "and": lambda _: av & bv,
+                "andn": lambda _: ~av & bv,
+                "add": lambda _: av + bv,
+                "rotlv": lambda _: _rotlv(av, const_row()),
+                "xor_const":
+                    lambda _: av ^ const_row().astype(av.dtype)[:, None],
+            }
+            val = jax.lax.switch(op, [dispatch[o] for o in OPCODES], None)
+            regs = jax.lax.dynamic_update_index_in_dim(regs, val, dst, 0)
+            return regs, None
+
+        regs, _ = jax.lax.scan(step_fn, regs, steps)
+        return regs
+
+    regs = jnp.concatenate(
+        [state[None], jnp.zeros((n_regs - 1,) + state.shape, state.dtype)],
+        axis=0)
+    if rounds == 1:
+        regs = round_body(0, regs)
+    else:
+        regs = jax.lax.fori_loop(0, rounds, round_body, regs)
+    out_ref[...] = regs[0]
+
+
+def plan_program_pallas(
+    state: jax.Array,
+    steps: jax.Array,
+    plan_tbl: jax.Array,
+    folds: jax.Array,
+    w_tbl: jax.Array | None,
+    consts: jax.Array,
+    *,
+    n_valid: int,
+    n_regs: int,
+    rounds: int = 1,
+    const_stride: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw megakernel entry; operands must already be row/lane padded.
+
+    state: (n_pad, d_pad); steps: (n_steps, 6) int32 rows of
+    (opcode, dst, a, b, plan, const) — one round's stream; plan_tbl:
+    (n_plans, n_pad, k_max) int32 stacked gather tables (pad rows and
+    pad columns DROP); folds: (n_plans,) int32, 1 for GF(2) XOR
+    accumulation; w_tbl: like plan_tbl for weighted programs or None;
+    consts: (n_consts, n_pad) int32 (a 1-row zero table when unused).
+    Returns (n_pad, d_pad) in state.dtype.
+    """
+    kernel = functools.partial(
+        _kernel, n_valid=n_valid, n_regs=n_regs,
+        k_max=plan_tbl.shape[-1], rounds=rounds,
+        const_stride=const_stride, weighted=w_tbl is not None)
+    # Keep the kernel signature fixed: an unweighted program passes a
+    # (n_plans, 1, 1) placeholder the kernel never reads.
+    operands = [state, steps, plan_tbl, folds,
+                (jnp.zeros((plan_tbl.shape[0], 1, 1), jnp.int32)
+                 if w_tbl is None else w_tbl),
+                consts]
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(state.shape, state.dtype),
+        interpret=interpret,
+    )(*operands)

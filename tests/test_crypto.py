@@ -701,3 +701,60 @@ class TestBitPerm:
             kops.unpack_bits(jnp.zeros(4, jnp.float32), 4)
         with pytest.raises(ValueError, match="multiple"):
             kops.pack_bits(jnp.zeros(10, jnp.int32), 4)
+
+
+# ---------------------------------------------------------------------------
+# AES-CTR mode (NIST SP 800-38A)
+# ---------------------------------------------------------------------------
+
+class TestAESCTR:
+    # SP 800-38A F.5.1/F.5.2 (CTR-AES128): same keystream both ways.
+    KEY = bytes.fromhex("2b7e151628aed2a6abf7158809cf4f3c")
+    IV = bytes.fromhex("f0f1f2f3f4f5f6f7f8f9fafbfcfdfeff")
+    PT = bytes.fromhex(
+        "6bc1bee22e409f96e93d7e117393172a"
+        "ae2d8a571e03ac9c9eb76fac45af8e51"
+        "30c81c46a35ce411e5fbc1191a0a52ef"
+        "f69f2445df4f9b17ad2b417be66c3710")
+    CT = bytes.fromhex(
+        "874d6191b620e3261bef6864990db6ce"
+        "9806f66b7970fdff8617187bb9fffdff"
+        "5ae4df3edbd5d35e5b4f09020db03eab"
+        "1e031dda2fbe03d1792170a0f3009cee")
+
+    def test_sp800_38a_f51_vector(self):
+        assert crypto.aes128_ctr_xor(self.KEY, self.IV, self.PT) == self.CT
+
+    def test_decrypt_is_encrypt(self):
+        assert crypto.aes128_ctr_xor(self.KEY, self.IV, self.CT) == self.PT
+
+    def test_ragged_length_and_empty(self):
+        assert crypto.aes128_ctr_xor(self.KEY, self.IV,
+                                     self.PT[:37]) == self.CT[:37]
+        assert crypto.aes128_ctr_xor(self.KEY, self.IV, b"") == b""
+
+    def test_keystream_is_encrypted_counters(self):
+        ks = crypto.aes128_ctr_keystream(self.KEY, self.IV, 2)
+        blk0 = crypto.aes128_encrypt(self.KEY, self.IV)
+        assert ks[:16] == blk0 and len(ks) == 32
+
+    def test_counter_wraps_mod_2_128(self):
+        iv = b"\xff" * 16
+        ks = crypto.aes128_ctr_keystream(self.KEY, iv, 2)
+        # second block encrypts counter 0 (wrap), not an error
+        assert ks[16:] == crypto.aes128_encrypt(self.KEY, b"\x00" * 16)
+
+    def test_counter_blocks_batch_as_payload_width(self):
+        """B counter blocks cost the constant fused pass count: the
+        ROADMAP's 'AES counter-mode throughput' shape."""
+        telemetry.reset()
+        with telemetry.delta() as d:
+            crypto.aes128_ctr_keystream(self.KEY, self.IV, 8,
+                                        fixed_latency=True)
+        assert d()["apply_calls"] == 20  # same as a single block, fused
+
+    def test_bad_iv_rejected(self):
+        with pytest.raises(ValueError, match="16 bytes"):
+            crypto.aes128_ctr_keystream(self.KEY, b"\x00" * 12, 1)
+        with pytest.raises(ValueError, match="counter block"):
+            crypto.aes128_ctr_keystream(self.KEY, self.IV, 0)

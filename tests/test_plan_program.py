@@ -1,0 +1,411 @@
+"""Plan programs and the VMEM-resident megakernel.
+
+Differential contract: for ANY program, ``run_program(...,
+backend="megakernel")`` (one Pallas launch, VM over resident registers)
+equals ``backend="chained"`` (one ``apply_plan`` per PERMUTE step with
+XLA elementwise between) — checked at every step count via program
+prefixes, on the real Keccak/ChaCha programs and on synthetic programs
+exercising every opcode.  Plus: telemetry (one launch, zero passes,
+backend-split counters), registry/program fingerprints, fixed-latency
+observation of the fused path, and the constant-time audit over a whole
+program.
+"""
+
+import hashlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import crossbar as xb
+from repro.core import plan_algebra as pa
+from repro.core import plan_program as pp
+from repro.core import telemetry
+from repro.core.semiring import GF2, GF2_8
+from repro.core.static_registry import FixedLatencyError, StaticPlanRegistry
+from repro.crypto import chacha as cc
+from repro.crypto import keccak as kk
+from repro.crypto.registry import REGISTRY
+
+
+def _bits(seed, shape):
+    return jnp.asarray(
+        np.random.default_rng(seed).integers(0, 2, shape), jnp.int32)
+
+
+def _words(seed, shape):
+    return jnp.asarray(np.random.default_rng(seed).integers(
+        0, 1 << 32, shape, dtype=np.uint64).astype(np.uint32))
+
+
+def _synthetic_program(n=16, n_regs=3):
+    """A program touching every opcode (uint32 carrier)."""
+    rng = np.random.default_rng(7)
+    b = pp.ProgramBuilder("synthetic", n, n_regs=n_regs)
+    route = xb.gather_plan(jnp.asarray(rng.permutation(n), np.int32), n)
+    multi = xb.gather_plan(
+        jnp.asarray(rng.integers(-3, n, (n, 4)), np.int32), n, semiring=GF2)
+    b.permute(1, 0, route)
+    b.add(0, 0, 1)
+    b.permute(2, 0, multi)
+    b.andn(1, 1, 2)
+    b.xor(0, 0, 1)
+    b.and_(2, 0, 1)
+    b.add(0, 0, 2)
+    b.rotlv(0, 0, rng.integers(0, 32, n))
+    b.xor_const(0, 0, rng.integers(0, 1 << 16, n))
+    return b.build()
+
+
+class TestProgramIR:
+    def test_scatter_plans_gather_normalised_by_builder(self):
+        dest = jnp.asarray(np.random.default_rng(0).permutation(8), jnp.int32)
+        scat = xb.scatter_plan(dest, 8)
+        b = pp.ProgramBuilder("t", 8, n_regs=2)
+        b.permute(0, 0, scat)
+        prog = b.build()
+        assert prog.plans[0].mode == xb.GATHER
+
+    def test_rejects_geometry_mismatch(self):
+        plan = pa.identity_plan(8)
+        with pytest.raises(ValueError, match="state geometry"):
+            pp.PlanProgram("bad", 16, (pp.Step(pp.PERMUTE, 0, 0, plan=0),),
+                           (plan,), None, 2)
+
+    def test_rejects_gf2_8_plans(self):
+        idx = jnp.zeros((4, 1), jnp.int32)
+        w = jnp.ones((4, 1), jnp.int32)
+        plan = xb.gather_plan(idx, 4, weights=w, semiring=GF2_8)
+        with pytest.raises(ValueError, match="REAL and GF2"):
+            pp.PlanProgram("bad", 4, (pp.Step(pp.PERMUTE, 0, 0, plan=0),),
+                           (plan,), None, 2)
+
+    def test_rejects_bad_register(self):
+        with pytest.raises(ValueError, match="register out of range"):
+            pp.PlanProgram("bad", 4, (pp.Step(pp.XOR, 0, 0, b=5),), (), None,
+                           2)
+
+    def test_rejects_const_out_of_stride_range(self):
+        b = pp.ProgramBuilder("t", 4, n_regs=2)
+        base = b.add_const_rows(np.zeros((3, 4), np.int32))
+        b.xor_const_at(0, 0, base)
+        with pytest.raises(ValueError, match="out of range"):
+            b.build(rounds=5, const_stride=1)  # rows 0..4 > 3 rows
+
+    def test_rotlv_requires_unsigned(self):
+        b = pp.ProgramBuilder("t", 4, n_regs=2)
+        b.rotlv(0, 0, np.zeros(4, np.int32))
+        prog = b.build()
+        with pytest.raises(ValueError, match="unsigned"):
+            pp.run_program(prog, jnp.zeros((4, 2), jnp.int32))
+
+    def test_unroll_resolves_strided_consts(self):
+        prog = kk.megakernel_program()
+        flat = prog.unroll()
+        assert flat.rounds == 1
+        assert len(flat.steps) == prog.total_steps
+        # round r's iota step references row r
+        iota_steps = [s for s in flat.steps if s.op == pp.XOR_CONST]
+        assert [s.const for s in iota_steps] == list(range(24))
+
+    def test_passes_counts_permutes_times_rounds(self):
+        assert kk.megakernel_program().passes == 24 * 3
+        assert cc.megakernel_program().passes == 10 * 18
+
+
+class TestDifferential:
+    def test_synthetic_program_all_ops(self):
+        prog = _synthetic_program()
+        x = _words(1, (16, 8))
+        chained = pp.run_program(prog, x, backend="chained")
+        fused = pp.run_program(prog, x, backend="megakernel")
+        np.testing.assert_array_equal(np.asarray(chained), np.asarray(fused))
+
+    def test_every_step_count_keccak_round(self):
+        """Megakernel == chained at every prefix length of one unrolled
+        Keccak round (the per-step differential), plus the full
+        24-round rolled program."""
+        flat = kk.megakernel_program().unroll()
+        x = _bits(2, (1600, 2))
+        for n_steps in range(1, 7):
+            prefix = flat.prefix(n_steps)
+            chained = pp.run_program(prefix, x, backend="chained")
+            fused = pp.run_program(prefix, x, backend="megakernel")
+            np.testing.assert_array_equal(
+                np.asarray(chained), np.asarray(fused),
+                err_msg=f"prefix {n_steps}")
+        full = kk.megakernel_program()
+        np.testing.assert_array_equal(
+            np.asarray(pp.run_program(full, x, backend="chained")),
+            np.asarray(pp.run_program(full, x, backend="megakernel")))
+
+    def test_every_step_count_chacha_quarter_round(self):
+        """Every prefix of the first ChaCha quarter-round (10 steps:
+        permute/add/xor/rotlv interleavings) plus the full program."""
+        flat = cc.megakernel_program().unroll()
+        x = _words(3, (16, 4))
+        for n_steps in range(1, 11):
+            prefix = flat.prefix(n_steps)
+            chained = pp.run_program(prefix, x, backend="chained")
+            fused = pp.run_program(prefix, x, backend="megakernel")
+            np.testing.assert_array_equal(
+                np.asarray(chained), np.asarray(fused),
+                err_msg=f"prefix {n_steps}")
+        full = cc.megakernel_program()
+        np.testing.assert_array_equal(
+            np.asarray(pp.run_program(full, x, backend="chained")),
+            np.asarray(pp.run_program(full, x, backend="megakernel")))
+
+    def test_weighted_real_program(self):
+        rng = np.random.default_rng(5)
+        idx = jnp.asarray(rng.integers(0, 8, (8, 2)), jnp.int32)
+        w = jnp.asarray(rng.integers(1, 5, (8, 2)), jnp.int32)
+        plan = xb.gather_plan(idx, 8, weights=w)
+        b = pp.ProgramBuilder("weighted", 8, n_regs=2)
+        b.permute(1, 0, plan)
+        b.add(0, 0, 1)
+        prog = b.build()
+        x = jnp.asarray(rng.integers(0, 100, (8, 3)), jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(pp.run_program(prog, x, backend="chained")),
+            np.asarray(pp.run_program(prog, x, backend="megakernel")))
+
+    def test_1d_payload_round_trips_shape(self):
+        prog = kk.megakernel_program()
+        x = _bits(4, 1600)
+        out = pp.run_program(prog, x, backend="megakernel")
+        assert out.shape == (1600,) and out.dtype == x.dtype
+
+
+class TestTelemetry:
+    def test_megakernel_one_launch_zero_passes(self):
+        prog = kk.megakernel_program()
+        x = _bits(0, (1600, 1))
+        telemetry.reset()
+        with telemetry.delta() as d:
+            pp.run_program(prog, x, backend="megakernel")
+        dd = d()
+        assert dd["program_launches"] == 1
+        assert dd["apply_calls"] == 0
+        assert dd["program_passes_avoided"] == prog.passes == 72
+        for b in ("einsum", "kernel", "sparse", "reference"):
+            assert dd[f"apply_calls_{b}"] == 0
+
+    def test_chained_counts_passes_not_launches(self):
+        prog = kk.megakernel_program()
+        x = _bits(0, (1600, 1))
+        telemetry.reset()
+        with telemetry.delta() as d:
+            pp.run_program(prog, x, backend="chained")
+        dd = d()
+        assert dd["program_launches"] == 0
+        assert dd["apply_calls"] == prog.passes
+        assert dd["apply_calls_einsum"] == prog.passes
+
+    def test_backend_split_regression(self):
+        """The satellite fix: einsum passes and Pallas-kernel passes are
+        separately countable (they used to fold into one total)."""
+        plan = pa.identity_plan(8)
+        x = jnp.arange(8, dtype=jnp.int32)
+        telemetry.reset()
+        with telemetry.delta() as d:
+            xb.apply_plan(plan, x, backend="einsum")
+            xb.apply_plan(plan, x, backend="kernel", interpret=True)
+            xb.apply_plan(plan, x, backend="kernel", interpret=True)
+            xb.apply_plan(plan, x, backend="reference")
+        dd = d()
+        assert dd["apply_calls"] == 4
+        assert dd["apply_calls_einsum"] == 1
+        assert dd["apply_calls_kernel"] == 2
+        assert dd["apply_calls_reference"] == 1
+        assert dd["apply_calls_sparse"] == 0
+
+    def test_executable_cache_hits_across_calls(self):
+        prog = kk.megakernel_program()
+        x = _bits(0, (1600, 1))
+        telemetry.reset()
+        pp.run_program(prog, x, backend="megakernel")
+        pp.run_program(prog, x, backend="megakernel")
+        info = pp.program_cache_info()
+        assert info["misses"] == 1 and info["hits"] == 1
+        # a different payload width is a different executable
+        pp.run_program(prog, _bits(0, (1600, 200)), backend="megakernel")
+        assert pp.program_cache_info()["misses"] == 2
+
+
+class TestKeccakMegakernel:
+    def test_matches_per_round_path(self):
+        bits = _bits(11, 1600)
+        np.testing.assert_array_equal(
+            np.asarray(kk.keccak_f1600(bits)),
+            np.asarray(kk.keccak_f1600(bits, backend="megakernel")))
+
+    def test_batched_lanes_match(self):
+        bits = _bits(12, (8, 1600))
+        np.testing.assert_array_equal(
+            np.asarray(kk.keccak_f1600(bits)),
+            np.asarray(kk.keccak_f1600(bits, backend="megakernel")))
+
+    def test_sha3_sponges_match_hashlib(self):
+        msg = b"one launch per permutation"
+        assert kk.sha3_256(msg, backend="megakernel") == \
+            hashlib.sha3_256(msg).digest()
+        assert kk.sha3_512(msg, backend="megakernel") == \
+            hashlib.sha3_512(msg).digest()
+        assert kk.shake_256(msg, 64, backend="megakernel") == \
+            hashlib.shake_256(msg).digest(64)
+
+    def test_batched_sponge_megakernel(self):
+        msgs = [bytes([i]) * 50 for i in range(4)]
+        got = kk.sha3_256_batched(msgs, backend="megakernel")
+        assert got == [hashlib.sha3_256(m).digest() for m in msgs]
+
+    def test_one_launch_per_permutation(self):
+        """Acceptance: SHA3-256 of a 3-block message runs exactly 3
+        permutations = 3 launches, zero crossbar passes."""
+        msg = bytes(290)  # 3 blocks at rate 136
+        telemetry.reset()
+        with telemetry.delta() as d:
+            digest = kk.sha3_256(msg, backend="megakernel")
+        dd = d()
+        assert digest == hashlib.sha3_256(msg).digest()
+        assert dd["program_launches"] == 3
+        assert dd["apply_calls"] == 0
+
+    def test_theta_is_a_crossbar_pass(self):
+        """θ alone, as the registered k=11 GF(2) plan, equals the
+        arithmetic θ implementation."""
+        bits = _bits(13, 1600)
+        a = bits.reshape(1, 5, 5, 64)
+        want = kk._theta(a).reshape(1600)
+        got = xb.apply_plan(kk.theta_plan(), bits)
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+    def test_fixed_latency_contract(self):
+        for seed in range(3):
+            kk.keccak_f1600(_bits(seed, 1600), backend="megakernel",
+                            fixed_latency=True)
+        sigs = [k for k in REGISTRY._observed
+                if k[0] == ("keccak_f1600", "megakernel")]
+        assert len(sigs) == 1
+        calls, plan_fps, launches, prog_fps = REGISTRY._observed[sigs[0]]
+        assert calls == 0 and launches == 1
+        assert prog_fps == (
+            REGISTRY.program_fingerprint(kk.MEGAKERNEL_PROGRAM_KEY),)
+
+    def test_constant_time_audit_over_program(self):
+        prog = kk.megakernel_program()
+        out = REGISTRY.audit_constant_time(
+            "keccak-megakernel",
+            lambda x: pp.run_program(prog, x, backend="megakernel"),
+            jnp.zeros((1600, 4), jnp.int32))
+        assert out.shape == (1600, 4)
+
+
+class TestChaChaMegakernel:
+    KEY = bytes(range(32))
+    NONCE = bytes.fromhex("000000090000004a00000000")
+
+    def test_rfc8439_vector(self):
+        got = cc.chacha20_block(self.KEY, 1, self.NONCE,
+                                backend="megakernel")
+        assert got == cc.chacha20_block(self.KEY, 1, self.NONCE)
+        assert got[:16] == bytes.fromhex(
+            "10f1e7e4d13b5915500fdd1fa32071c4")
+
+    def test_batched_counter_blocks(self):
+        assert cc.chacha20_blocks(self.KEY, 7, self.NONCE, 5,
+                                  backend="megakernel") == \
+            cc.chacha20_blocks(self.KEY, 7, self.NONCE, 5)
+
+    def test_one_launch_zero_passes(self):
+        telemetry.reset()
+        with telemetry.delta() as d:
+            cc.chacha20_blocks(self.KEY, 0, self.NONCE, 4,
+                               backend="megakernel", fixed_latency=True)
+        dd = d()
+        assert dd["program_launches"] == 1 and dd["apply_calls"] == 0
+
+    def test_encrypt_roundtrip(self):
+        pt = b"megakernel ARX roundtrip" * 11
+        ct = cc.chacha20_encrypt(self.KEY, 3, self.NONCE, pt,
+                                 backend="megakernel")
+        assert cc.chacha20_encrypt(self.KEY, 3, self.NONCE, ct,
+                                   backend="megakernel") == pt
+
+
+class TestProgramRegistry:
+    def test_double_register_raises(self):
+        kk.megakernel_program()
+        with pytest.raises(ValueError, match="already registered"):
+            REGISTRY.register_program(kk.MEGAKERNEL_PROGRAM_KEY,
+                                      _synthetic_program())
+
+    def test_unknown_program_names_registry(self):
+        with pytest.raises(KeyError, match="crypto"):
+            REGISTRY.program("no/such/program")
+
+    def test_fingerprint_stable_across_calls(self):
+        kk.megakernel_program()
+        fp1 = REGISTRY.program_fingerprint(kk.MEGAKERNEL_PROGRAM_KEY)
+        fp2 = REGISTRY.program_fingerprint(kk.MEGAKERNEL_PROGRAM_KEY)
+        assert fp1 == fp2
+        assert fp1[2] == 24  # trip count is part of the identity
+
+    def test_fingerprint_distinguishes_programs(self):
+        reg = StaticPlanRegistry("unit")
+        reg.register_program("a", _synthetic_program())
+        shorter = _synthetic_program().prefix(5)
+        reg.register_program("b", shorter)
+        assert reg.program_fingerprint("a") != reg.program_fingerprint("b")
+
+    def test_program_drift_raises(self):
+        """An extra launch inside an observed region is latency drift."""
+        prog = kk.megakernel_program()
+        x = _bits(0, (1600, 1))
+        with REGISTRY.observe("unit-prog-drift",
+                              program_keys=(kk.MEGAKERNEL_PROGRAM_KEY,)):
+            pp.run_program(prog, x, backend="megakernel")
+        with pytest.raises(FixedLatencyError, match="fixed-latency"):
+            with REGISTRY.observe("unit-prog-drift",
+                                  program_keys=(kk.MEGAKERNEL_PROGRAM_KEY,)):
+                pp.run_program(prog, x, backend="megakernel")
+                pp.run_program(prog, x, backend="megakernel")
+
+    def test_expected_launch_count_enforced(self):
+        prog = kk.megakernel_program()
+        x = _bits(0, (1600, 1))
+        with pytest.raises(FixedLatencyError, match="program launches"):
+            with REGISTRY.observe("unit-launches",
+                                  expect_program_launches=2):
+                pp.run_program(prog, x, backend="megakernel")
+
+    def test_traced_plan_control_rejected(self):
+        reg = StaticPlanRegistry("unit")
+
+        @jax.jit
+        def build(idx):
+            plan = xb.gather_plan(idx, 4)
+            with pytest.raises(ValueError, match="traced"):
+                # The IR itself refuses traced control at construction —
+                # a traced program can never reach the registry.
+                pp.PlanProgram(
+                    "traced", 4, (pp.Step(pp.PERMUTE, 0, 0, plan=0),),
+                    (plan,), None, 2)
+            return idx
+
+        build(jnp.arange(4, dtype=jnp.int32))
+
+
+class TestBenchmarkDiscovery:
+    def test_run_discovers_every_bench_module(self):
+        """CI satellite: auto-discovery picks up the new benchmark and
+        every discovered module exposes a run() entry point."""
+        import importlib
+        from benchmarks import run as harness
+        mods = harness.discover()
+        assert "bench_keccak_fused" in mods
+        for name in mods:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            assert callable(getattr(mod, "run", None)), name
