@@ -1,0 +1,179 @@
+"""Serving-path throughput/latency under the resilience stack.
+
+Queues 10^4 SHA3-256 requests (mixed 1/2-block payloads) into the
+continuous-batching engine and drains them synchronously, measuring
+hashes/sec and p50/p99 request latency in two regimes:
+
+* **no_fault** — the clean path: every bucket answered by the primary
+  backend, zero degradations;
+* **fault_1pct** — 1% of crossbar passes raise an injected launch
+  failure (seed-deterministic, ``core.faults``): with 24 passes per
+  permutation roughly a fifth of batches hit a fault, retry, and — when
+  the retry also faults — fall back down the chain.  The acceptance
+  criterion is that **every digest still equals hashlib** and the
+  overhead is visible as retries/fallbacks in telemetry, not as wrong
+  answers or hung requests.
+
+Latency here is queue-drain latency (submit-all, then serve): p99 ≈
+total drain time by construction; p50 is the half-queue point.  The
+interesting quantities are throughput and the fault-regime *ratios*
+(throughput and tail-latency cost of 1% injected faults).
+
+Off-TPU the chain starts at einsum (``resilience.default_chain``), so
+the numbers measure the XLA take-fastpath, not Pallas interpret mode.
+
+Results land in BENCH_serving.json (quick: BENCH_serving_quick.json so
+CI smoke never clobbers the committed sweep).
+
+Usage: PYTHONPATH=src python -m benchmarks.bench_serving [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import faults, telemetry
+from repro.core.resilience import default_chain
+from repro.serve.batching import BatchingEngine, BatchingOptions
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_JSON = os.path.join(REPO, "BENCH_serving.json")
+OUT_JSON_QUICK = os.path.join(REPO, "BENCH_serving_quick.json")
+
+_TELEMETRY_KEYS = ("serve_batches", "serve_completed", "serve_failed",
+                   "serve_padded_lanes", "resilience_retries",
+                   "resilience_fallbacks", "resilience_faults",
+                   "resilience_breaker_trips", "resilience_exhausted")
+
+
+def _payloads(n, seed):
+    """Deterministic mixed workload: ~85% 1-block, ~15% 2-block."""
+    rng = np.random.default_rng(seed)
+    lengths = np.where(rng.random(n) < 0.85,
+                       rng.integers(1, 128, n),       # 1 sponge block
+                       rng.integers(140, 260, n))     # 2 sponge blocks
+    return [rng.bytes(int(l)) for l in lengths]
+
+
+def bench_regime(name, payloads, *, max_batch, fault_rate, seed):
+    eng = BatchingEngine(
+        BatchingOptions(max_batch=max_batch, max_queue=len(payloads)),
+        start=False)
+    telemetry.reset()
+
+    def drive():
+        reqs = [eng.submit(p) for p in payloads]
+        t0 = time.perf_counter()
+        while eng.run_once():
+            pass
+        return reqs, time.perf_counter() - t0
+
+    if fault_rate > 0.0:
+        with faults.inject_faults(seed=seed, launch_rate=fault_rate) as inj:
+            reqs, wall_s = drive()
+        injected = inj.count
+    else:
+        reqs, wall_s = drive()
+        injected = 0
+
+    lat_ms = np.asarray([r.latency_s for r in reqs]) * 1e3
+    exact = sum(r.result() == hashlib.sha3_256(p).digest()
+                for p, r in zip(payloads, reqs))
+    backends = sorted({r.backend for r in reqs})
+    snap = telemetry.snapshot()
+
+    rec = {
+        "regime": name,
+        "requests": len(payloads),
+        "max_batch": max_batch,
+        "injected_faults": injected,
+        "bit_exact": exact,
+        "all_exact": exact == len(payloads),
+        "wall_s": round(wall_s, 3),
+        "hashes_per_s": round(len(payloads) / wall_s, 1),
+        "latency_ms": {"p50": round(float(np.percentile(lat_ms, 50)), 2),
+                       "p99": round(float(np.percentile(lat_ms, 99)), 2),
+                       "max": round(float(lat_ms.max()), 2)},
+        "answering_backends": backends,
+        "batches": len(eng.batch_log),
+        "telemetry": {k: snap.get(k, 0) for k in _TELEMETRY_KEYS},
+    }
+    row(f"serving/{name}", hashes_per_s=rec["hashes_per_s"],
+        p50_ms=rec["latency_ms"]["p50"], p99_ms=rec["latency_ms"]["p99"],
+        exact=rec["all_exact"], faults=injected,
+        fallbacks=rec["telemetry"]["resilience_fallbacks"])
+    return rec
+
+
+def run(quick: bool = False) -> dict:
+    n = 200 if quick else 10_000
+    max_batch = 16 if quick else 128
+    payloads = _payloads(n, seed=0)
+    # Warm the trace caches outside the timed region (both regimes then
+    # measure steady-state serving, not XLA warmup).
+    bench_regime("warmup", payloads[:2 * max_batch], max_batch=max_batch,
+                 fault_rate=0.0, seed=0)
+
+    clean = bench_regime("no_fault", payloads, max_batch=max_batch,
+                         fault_rate=0.0, seed=0)
+    chaos = bench_regime("fault_1pct", payloads, max_batch=max_batch,
+                         fault_rate=0.01, seed=7)
+
+    acceptance = {
+        "criterion": "10^4 queued SHA3-256 requests drain bit-exactly vs "
+                     "hashlib in both regimes; 1% injected launch faults "
+                     "cost retries/fallbacks (telemetry), never wrong "
+                     "digests, hung requests, or poisoned caches",
+        "requests": n,
+        "all_exact_no_fault": clean["all_exact"],
+        "all_exact_fault_1pct": chaos["all_exact"],
+        "hashes_per_s_no_fault": clean["hashes_per_s"],
+        "hashes_per_s_fault_1pct": chaos["hashes_per_s"],
+        "p99_ms_no_fault": clean["latency_ms"]["p99"],
+        "p99_ms_fault_1pct": chaos["latency_ms"]["p99"],
+        "fault_overhead_x": round(
+            clean["hashes_per_s"] / max(chaos["hashes_per_s"], 1e-9), 3),
+        "faults_absorbed": chaos["injected_faults"],
+        "pass": bool(clean["all_exact"] and chaos["all_exact"]
+                     and chaos["injected_faults"] > 0
+                     and chaos["telemetry"]["resilience_retries"]
+                     + chaos["telemetry"]["resilience_fallbacks"] > 0),
+    }
+    assert acceptance["pass"], acceptance
+
+    report = {
+        "benchmark": "serving",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "jax_backend": jax.default_backend(),
+        "chain": list(default_chain()),
+        "quick": quick,
+        "rows": [clean, chaos],
+        "acceptance": acceptance,
+    }
+    out_path = OUT_JSON_QUICK if quick else OUT_JSON
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {out_path}")
+    print(f"# acceptance: {acceptance}")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small request count (CI smoke)")
+    args = ap.parse_args()
+    run(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

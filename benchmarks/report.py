@@ -29,6 +29,10 @@ BENCH_FILES = [
     ("BENCH_keccak_fused.json", ("single_launch_all_b",
                                  "bit_exact_all_b",
                                  "speedup_megakernel_vs_per_round_B8")),
+    ("BENCH_serving.json", ("hashes_per_s_no_fault",
+                            "hashes_per_s_fault_1pct",
+                            "p99_ms_fault_1pct",
+                            "fault_overhead_x")),
 ]
 
 

@@ -55,6 +55,7 @@ out-of-bounds drop), never an error and never a data-dependent branch.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
 from functools import partial
 from typing import Optional, Union
@@ -384,6 +385,23 @@ def clear_compile_cache() -> None:
     _COMPILE_CACHE_STATS.update(hits=0, misses=0)
 
 
+def unpin_plan(plan: "PermutePlan") -> int:
+    """Drop every pinned compiled schedule built from this plan's arrays.
+
+    The quarantine path (``core.resilience``): a drifted static plan's
+    pinned schedule must not survive eviction from its registry, or the
+    next registration would resurrect the poisoned schedule via the
+    identity-keyed pinned cache.  Returns the number of entries removed.
+    """
+    removed = 0
+    for key, compiled in list(_PINNED_COMPILE.items()):
+        if (compiled.plan.idx is plan.idx
+                and compiled.plan.weights is plan.weights):
+            del _PINNED_COMPILE[key]
+            removed += 1
+    return removed
+
+
 def _is_concrete(x) -> bool:
     """Concrete array outside any live trace.
 
@@ -487,21 +505,27 @@ def compile_plan(plan: PermutePlan, *, block_o: int = 128,
 # distinguishable — a megakernel launch must show up as zero of either.
 _APPLY_CALLS = 0
 _APPLY_CALLS_BY_BACKEND: "dict[str, int]" = {}
+# Increments hold _COUNT_LOCK: the serving layer executes passes on a
+# device-feed thread while its admission thread reads telemetry.
+_COUNT_LOCK = threading.Lock()
 
 
 def apply_call_count() -> int:
-    return _APPLY_CALLS
+    with _COUNT_LOCK:
+        return _APPLY_CALLS
 
 
 def apply_calls_by_backend() -> dict:
     """Pass counts keyed by the backend that actually executed them."""
-    return dict(_APPLY_CALLS_BY_BACKEND)
+    with _COUNT_LOCK:
+        return dict(_APPLY_CALLS_BY_BACKEND)
 
 
 def reset_apply_call_count() -> None:
     global _APPLY_CALLS
-    _APPLY_CALLS = 0
-    _APPLY_CALLS_BY_BACKEND.clear()
+    with _COUNT_LOCK:
+        _APPLY_CALLS = 0
+        _APPLY_CALLS_BY_BACKEND.clear()
 
 
 def _canon_2d(x: Array) -> tuple[Array, tuple]:
@@ -578,7 +602,8 @@ def apply_plan(
       (n_out, ...) permuted data.
     """
     global _APPLY_CALLS
-    _APPLY_CALLS += 1
+    with _COUNT_LOCK:
+        _APPLY_CALLS += 1
     x2, xshape = _canon_2d(x)
     out_trailing = xshape[1:]
     n_out = plan.n_out
@@ -591,8 +616,9 @@ def apply_plan(
     if backend == "auto":
         backend = _choose_backend(plan)
     if backend in ("einsum", "kernel", "sparse", "reference"):
-        _APPLY_CALLS_BY_BACKEND[backend] = (
-            _APPLY_CALLS_BY_BACKEND.get(backend, 0) + 1)
+        with _COUNT_LOCK:
+            _APPLY_CALLS_BY_BACKEND[backend] = (
+                _APPLY_CALLS_BY_BACKEND.get(backend, 0) + 1)
 
     sr = plan.semiring
     if sr.integer_carrier and not (jnp.issubdtype(x2.dtype, jnp.integer)

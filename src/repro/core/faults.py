@@ -1,0 +1,185 @@
+"""Deterministic, seed-driven fault injection for the execution stack.
+
+Every degradation path in ``core.resilience`` must be exercisable in CI
+without real hardware failures.  This harness monkeypatches the three
+execution choke points —
+
+* ``crossbar.apply_plan``        (every per-pass backend),
+* ``crossbar.compile_plan``      (schedule compilation, incl. the
+  fingerprinting done by fixed-latency observation),
+* ``plan_program._run_megakernel`` (the single-launch fused executor) —
+
+and raises typed *injected* failures at seed-determined call indices.
+All call sites reach these functions through module-attribute lookup
+(``xb.apply_plan(...)``), so patching the module attributes intercepts
+the whole engine without touching call sites.  The RNG draw happens on
+*every* intercepted call in program order, so a given seed produces the
+same fault schedule on every run — chaos tests are regular tests.
+
+Schedule *drift* is injected differently: ``poison_observations``
+corrupts the recorded fixed-latency signatures of a
+``StaticPlanRegistry`` so the next observed call raises a genuine
+``FixedLatencyError`` through the real contract-checking path — the
+quarantine/re-register machinery is tested end-to-end, not simulated.
+
+Usage::
+
+    with faults.inject_faults(seed=7, launch_rate=0.01) as inj:
+        serve_lots_of_requests()
+    assert inj.count == len(inj.injected)   # the deterministic ledger
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core import crossbar as xb
+from repro.core import plan_program as pp
+
+
+class InjectedFault(RuntimeError):
+    """Base marker: a harness-injected failure, never a real engine bug."""
+
+
+class InjectedCompileFailure(InjectedFault):
+    """Injected at ``compile_plan`` (classified as ``CompileFault``)."""
+
+
+class InjectedLaunchFailure(InjectedFault):
+    """Injected at ``apply_plan`` (classified as ``LaunchFault``)."""
+
+
+class InjectedProgramFailure(InjectedLaunchFailure):
+    """Injected at the megakernel executor (a launch-class fault)."""
+
+
+# The interception points, in the order their rates are declared.
+SITES = ("compile", "apply", "program", "slow")
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Deterministic fault scheduler shared by the patched sites.
+
+    ``rates`` maps site -> probability that one call at that site
+    faults; a fresh RNG draw is consumed per intercepted call whether or
+    not the site is armed, so the schedule is a pure function of the
+    seed and the call sequence.  ``max_faults`` bounds the total number
+    of injections (the "transient burst" regime: N faults, then the
+    fleet heals).  ``injected`` is the ledger of (site, call-index)
+    pairs actually fired.
+    """
+
+    seed: int = 0
+    rates: dict = dataclasses.field(default_factory=dict)
+    max_faults: Optional[int] = None
+    slow_s: float = 0.0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self.calls = {s: 0 for s in SITES}
+        self.injected: list = []
+
+    @property
+    def count(self) -> int:
+        return len(self.injected)
+
+    def should_fire(self, site: str) -> bool:
+        index = self.calls[site]
+        self.calls[site] += 1
+        draw = float(self._rng.random())
+        if self.max_faults is not None and self.count >= self.max_faults:
+            return False
+        if draw >= self.rates.get(site, 0.0):
+            return False
+        self.injected.append((site, index))
+        return True
+
+
+@contextlib.contextmanager
+def inject_faults(*, seed: int = 0, compile_rate: float = 0.0,
+                  launch_rate: float = 0.0, program_rate: float = 0.0,
+                  slow_rate: float = 0.0, slow_s: float = 0.0,
+                  max_faults: Optional[int] = None):
+    """Patch the engine's choke points with a deterministic fault plan.
+
+    Args:
+      seed: RNG seed; same seed + same call sequence = same faults.
+      compile_rate: per-call fault probability at ``compile_plan``.
+      launch_rate: per-call fault probability at ``apply_plan``.
+      program_rate: per-call fault probability at the megakernel
+        executor (fires *before* the launch, so off-TPU chaos tests do
+        not pay interpret-mode wall time for a doomed attempt).
+      slow_rate / slow_s: probability and duration of an injected stall
+        at ``apply_plan`` (deadline/straggler testing).
+      max_faults: total injection budget across all sites (transient
+        bursts; ``None`` = unbounded).
+    Yields:
+      The ``FaultInjector`` (ledger + per-site call counts).
+    """
+    inj = FaultInjector(seed=seed,
+                        rates={"compile": compile_rate,
+                               "apply": launch_rate,
+                               "program": program_rate,
+                               "slow": slow_rate},
+                        max_faults=max_faults, slow_s=slow_s)
+    orig_apply = xb.apply_plan
+    orig_compile = xb.compile_plan
+    orig_mega = pp._run_megakernel
+
+    def apply_wrapper(plan, x, **kw):
+        if inj.should_fire("slow"):
+            time.sleep(inj.slow_s)
+        if inj.should_fire("apply"):
+            raise InjectedLaunchFailure(
+                f"injected crossbar launch failure "
+                f"(apply call #{inj.calls['apply'] - 1}, seed {inj.seed})")
+        return orig_apply(plan, x, **kw)
+
+    def compile_wrapper(plan, **kw):
+        if inj.should_fire("compile"):
+            raise InjectedCompileFailure(
+                f"injected schedule compilation failure "
+                f"(compile call #{inj.calls['compile'] - 1}, "
+                f"seed {inj.seed})")
+        return orig_compile(plan, **kw)
+
+    def mega_wrapper(program, x2, interpret):
+        if inj.should_fire("program"):
+            raise InjectedProgramFailure(
+                f"injected megakernel launch failure "
+                f"(program call #{inj.calls['program'] - 1}, "
+                f"seed {inj.seed})")
+        return orig_mega(program, x2, interpret)
+
+    xb.apply_plan = apply_wrapper
+    xb.compile_plan = compile_wrapper
+    pp._run_megakernel = mega_wrapper
+    try:
+        yield inj
+    finally:
+        xb.apply_plan = orig_apply
+        xb.compile_plan = orig_compile
+        pp._run_megakernel = orig_mega
+
+
+def poison_observations(registry) -> int:
+    """Corrupt every recorded fixed-latency signature in ``registry``.
+
+    The next ``observe`` under any already-recorded key then fails its
+    signature comparison and raises a genuine ``FixedLatencyError`` —
+    injected schedule drift that flows through the real contract
+    checker, exercising quarantine/re-registration end-to-end.  Returns
+    the number of signatures poisoned (0 means nothing was observed yet
+    and no drift can fire).
+    """
+    poisoned = 0
+    for key in list(registry._observed):
+        registry._observed[key] = ("__injected_drift__",)
+        poisoned += 1
+    return poisoned

@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 from collections import OrderedDict
 from typing import List, Optional, Tuple
 
@@ -315,22 +316,28 @@ class ProgramBuilder:
 
 _PROGRAM_LAUNCHES = 0
 _PASSES_AVOIDED = 0
+# Launch-counter increments hold _COUNT_LOCK (the serving layer's
+# device-feed thread races its admission thread's telemetry reads).
+_COUNT_LOCK = threading.Lock()
 
 
 def program_launch_count() -> int:
-    return _PROGRAM_LAUNCHES
+    with _COUNT_LOCK:
+        return _PROGRAM_LAUNCHES
 
 
 def passes_avoided_count() -> int:
     """Crossbar passes that would have been issued by chained execution
     of every megakernel launch so far (the fusion ledger)."""
-    return _PASSES_AVOIDED
+    with _COUNT_LOCK:
+        return _PASSES_AVOIDED
 
 
 def reset_program_counters() -> None:
     global _PROGRAM_LAUNCHES, _PASSES_AVOIDED
-    _PROGRAM_LAUNCHES = 0
-    _PASSES_AVOIDED = 0
+    with _COUNT_LOCK:
+        _PROGRAM_LAUNCHES = 0
+        _PASSES_AVOIDED = 0
 
 
 # ---------------------------------------------------------------------------
@@ -457,8 +464,9 @@ def _run_megakernel(program: PlanProgram, x2: Array,
         _EXEC_CACHE[key] = (program, run)
         while len(_EXEC_CACHE) > _EXEC_CACHE_CAPACITY:
             _EXEC_CACHE.popitem(last=False)
-    _PROGRAM_LAUNCHES += 1
-    _PASSES_AVOIDED += program.passes
+    with _COUNT_LOCK:
+        _PROGRAM_LAUNCHES += 1
+        _PASSES_AVOIDED += program.passes
     xp = _pad_axis(_pad_axis(x2, 8, 0), 128, 1)
     return run(xp)[:n, :d]
 

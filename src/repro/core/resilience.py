@@ -1,0 +1,389 @@
+"""Graceful backend degradation for the permutation engine.
+
+The fixed-latency datapath promises the *same* schedule on every call;
+this module is about what happens when a call fails anyway — a Pallas
+launch dies, a schedule compilation throws, a pinned plan's observed
+signature drifts.  A production serving path must degrade to a
+slower-but-exact backend, never to a wrong answer or a hung queue.
+Three pieces:
+
+* **Error taxonomy** — every engine failure is classified into one of
+  four typed ``Fault``s (``classify``):
+
+    - ``CompileFault``  — schedule/executable compilation failed
+      (``compile_plan``, megakernel build, injected compile failures);
+    - ``LaunchFault``   — an execution failed (kernel launch, XLA
+      runtime error, ``kernels.ops.KernelLaunchError``);
+    - ``DriftFault``    — the fixed-latency contract was violated
+      (wraps ``static_registry.FixedLatencyError``);
+    - ``TimeoutFault``  — a deadline expired before/while the work ran.
+
+* **Fallback chain** — ``ResilientExecutor.execute`` runs an operation
+  through an ordered backend chain (megakernel → sparse → kernel →
+  einsum → reference by default on TPU; the Pallas/VM paths only run
+  interpreted off-TPU, so the CPU default starts at einsum).  Each
+  backend gets bounded retries with exponential backoff for transient
+  faults; exhausting one backend falls to the next; exhausting the
+  chain raises the last typed fault.  Every decision is counted in
+  ``core.telemetry`` (``resilience_retries``/``_fallbacks``/
+  ``_breaker_trips``/``_quarantines``/``_backend_<name>``), so tests
+  and dashboards can see *which* backend actually answered.
+
+* **Circuit breaker + quarantine** — a per-(op, geometry, backend)
+  breaker trips after N consecutive faults (that backend is skipped
+  for the cooldown, then re-probed half-open).  A ``DriftFault`` on an
+  operation with declared registry keys quarantines the drifted
+  entries (``StaticPlanRegistry.quarantine``: evict + unpin, rebuild
+  lazily) and retries once — drift no longer poisons the pinned plan
+  cache — while a *repeat* drift on the same entry escalates to the
+  next backend instead of thrashing re-registration.
+
+Every path here is chaos-testable without real hardware failures via
+the deterministic injection harness in ``core.faults``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Optional, Sequence, Union
+
+import jax
+
+from repro.core import telemetry
+from repro.core.static_registry import FixedLatencyError, StaticPlanRegistry
+
+
+# ---------------------------------------------------------------------------
+# Error taxonomy
+# ---------------------------------------------------------------------------
+
+class Fault(RuntimeError):
+    """Base of the serving-layer error taxonomy (all faults are typed)."""
+
+
+class CompileFault(Fault):
+    """Schedule or executable compilation failed."""
+
+
+class LaunchFault(Fault):
+    """A kernel/contraction execution failed at launch or run time."""
+
+
+class DriftFault(Fault):
+    """The fixed-latency contract was violated (wraps FixedLatencyError)."""
+
+
+class TimeoutFault(Fault):
+    """A deadline expired before the operation completed."""
+
+
+def classify(exc: BaseException) -> type:
+    """Map an arbitrary engine exception to its ``Fault`` class.
+
+    Typed faults pass through; ``FixedLatencyError`` is drift; injected
+    compile failures (``core.faults``) and anything whose type names
+    compilation are compile faults; ``TimeoutError`` maps to timeout;
+    everything else — Pallas/XLA runtime errors, kernel wrapper errors,
+    shape errors surfaced at launch — is a launch fault.
+    """
+    if isinstance(exc, Fault):
+        return type(exc)
+    if isinstance(exc, FixedLatencyError):
+        return DriftFault
+    if isinstance(exc, TimeoutError):
+        return TimeoutFault
+    from repro.core import faults as _faults
+    if isinstance(exc, _faults.InjectedCompileFailure):
+        return CompileFault
+    if "compil" in type(exc).__name__.lower():
+        return CompileFault
+    return LaunchFault
+
+
+# ---------------------------------------------------------------------------
+# Backend chains
+# ---------------------------------------------------------------------------
+
+# The full degradation order: fastest/most-fused first, the take-oracle
+# reference contraction last (always available, always exact).
+FULL_CHAIN = ("megakernel", "sparse", "kernel", "einsum", "reference")
+
+
+def default_chain() -> tuple:
+    """The platform-appropriate fallback chain.
+
+    On TPU the fused paths lead.  Off TPU every Pallas path (megakernel
+    VM included) runs in interpret mode — orders of magnitude slower
+    than the fused einsum — so the chain starts at einsum and keeps the
+    interpreted kernels only as intermediate fallbacks; opt the
+    megakernel in explicitly where its single-launch property matters
+    more than wall time.
+    """
+    if jax.default_backend() == "tpu":
+        return FULL_CHAIN
+    return ("einsum", "sparse", "kernel", "reference")
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _BreakerEntry:
+    failures: int = 0
+    opened_at: Optional[float] = None
+    probing: bool = False
+
+
+class CircuitBreaker:
+    """Per-key consecutive-failure breaker with cooldown re-probes.
+
+    ``threshold`` consecutive faults open the circuit: ``allow`` returns
+    False (callers skip that backend) until ``cooldown_s`` has elapsed,
+    after which exactly one half-open probe is allowed — success closes
+    the circuit, failure re-opens it for another cooldown.  ``clock`` is
+    injectable so chaos tests advance time deterministically.
+    """
+
+    def __init__(self, *, threshold: int = 3, cooldown_s: float = 30.0,
+                 clock: Callable[[], float] = time.monotonic):
+        if threshold < 1:
+            raise ValueError(f"breaker threshold must be >= 1, got "
+                             f"{threshold}")
+        self.threshold = threshold
+        self.cooldown_s = cooldown_s
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._entries: dict = {}
+
+    def _entry(self, key) -> _BreakerEntry:
+        e = self._entries.get(key)
+        if e is None:
+            e = self._entries[key] = _BreakerEntry()
+        return e
+
+    def state(self, key) -> str:
+        """'closed' | 'open' | 'half_open' (cooldown elapsed, probe due)."""
+        with self._lock:
+            e = self._entries.get(key)
+            if e is None or e.opened_at is None:
+                return "closed"
+            if self.clock() - e.opened_at >= self.cooldown_s:
+                return "half_open"
+            return "open"
+
+    def allow(self, key) -> bool:
+        """May this key be attempted now?  (Half-open counts as yes.)"""
+        with self._lock:
+            e = self._entries.get(key)
+            if e is None or e.opened_at is None:
+                return True
+            if self.clock() - e.opened_at >= self.cooldown_s:
+                e.probing = True
+                return True
+            return False
+
+    def record_success(self, key) -> None:
+        with self._lock:
+            self._entries.pop(key, None)
+
+    def record_failure(self, key) -> bool:
+        """Count a fault; returns True when this one trips (or re-trips)
+        the breaker open."""
+        with self._lock:
+            e = self._entry(key)
+            e.failures += 1
+            if e.opened_at is not None:
+                if e.probing:  # failed half-open probe: re-open
+                    e.opened_at = self.clock()
+                    e.probing = False
+                    return True
+                return False
+            if e.failures >= self.threshold:
+                e.opened_at = self.clock()
+                return True
+            return False
+
+    def reset(self) -> None:
+        with self._lock:
+            self._entries.clear()
+
+    def open_keys(self) -> list:
+        with self._lock:
+            now = self.clock()
+            return [k for k, e in self._entries.items()
+                    if e.opened_at is not None
+                    and now - e.opened_at < self.cooldown_s]
+
+
+# ---------------------------------------------------------------------------
+# The resilient executor
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry with exponential backoff, per backend.
+
+    ``max_attempts`` counts the first try; only ``retryable`` fault
+    classes re-attempt the same backend (drift has its own quarantine
+    path, timeouts never retry).  ``backoff_base_s * backoff_factor**i``
+    sleeps between attempt i and i+1.
+    """
+
+    max_attempts: int = 2
+    backoff_base_s: float = 0.01
+    backoff_factor: float = 2.0
+    retryable: tuple = (LaunchFault, CompileFault)
+
+    def backoff_s(self, attempt: int) -> float:
+        return self.backoff_base_s * (self.backoff_factor ** attempt)
+
+
+@dataclasses.dataclass
+class ResilientResult:
+    """What ``execute`` returns: the value plus the degradation ledger."""
+
+    value: object
+    backend: str
+    chain_index: int          # 0 = primary backend answered
+    attempts: int             # total run() invocations
+    faults: list              # (backend, fault-class name, message) tuples
+
+    @property
+    def degraded(self) -> bool:
+        return self.chain_index > 0
+
+
+class ResilientExecutor:
+    """Run operations through the fallback chain under breaker control.
+
+    One executor instance is meant to live as long as the serving
+    process: the breaker state and quarantine escalation are its memory
+    of which (op, geometry, backend) combinations are currently
+    unhealthy.  ``sleep``/``clock`` are injectable for deterministic
+    chaos tests.
+    """
+
+    def __init__(self, *, chain: Optional[Sequence[str]] = None,
+                 retry: RetryPolicy = RetryPolicy(),
+                 breaker: Optional[CircuitBreaker] = None,
+                 registry: Optional[StaticPlanRegistry] = None,
+                 sleep: Callable[[float], None] = time.sleep,
+                 clock: Callable[[], float] = time.monotonic):
+        self.chain = tuple(chain) if chain is not None else default_chain()
+        if not self.chain:
+            raise ValueError("fallback chain must name at least one backend")
+        self.retry = retry
+        self.breaker = breaker if breaker is not None else CircuitBreaker(
+            clock=clock)
+        self.registry = registry
+        self.sleep = sleep
+        self.clock = clock
+
+    # -- core ---------------------------------------------------------------
+
+    def execute(self, op: str, geometry: Sequence, run: Callable[[str], object],
+                *, chain: Optional[Sequence[str]] = None,
+                deadline: Optional[float] = None,
+                registry_keys: Union[Sequence[str],
+                                     Callable[[str], Sequence[str]], None]
+                = None) -> ResilientResult:
+        """Run ``run(backend)`` through the chain until one answers.
+
+        Args:
+          op / geometry: the breaker key prefix — one op at one padded
+            bucket geometry is one health domain.
+          run: executes the operation on the named backend and returns
+            the result; any exception is classified and handled.
+          chain: per-call chain override (defaults to the executor's).
+          deadline: absolute ``clock()`` time after which attempts stop
+            with ``TimeoutFault`` (checked between attempts; a running
+            attempt is never interrupted mid-flight).
+          registry_keys: static-registry keys involved per backend —
+            either a sequence or a ``backend -> keys`` callable.  On
+            drift, these entries are quarantined and the backend retried
+            once; a repeat quarantine of the same entry escalates.
+        Returns:
+          ``ResilientResult`` (value + which backend answered + ledger).
+        Raises:
+          The last typed ``Fault`` when every allowed backend failed.
+        """
+        use_chain = tuple(chain) if chain is not None else self.chain
+        geometry = tuple(geometry)
+        faults: list = []
+        attempts = 0
+        last_fault: Optional[Fault] = None
+
+        for chain_index, backend in enumerate(use_chain):
+            key = (op, geometry, backend)
+            if not self.breaker.allow(key):
+                telemetry.incr("resilience_breaker_skips")
+                faults.append((backend, "BreakerOpen", "circuit open"))
+                continue
+            if self.breaker.state(key) == "half_open":
+                telemetry.incr("resilience_breaker_probes")
+            drift_quarantined = False
+            attempt = 0
+            while attempt < self.retry.max_attempts:
+                if deadline is not None and self.clock() >= deadline:
+                    telemetry.incr("resilience_timeouts")
+                    raise TimeoutFault(
+                        f"{op}{geometry}: deadline expired before backend "
+                        f"{backend!r} attempt {attempt}")
+                try:
+                    attempts += 1
+                    value = run(backend)
+                except Exception as e:  # noqa: BLE001 — classify, degrade
+                    fault_cls = classify(e)
+                    faults.append((backend, fault_cls.__name__, str(e)))
+                    telemetry.incr("resilience_faults")
+                    if self.breaker.record_failure(key):
+                        telemetry.incr("resilience_breaker_trips")
+                    last_fault = fault_cls(
+                        f"{op}{geometry}: backend {backend!r} failed "
+                        f"(attempt {attempt + 1}): {e}")
+                    last_fault.__cause__ = e
+                    if fault_cls is TimeoutFault:
+                        telemetry.incr("resilience_timeouts")
+                        raise last_fault
+                    if fault_cls is DriftFault:
+                        if (self.registry is not None and registry_keys
+                                and not drift_quarantined):
+                            keys = (registry_keys(backend)
+                                    if callable(registry_keys)
+                                    else registry_keys)
+                            counts = [self.registry.quarantine(k)
+                                      for k in keys]
+                            telemetry.incr("resilience_quarantines")
+                            drift_quarantined = True
+                            if counts and max(counts) <= 1:
+                                # First drift of these entries: they were
+                                # evicted and will rebuild lazily — one
+                                # free retry on the same backend.
+                                continue
+                        telemetry.incr("resilience_drift_escalations")
+                        break  # repeat drift: escalate to next backend
+                    attempt += 1
+                    if (attempt < self.retry.max_attempts
+                            and issubclass(fault_cls, self.retry.retryable)):
+                        telemetry.incr("resilience_retries")
+                        backoff = self.retry.backoff_s(attempt - 1)
+                        if backoff > 0:
+                            self.sleep(backoff)
+                        continue
+                    break  # non-retryable or attempts exhausted
+                else:
+                    self.breaker.record_success(key)
+                    telemetry.incr(f"resilience_backend_{backend}")
+                    if chain_index > 0:
+                        telemetry.incr("resilience_fallbacks")
+                    return ResilientResult(value, backend, chain_index,
+                                           attempts, faults)
+        telemetry.incr("resilience_exhausted")
+        if last_fault is None:
+            last_fault = LaunchFault(
+                f"{op}{geometry}: every backend in {use_chain} is "
+                "circuit-open; no attempt was possible")
+        raise last_fault

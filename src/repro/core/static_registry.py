@@ -121,6 +121,7 @@ class StaticPlanRegistry:
         self._plans: Dict[str, xb.PermutePlan] = {}
         self._programs: Dict[str, "pp.PlanProgram"] = {}
         self._observed: Dict[tuple, tuple] = {}
+        self._quarantined: Dict[str, int] = {}
 
     # -- registration -------------------------------------------------------
 
@@ -270,13 +271,53 @@ class StaticPlanRegistry:
     def info(self) -> dict:
         return {"name": self.name, "plans": len(self._plans),
                 "programs": len(self._programs),
-                "observed_signatures": len(self._observed)}
+                "observed_signatures": len(self._observed),
+                "quarantines": sum(self._quarantined.values())}
+
+    # -- quarantine ---------------------------------------------------------
+
+    def quarantine(self, key: str) -> int:
+        """Evict a (possibly drifted) entry without poisoning the caches.
+
+        Removes the plan/program registered under ``key`` — and every
+        derived batch variant (``"<key>_x<B>"``) — from the registry,
+        drops their pinned tile schedules (``crossbar.unpin_plan``), and
+        forgets *all* recorded fixed-latency signatures (they may embed
+        fingerprints of the evicted schedules, so partial retention
+        would compare fresh schedules against stale baselines).
+
+        The next ``get_or_register``/``get_or_register_program`` for the
+        key rebuilds and re-registers from scratch: one observed drift
+        costs one re-registration, not a permanently poisoned pinned
+        cache.  Returns the total number of quarantines recorded for
+        ``key`` so callers (``core.resilience``) can escalate instead of
+        retrying when the same entry keeps drifting.
+        """
+        evicted: list = []
+        for k in list(self._plans):
+            if k == key or k.startswith(key + "_x"):
+                evicted.append(self._plans.pop(k))
+        for k in list(self._programs):
+            if k == key or k.startswith(key + "_x"):
+                evicted.extend(self._programs.pop(k).plans)
+        for plan in evicted:
+            xb.unpin_plan(plan)
+        self._observed.clear()
+        self._quarantined[key] = self._quarantined.get(key, 0) + 1
+        return self._quarantined[key]
+
+    def quarantine_count(self, key: str) -> int:
+        """How many times ``key`` has been quarantined since the last
+        ``reset_observations``."""
+        return self._quarantined.get(key, 0)
 
     # -- fixed-latency contract --------------------------------------------
 
     def reset_observations(self) -> None:
-        """Forget recorded signatures (test isolation), keep the plans."""
+        """Forget recorded signatures and quarantine history (test
+        isolation), keep the plans."""
         self._observed.clear()
+        self._quarantined.clear()
 
     @contextlib.contextmanager
     def observe(self, name: Any, *, shapes: Sequence = (),

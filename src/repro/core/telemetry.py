@@ -38,6 +38,7 @@ regions in it and converts violations to ``FixedLatencyError``.
 from __future__ import annotations
 
 import contextlib
+import threading
 
 import jax
 
@@ -54,43 +55,74 @@ class HostSyncError(RuntimeError):
     """A device->host sync happened inside a no-host-sync region."""
 
 
+# One lock serialises every counter mutation and read in this module:
+# the serving layer's admission queue and its device-feed worker live on
+# different threads, and `incr`/`snapshot`/`delta` must never tear (a
+# lost increment shows up as a wrong fixed-latency pass count).  The
+# crossbar/plan-program counters guard their own increments with the
+# same-purpose locks in their modules; snapshot() reads them under this
+# one so a single snapshot is a consistent cut.
+LOCK = threading.RLock()
+
+# Generic named counters for subsystems above the crossbar (resilience
+# fallbacks/retries/trips, serving admissions/sheds/timeouts).  They
+# appear in snapshot()/delta() next to the engine counters.
+_COUNTERS: "dict[str, int]" = {}
+
+
+def incr(name: str, n: int = 1) -> int:
+    """Thread-safely bump a named counter; returns the new value."""
+    with LOCK:
+        _COUNTERS[name] = _COUNTERS.get(name, 0) + n
+        return _COUNTERS[name]
+
+
+def counter(name: str) -> int:
+    with LOCK:
+        return _COUNTERS.get(name, 0)
+
+
 def snapshot() -> dict:
     """All engine counters, flattened into one dict."""
-    compile_info = xb.compile_cache_info()
-    plan_info = pa.plan_cache_info()
-    lift_info = xb.lift_cache_info()
-    by_backend = xb.apply_calls_by_backend()
-    program_info = pp.program_cache_info()
-    out = {
-        "apply_calls": xb.apply_call_count(),
-        "compile_cache_hits": compile_info["hits"],
-        "compile_cache_misses": compile_info["misses"],
-        "compile_cache_size": compile_info["size"],
-        "plan_cache_hits": plan_info["hits"],
-        "plan_cache_misses": plan_info["misses"],
-        "plan_cache_size": plan_info["size"],
-        "lift_cache_hits": lift_info["hits"],
-        "lift_cache_misses": lift_info["misses"],
-        "lift_cache_size": lift_info["size"],
-        "program_launches": pp.program_launch_count(),
-        "program_passes_avoided": pp.passes_avoided_count(),
-        "program_cache_hits": program_info["hits"],
-        "program_cache_misses": program_info["misses"],
-        "program_cache_size": program_info["size"],
-    }
-    for b in _BACKENDS:
-        out[f"apply_calls_{b}"] = by_backend.get(b, 0)
-    return out
+    with LOCK:
+        compile_info = xb.compile_cache_info()
+        plan_info = pa.plan_cache_info()
+        lift_info = xb.lift_cache_info()
+        by_backend = xb.apply_calls_by_backend()
+        program_info = pp.program_cache_info()
+        out = {
+            "apply_calls": xb.apply_call_count(),
+            "compile_cache_hits": compile_info["hits"],
+            "compile_cache_misses": compile_info["misses"],
+            "compile_cache_size": compile_info["size"],
+            "plan_cache_hits": plan_info["hits"],
+            "plan_cache_misses": plan_info["misses"],
+            "plan_cache_size": plan_info["size"],
+            "lift_cache_hits": lift_info["hits"],
+            "lift_cache_misses": lift_info["misses"],
+            "lift_cache_size": lift_info["size"],
+            "program_launches": pp.program_launch_count(),
+            "program_passes_avoided": pp.passes_avoided_count(),
+            "program_cache_hits": program_info["hits"],
+            "program_cache_misses": program_info["misses"],
+            "program_cache_size": program_info["size"],
+        }
+        for b in _BACKENDS:
+            out[f"apply_calls_{b}"] = by_backend.get(b, 0)
+        out.update(_COUNTERS)
+        return out
 
 
 def reset() -> None:
     """Zero every counter and drop the caches (test isolation)."""
-    xb.clear_compile_cache()
-    xb.reset_apply_call_count()
-    xb.clear_lift_cache()
-    pa.clear_plan_cache()
-    pp.reset_program_counters()
-    pp.clear_program_cache()
+    with LOCK:
+        xb.clear_compile_cache()
+        xb.reset_apply_call_count()
+        xb.clear_lift_cache()
+        pa.clear_plan_cache()
+        pp.reset_program_counters()
+        pp.clear_program_cache()
+        _COUNTERS.clear()
 
 
 @contextlib.contextmanager
@@ -131,7 +163,8 @@ def delta():
     """Context manager yielding a callable that returns counter deltas.
 
     Sizes are reported as end-state (not differenced) since cache size is
-    a level, not a flow.
+    a level, not a flow.  Counters that first appear inside the block
+    (named `incr` counters) difference against an implicit zero.
     """
     before = snapshot()
 
@@ -139,7 +172,7 @@ def delta():
         after = snapshot()
         out = {}
         for k, v in after.items():
-            out[k] = v if k.endswith("_size") else v - before[k]
+            out[k] = v if k.endswith("_size") else v - before.get(k, 0)
         return out
 
     yield diff

@@ -31,7 +31,15 @@ def survivor_mesh_shape(shape: dict, lost_devices: int) -> dict:
 
     Raises RuntimeError when only the model axis remains to give up.
     """
-    alive = _prod(shape) - lost_devices
+    total = _prod(shape)
+    if lost_devices < 0:
+        raise ValueError(f"lost_devices must be >= 0, got {lost_devices}")
+    if lost_devices >= total:
+        raise ValueError(
+            f"lost_devices={lost_devices} >= total devices {total} in mesh "
+            f"{shape}: no survivors — there is no mesh to shrink to; "
+            "restore onto a fresh fleet instead")
+    alive = total - lost_devices
     new = dict(shape)
     while _prod(new) > alive:
         if new.get("pod", 1) > 1:
@@ -107,12 +115,22 @@ class HeartbeatTracker:
     """
 
     def __init__(self, hosts: int, miss_threshold: int = 3):
+        if hosts < 1:
+            raise ValueError(f"need at least one host, got {hosts}")
+        if miss_threshold < 1:
+            raise ValueError(
+                f"miss_threshold must be >= 1, got {miss_threshold}")
         self.hosts = hosts
         self.miss_threshold = miss_threshold
         self._misses = [0] * hosts
         self._beaten = [False] * hosts
 
     def beat(self, host: int) -> None:
+        # Validated explicitly: a negative index would silently wrap to
+        # another host's slot and mask a real liveness bug.
+        if not 0 <= host < self.hosts:
+            raise ValueError(
+                f"host index {host} out of range [0, {self.hosts})")
         self._beaten[host] = True
 
     def tick(self) -> list:

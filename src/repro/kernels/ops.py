@@ -15,6 +15,7 @@ Responsibilities:
 
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
@@ -31,6 +32,36 @@ DROP = -1
 # integers exactly only up to 2^24.  Larger magnitudes would silently
 # round; the wrappers below reject them when the payload is concrete.
 _F32_EXACT_INT_BOUND = 1 << 24
+
+
+class KernelLaunchError(RuntimeError):
+    """A Pallas crossbar kernel failed to build or launch.
+
+    Raised with the plan geometry and kernel name attached so the
+    resilience layer (``core.resilience.classify`` -> ``LaunchFault``)
+    and operators see *which* kernel at *which* shape died, instead of a
+    bare Mosaic/interpreter traceback.  The original exception rides
+    along as ``__cause__``.
+    """
+
+
+@contextlib.contextmanager
+def _surface_kernel_errors(kernel: str, plan):
+    """Rebrand kernel-internal failures with plan-geometry context.
+
+    Input-validation errors raised by the wrappers themselves (payload
+    bound checks, semiring routing) are *not* kernel failures and pass
+    through untouched — only exceptions escaping the Pallas call are
+    wrapped.
+    """
+    try:
+        yield
+    except Exception as e:  # noqa: BLE001 — annotate and re-raise
+        raise KernelLaunchError(
+            f"{kernel} failed for plan (mode={plan.mode}, "
+            f"{plan.n_in}->{plan.n_out}, k={plan.idx.shape[-1]}, "
+            f"semiring={plan.semiring.name}): {type(e).__name__}: {e}"
+        ) from e
 
 
 def _default_interpret(interpret):
@@ -118,11 +149,12 @@ def crossbar_permute(plan, x, *, merge=None, interpret=None,
         mp = _pad_to(_pad_to(merge, block_o, 0), block_d, 1)
 
     n_out_pad = n_out + ((-n_out) % block_o)
-    out = crossbar_permute_pallas(
-        idxp, xp, mode=mode, n_out=n_out_pad, weights=wp, merge=mp,
-        n_in_valid=n_in, fold_mod2=fold_mod2,
-        block_o=block_o, block_n=block_n, block_d=block_d,
-        interpret=interpret)
+    with _surface_kernel_errors("dense crossbar kernel", plan):
+        out = crossbar_permute_pallas(
+            idxp, xp, mode=mode, n_out=n_out_pad, weights=wp, merge=mp,
+            n_in_valid=n_in, fold_mod2=fold_mod2,
+            block_o=block_o, block_n=block_n, block_d=block_d,
+            interpret=interpret)
     out = out[:n_out, :x.shape[1]]
     return out.astype(orig_dtype)
 
@@ -172,21 +204,23 @@ def crossbar_permute_sparse(plan, x, *, compiled=None, interpret=None,
             out = jnp.zeros((n_out_pad, xp.shape[1]), xp.dtype)
         else:
             # Compact grid: exactly the occupied pairs, no guards.
+            with _surface_kernel_errors("sparse crossbar kernel", plan):
+                out = crossbar_permute_sparse_pallas(
+                    compiled.pair_o[:num], compiled.pair_n[:num],
+                    compiled.active[:num], idxp, xp,
+                    mode=mode, n_out=n_out_pad, weights=wp, guard=False,
+                    fold_mod2=fold_mod2,
+                    block_o=block_o, block_n=block_n, block_d=block_d,
+                    interpret=interpret)
+    else:
+        # Traced schedule: full pair list, pl.when-guarded tile skip.
+        with _surface_kernel_errors("sparse crossbar kernel", plan):
             out = crossbar_permute_sparse_pallas(
-                compiled.pair_o[:num], compiled.pair_n[:num],
-                compiled.active[:num], idxp, xp,
-                mode=mode, n_out=n_out_pad, weights=wp, guard=False,
+                compiled.pair_o, compiled.pair_n, compiled.active, idxp, xp,
+                mode=mode, n_out=n_out_pad, weights=wp, guard=True,
                 fold_mod2=fold_mod2,
                 block_o=block_o, block_n=block_n, block_d=block_d,
                 interpret=interpret)
-    else:
-        # Traced schedule: full pair list, pl.when-guarded tile skip.
-        out = crossbar_permute_sparse_pallas(
-            compiled.pair_o, compiled.pair_n, compiled.active, idxp, xp,
-            mode=mode, n_out=n_out_pad, weights=wp, guard=True,
-            fold_mod2=fold_mod2,
-            block_o=block_o, block_n=block_n, block_d=block_d,
-            interpret=interpret)
     out = out[:n_out, :x.shape[1]]
     return out.astype(orig_dtype)
 

@@ -1,3 +1,14 @@
+from repro.serve.batching import (BatchingEngine, BatchingOptions, Cancelled,
+                                  Overloaded, Request)
 from repro.serve.engine import ServeOptions, ServingEngine, sample_token
 
-__all__ = ["ServeOptions", "ServingEngine", "sample_token"]
+__all__ = [
+    "BatchingEngine",
+    "BatchingOptions",
+    "Cancelled",
+    "Overloaded",
+    "Request",
+    "ServeOptions",
+    "ServingEngine",
+    "sample_token",
+]

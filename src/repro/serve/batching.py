@@ -1,0 +1,426 @@
+"""Continuous request batching over the fixed-latency crypto engine.
+
+``serve/engine.py`` batches *tokens* for a model; this module batches
+*requests* for the permutation engine's crypto workloads — many clients
+submitting variable-length payloads to be hashed, served from a bounded
+admission queue by a single device-feed worker thread.  The design goal
+is the ROADMAP's serving-scale item hardened by ``core.resilience``:
+every answer is bit-exact or a clean typed rejection, never a hang.
+
+* **Padded bucket shapes.**  Requests are bucketed by sponge geometry
+  (``n_blocks`` of the SHA3-256 rate) and the batch axis is padded to
+  the next power of two (dummy lanes route through the same schedule
+  and are discarded).  Each bucket shape is therefore one of a small,
+  fixed set of payload geometries — the fixed-latency contract holds
+  *per bucket*, and ``StaticPlanRegistry.observe`` checks it on every
+  batch when ``fixed_latency=True``.
+
+* **Admission control.**  The queue is bounded: past ``max_queue``
+  pending requests, ``submit`` sheds load with a typed ``Overloaded``
+  rejection instead of growing latency without bound.  Per-request
+  deadlines are enforced at dispatch (an expired request is completed
+  with ``TimeoutFault``, never silently dropped) and requests can be
+  cancelled while queued.
+
+* **Degradation.**  Batch execution goes through
+  ``resilience.ResilientExecutor``: megakernel/kernel/einsum faults
+  retry, fall back down the chain, trip per-(op, geometry, backend)
+  circuit breakers, and quarantine drifted registry entries — the
+  telemetry counters (``serve_*``, ``resilience_*``) record every
+  decision.
+
+* **Watchdog.**  The worker thread heartbeats through
+  ``dist.fault.HeartbeatTracker``; ``check_workers()`` is the
+  supervisor hook (tick + report).  ``dist.fault.StragglerPolicy``
+  tracks batch wall times so slow batches are visible as stragglers.
+
+Synchronous use (tests, benchmarks) can construct the engine with
+``start=False`` and call ``run_once()`` to process one batch
+deterministically on the caller's thread.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import telemetry
+from repro.core.resilience import (Fault, ResilientExecutor, TimeoutFault,
+                                   default_chain)
+from repro.crypto import keccak
+from repro.crypto.registry import REGISTRY
+from repro.dist.fault import HeartbeatTracker, StragglerPolicy
+
+_RATE_BYTES = 136  # SHA3-256 sponge rate
+
+
+class Overloaded(RuntimeError):
+    """The admission queue is full; the request was shed, not queued."""
+
+
+class Cancelled(RuntimeError):
+    """The request was cancelled before execution."""
+
+
+# ---------------------------------------------------------------------------
+# Requests
+# ---------------------------------------------------------------------------
+
+_SUPPORTED_OPS = ("sha3_256",)
+
+
+def _n_blocks(payload_len: int) -> int:
+    """Sponge blocks absorbed for a payload of this length (pad10*1
+    always appends at least the domain byte, so the count is exact)."""
+    return (payload_len + 1 + _RATE_BYTES - 1) // _RATE_BYTES
+
+
+def _dummy_payload(n_blocks: int) -> bytes:
+    """A payload whose padded form occupies exactly ``n_blocks``."""
+    return b"\x00" * (_RATE_BYTES * n_blocks - 1)
+
+
+class Request:
+    """One submitted payload: a thread-safe future with a deadline."""
+
+    __slots__ = ("op", "payload", "deadline", "backend", "_event", "_value",
+                 "_exc", "_lock", "t_submit", "t_done")
+
+    def __init__(self, payload: bytes, op: str,
+                 deadline: Optional[float]):
+        self.op = op
+        self.payload = payload
+        self.deadline = deadline
+        self.backend: Optional[str] = None
+        self._event = threading.Event()
+        self._value: Optional[bytes] = None
+        self._exc: Optional[BaseException] = None
+        self._lock = threading.Lock()
+        self.t_submit = time.perf_counter()
+        self.t_done: Optional[float] = None
+
+    @property
+    def bucket(self) -> tuple:
+        return (self.op, _n_blocks(len(self.payload)))
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.t_done is None:
+            return None
+        return self.t_done - self.t_submit
+
+    def _finish(self, *, value: Optional[bytes] = None,
+                exc: Optional[BaseException] = None,
+                backend: Optional[str] = None) -> bool:
+        with self._lock:
+            if self._event.is_set():
+                return False
+            self._value, self._exc, self.backend = value, exc, backend
+            self.t_done = time.perf_counter()
+            self._event.set()
+            return True
+
+    def cancel(self) -> bool:
+        """Cancel a queued request; False if it already completed."""
+        cancelled = self._finish(exc=Cancelled("request cancelled"))
+        if cancelled:
+            telemetry.incr("serve_cancelled")
+        return cancelled
+
+    def result(self, timeout: Optional[float] = None) -> bytes:
+        """Block for the digest; raises the typed completion error."""
+        if not self._event.wait(timeout):
+            raise TimeoutFault(
+                f"result not ready within {timeout}s (request still "
+                "queued or executing)")
+        if self._exc is not None:
+            raise self._exc
+        return self._value
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BatchingOptions:
+    """Admission + execution knobs.
+
+    ``chain=None`` resolves to ``resilience.default_chain()`` (einsum-
+    first off TPU, megakernel-first on TPU).  ``fixed_latency=True``
+    runs every bucket under the crypto registry's observation contract;
+    drift then surfaces as ``DriftFault`` and is quarantined rather
+    than poisoning the pinned caches.
+    """
+
+    max_batch: int = 8
+    max_queue: int = 1024
+    default_timeout_s: Optional[float] = None
+    poll_interval_s: float = 0.02
+    fixed_latency: bool = True
+    chain: Optional[tuple] = None
+    watchdog_miss_threshold: int = 3
+    batch_log_cap: int = 256
+
+
+def _bucket_digests(payloads: Sequence[bytes], backend: str, *,
+                    fixed_latency: bool,
+                    interpret: Optional[bool] = None) -> list:
+    """SHA3-256 of a padded bucket on one backend (ragged-capable).
+
+    Unlike ``keccak.sha3_256_batched`` the lanes need not share a byte
+    length — only a padded *block count* (the bucket invariant), which
+    is what schedule alignment actually requires.  B rides as payload
+    width (``batch_mode='payload'``), so the per-round plan is the
+    single-state ρ∘π plan for every bucket width and the megakernel
+    program handles the batch natively.
+    """
+    blocks = np.stack([keccak._pad101(m, _RATE_BYTES, 0x06)
+                       for m in payloads])          # (B, n_blocks, rate bits)
+    b, n_blocks = blocks.shape[:2]
+    pad_tail = np.zeros((b, keccak.STATE_BITS - _RATE_BYTES * 8), np.int32)
+    states = jnp.zeros((b, keccak.STATE_BITS), jnp.int32)
+    for i in range(n_blocks):
+        states = states ^ jnp.asarray(
+            np.concatenate([blocks[:, i], pad_tail], axis=1))
+        states = keccak.keccak_f1600(states, backend=backend,
+                                     batch_mode="payload",
+                                     fixed_latency=fixed_latency,
+                                     interpret=interpret)
+    host = np.asarray(states)
+    return [keccak._squeeze(host[i], _RATE_BYTES)[:32] for i in range(b)]
+
+
+def _keccak_registry_keys(backend: str) -> tuple:
+    """The static-registry entries a bucket execution depends on —
+    what drift quarantine must evict for the given backend."""
+    if backend == "megakernel":
+        return (keccak.MEGAKERNEL_PROGRAM_KEY,)
+    return ("keccak/rho_pi",)
+
+
+class BatchingEngine:
+    """Bounded-queue continuous batching with graceful degradation."""
+
+    def __init__(self, options: BatchingOptions = BatchingOptions(), *,
+                 executor: Optional[ResilientExecutor] = None,
+                 interpret: Optional[bool] = None, start: bool = True):
+        self.opt = options
+        self.chain = (tuple(options.chain) if options.chain is not None
+                      else default_chain())
+        self.executor = executor if executor is not None else (
+            ResilientExecutor(chain=self.chain, registry=REGISTRY))
+        self.interpret = interpret
+        self._queue: "collections.deque[Request]" = collections.deque()
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._running = False
+        self._worker: Optional[threading.Thread] = None
+        # Worker watchdog + straggler tracking (reusing the dist-layer
+        # policies: the serving worker is host 0 of a 1-host fleet).
+        self.heartbeats = HeartbeatTracker(
+            1, miss_threshold=options.watchdog_miss_threshold)
+        self.straggler = StragglerPolicy()
+        # Rolling ledger of executed buckets: (op, bucket_shape, backend,
+        # live_requests) — tests and the benchmark read it.
+        self.batch_log: "collections.deque[tuple]" = collections.deque(
+            maxlen=options.batch_log_cap)
+        if start:
+            self.start()
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> None:
+        if self._worker is not None and self._worker.is_alive():
+            return
+        self._running = True
+        self._worker = threading.Thread(target=self._worker_loop,
+                                        name="batching-device-feed",
+                                        daemon=True)
+        self._worker.start()
+
+    def close(self, *, drain: bool = True, timeout: Optional[float] = None
+              ) -> None:
+        """Stop the worker.  ``drain=True`` finishes queued work first;
+        otherwise pending requests complete with ``Cancelled``."""
+        with self._work:
+            if not drain:
+                while self._queue:
+                    self._queue.popleft().cancel()
+            self._running = False
+            self._work.notify_all()
+        if self._worker is not None:
+            self._worker.join(timeout)
+            self._worker = None
+
+    def __enter__(self) -> "BatchingEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(drain=not any(exc))
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, payload: bytes, *, op: str = "sha3_256",
+               timeout_s: Optional[float] = None) -> Request:
+        """Queue one payload; returns a ``Request`` future.
+
+        Raises ``Overloaded`` when the bounded queue is full (load
+        shedding — the caller should back off) and ``ValueError`` for
+        unsupported ops.
+        """
+        if op not in _SUPPORTED_OPS:
+            raise ValueError(f"unsupported op {op!r}; supported: "
+                             f"{_SUPPORTED_OPS}")
+        if timeout_s is None:
+            timeout_s = self.opt.default_timeout_s
+        deadline = (None if timeout_s is None
+                    else time.monotonic() + timeout_s)
+        req = Request(bytes(payload), op, deadline)
+        with self._work:
+            if len(self._queue) >= self.opt.max_queue:
+                telemetry.incr("serve_shed")
+                raise Overloaded(
+                    f"admission queue full ({self.opt.max_queue} pending); "
+                    "request shed")
+            self._queue.append(req)
+            telemetry.incr("serve_admitted")
+            self._work.notify()
+        return req
+
+    def map(self, payloads: Sequence[bytes], *, op: str = "sha3_256",
+            timeout_s: Optional[float] = None) -> list:
+        """Submit-and-wait convenience: digests in input order."""
+        reqs = [self.submit(p, op=op, timeout_s=timeout_s)
+                for p in payloads]
+        return [r.result() for r in reqs]
+
+    def queue_depth(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    # -- dispatch -----------------------------------------------------------
+
+    def _take_batch_locked(self) -> tuple:
+        """Pop one bucket-aligned batch; finish expired/cancelled inline.
+
+        The oldest live request defines the bucket; up to ``max_batch``
+        live requests sharing it are taken in FIFO order.  Returns
+        ``(batch, rejected)`` counts of requests removed.
+        """
+        now = time.monotonic()
+        batch: list = []
+        rejected = 0
+        bucket = None
+        keep: list = []
+        while self._queue:
+            req = self._queue.popleft()
+            if req.done():          # cancelled while queued
+                rejected += 1
+                continue
+            if req.deadline is not None and now >= req.deadline:
+                req._finish(exc=TimeoutFault(
+                    f"deadline expired after {now - (req.deadline):.3f}s "
+                    "in queue"))
+                telemetry.incr("serve_timeouts")
+                rejected += 1
+                continue
+            if bucket is None:
+                bucket = req.bucket
+            if req.bucket == bucket and len(batch) < self.opt.max_batch:
+                batch.append(req)
+            else:
+                keep.append(req)
+        self._queue.extend(keep)
+        return batch, rejected
+
+    def _execute_batch(self, batch: list) -> None:
+        op, n_blocks = batch[0].bucket
+        # Pad the lane count to the next power of two so bucket shapes
+        # come from a fixed set: (b_pad, n_blocks) IS the geometry the
+        # fixed-latency contract and the circuit breaker key on.
+        b_pad = 1
+        while b_pad < len(batch):
+            b_pad *= 2
+        payloads = [r.payload for r in batch]
+        payloads += [_dummy_payload(n_blocks)] * (b_pad - len(batch))
+        telemetry.incr("serve_padded_lanes", b_pad - len(batch))
+
+        def run(backend: str) -> list:
+            return _bucket_digests(payloads, backend,
+                                   fixed_latency=self.opt.fixed_latency,
+                                   interpret=self.interpret)
+
+        t0 = time.perf_counter()
+        try:
+            res = self.executor.execute(
+                op, (b_pad, n_blocks), run, chain=self.chain,
+                registry_keys=_keccak_registry_keys)
+        except Fault as e:
+            telemetry.incr("serve_failed", len(batch))
+            for req in batch:
+                req._finish(exc=e)
+            return
+        finally:
+            self.straggler.observe(time.perf_counter() - t0)
+            telemetry.incr("serve_batches")
+        self.batch_log.append((op, (b_pad, n_blocks), res.backend,
+                               len(batch)))
+        telemetry.incr("serve_completed", len(batch))
+        for req, digest in zip(batch, res.value):
+            req._finish(value=digest, backend=res.backend)
+
+    def run_once(self) -> int:
+        """Process one batch synchronously (deterministic test hook).
+
+        Returns the number of requests removed from the queue (completed,
+        timed out, or skipped-as-cancelled); 0 means the queue was empty.
+        """
+        with self._lock:
+            batch, rejected = self._take_batch_locked()
+        if batch:
+            self._execute_batch(batch)
+        return len(batch) + rejected
+
+    def _worker_loop(self) -> None:
+        while True:
+            with self._work:
+                while self._running and not self._queue:
+                    self._work.wait(self.opt.poll_interval_s)
+                if not self._running and not self._queue:
+                    return
+                batch, _ = self._take_batch_locked()
+            self.heartbeats.beat(0)
+            if batch:
+                self._execute_batch(batch)
+
+    # -- supervision --------------------------------------------------------
+
+    def check_workers(self) -> list:
+        """Watchdog tick: hosts at/over the miss threshold (the worker
+        beats once per dispatched batch/poll).  Call periodically from a
+        supervisor; a returned ``[0]`` means the device feed is wedged."""
+        missed = self.heartbeats.tick()
+        if missed:
+            telemetry.incr("serve_watchdog_misses")
+        return missed
+
+    def stats(self) -> dict:
+        """Queue/telemetry/breaker snapshot for dashboards and tests."""
+        snap = telemetry.snapshot()
+        out = {k: v for k, v in snap.items()
+               if k.startswith(("serve_", "resilience_"))}
+        out["queue_depth"] = self.queue_depth()
+        out["breaker_open"] = [
+            list(map(str, k)) for k in self.executor.breaker.open_keys()]
+        out["straggler_deadline_s"] = self.straggler.deadline
+        return out

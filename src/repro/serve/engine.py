@@ -113,6 +113,18 @@ class ServingEngine:
         opt = self.opt
         b = opt.batch_slots
         assert len(prompts) <= b, "more prompts than slots"
+        # Degenerate inputs fail loudly here, not as an opaque crash
+        # deep in the padding math (max() on an empty sequence, p[-1]
+        # on an empty prompt).
+        if not prompts:
+            raise ValueError("generate() needs at least one prompt "
+                             "(got an empty prompt list)")
+        for i, p in enumerate(prompts):
+            if len(p) == 0:
+                raise ValueError(
+                    f"prompt {i} is empty — every prompt needs at least "
+                    "one token (decode is teacher-forced from the first "
+                    "token; there is no BOS injection here)")
         key = key if key is not None else jax.random.PRNGKey(0)
 
         caches = self._caches

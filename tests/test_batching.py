@@ -1,0 +1,212 @@
+"""Continuous-batching serving engine: admission, buckets, degradation.
+
+Most tests drive the engine synchronously (``start=False`` +
+``run_once()``) so batch composition is deterministic; one test runs
+the real worker thread end-to-end.  Digest ground truth is hashlib.
+"""
+
+import hashlib
+import time
+
+import pytest
+
+from repro.core import faults, telemetry
+from repro.core.faults import InjectedLaunchFailure
+from repro.core.resilience import (CircuitBreaker, LaunchFault,
+                                   ResilientExecutor, RetryPolicy,
+                                   TimeoutFault)
+from repro.crypto.registry import REGISTRY
+from repro.serve.batching import (BatchingEngine, BatchingOptions, Cancelled,
+                                  Overloaded, _dummy_payload, _n_blocks)
+
+pytestmark = pytest.mark.chaos
+
+
+def _engine(**opts):
+    opts.setdefault("chain", ("einsum", "reference"))
+    return BatchingEngine(BatchingOptions(**opts), start=False)
+
+
+def _drain(eng):
+    while eng.run_once():
+        pass
+
+
+class TestBuckets:
+    def test_n_blocks_matches_pad101(self):
+        from repro.crypto import keccak
+        for n in (0, 1, 135, 136, 137, 271, 272, 500):
+            got = _n_blocks(n)
+            assert got == keccak._pad101(b"\x00" * n, 136, 0x06).shape[0]
+
+    def test_dummy_payload_lands_in_its_bucket(self):
+        for nb in (1, 2, 5):
+            assert _n_blocks(len(_dummy_payload(nb))) == nb
+
+    def test_mixed_lengths_bit_exact(self):
+        eng = _engine(max_batch=4)
+        msgs = [b"", b"a", b"x" * 135, b"y" * 136, b"z" * 300, b"ab" * 80]
+        reqs = [eng.submit(m) for m in msgs]
+        _drain(eng)
+        for m, r in zip(msgs, reqs):
+            assert r.result(timeout=1) == hashlib.sha3_256(m).digest()
+            assert r.backend == "einsum" and r.latency_s > 0
+
+    def test_batches_are_bucket_aligned_and_pow2_padded(self):
+        eng = _engine(max_batch=4)
+        # 3 one-block + 1 two-block: one (4,1)-padded batch, one (1,2).
+        for m in (b"a", b"b", b"c", b"x" * 140):
+            eng.submit(m)
+        _drain(eng)
+        shapes = sorted(shape for _, shape, _, _ in eng.batch_log)
+        assert shapes == [(1, 2), (4, 1)]
+        assert telemetry.counter("serve_padded_lanes") == 1  # 3 -> 4 lanes
+        assert telemetry.counter("serve_completed") == 4
+
+    def test_fifo_within_bucket(self):
+        eng = _engine(max_batch=2)
+        reqs = [eng.submit(bytes([i])) for i in range(5)]
+        assert eng.run_once() == 2               # oldest two first
+        assert reqs[0].done() and reqs[1].done() and not reqs[2].done()
+        _drain(eng)
+        assert all(r.done() for r in reqs)
+
+
+class TestAdmission:
+    def test_overload_sheds_with_typed_rejection(self):
+        eng = _engine(max_queue=2)
+        eng.submit(b"a")
+        eng.submit(b"b")
+        with pytest.raises(Overloaded, match="queue full"):
+            eng.submit(b"c")
+        assert telemetry.counter("serve_shed") == 1
+        assert eng.queue_depth() == 2            # shed request never queued
+        _drain(eng)
+
+    def test_unsupported_op_rejected_at_submit(self):
+        eng = _engine()
+        with pytest.raises(ValueError, match="unsupported op"):
+            eng.submit(b"x", op="md5")
+
+    def test_expired_deadline_completes_with_timeout_fault(self):
+        eng = _engine()
+        req = eng.submit(b"late", timeout_s=0.0)
+        time.sleep(0.01)
+        eng.run_once()
+        with pytest.raises(TimeoutFault, match="deadline expired"):
+            req.result(timeout=1)
+        assert telemetry.counter("serve_timeouts") == 1
+
+    def test_cancel_before_dispatch(self):
+        eng = _engine()
+        a = eng.submit(b"keep")
+        b = eng.submit(b"drop")
+        assert b.cancel()
+        _drain(eng)
+        assert a.result(1) == hashlib.sha3_256(b"keep").digest()
+        with pytest.raises(Cancelled):
+            b.result(timeout=1)
+        assert not b.cancel()                    # already completed
+        assert telemetry.counter("serve_cancelled") == 1
+
+    def test_result_timeout_while_queued(self):
+        eng = _engine()
+        req = eng.submit(b"never run")
+        with pytest.raises(TimeoutFault, match="not ready"):
+            req.result(timeout=0.01)
+        assert not req.done()                    # still queued, not failed
+
+
+class TestDegradation:
+    def _chaos_engine(self):
+        ex = ResilientExecutor(
+            chain=("einsum", "reference"),
+            retry=RetryPolicy(max_attempts=2, backoff_base_s=0.0),
+            breaker=CircuitBreaker(threshold=10, clock=lambda: 0.0),
+            sleep=lambda s: None, registry=REGISTRY)
+        return BatchingEngine(
+            BatchingOptions(max_batch=4, chain=("einsum", "reference")),
+            executor=ex, start=False)
+
+    def test_injected_faults_fall_back_bit_exactly(self):
+        eng = self._chaos_engine()
+        msgs = [b"alpha", b"beta", b"gamma"]
+        with faults.inject_faults(seed=0, launch_rate=1.0,
+                                  max_faults=2) as inj:
+            reqs = [eng.submit(m) for m in msgs]
+            _drain(eng)
+        assert inj.count == 2                    # einsum's two attempts
+        for m, r in zip(msgs, reqs):
+            assert r.result(1) == hashlib.sha3_256(m).digest()
+            assert r.backend == "reference"      # degraded, not wrong
+        snap = telemetry.snapshot()
+        assert snap["resilience_fallbacks"] == 1
+        assert snap["resilience_retries"] == 1
+        assert snap["serve_completed"] == 3
+        log_backends = [b for _, _, b, _ in eng.batch_log]
+        assert log_backends == ["reference"]
+
+    def test_exhausted_chain_rejects_all_requests_typed(self):
+        eng = self._chaos_engine()
+        with faults.inject_faults(seed=0, launch_rate=1.0):
+            reqs = [eng.submit(m) for m in (b"a", b"b")]
+            _drain(eng)
+        for r in reqs:
+            # The engine surfaces the executor's typed fault (the
+            # injected failure rides along as __cause__).
+            with pytest.raises(LaunchFault) as ei:
+                r.result(timeout=1)
+            assert isinstance(ei.value.__cause__, InjectedLaunchFailure)
+        assert telemetry.counter("serve_failed") == 2
+        assert telemetry.counter("resilience_exhausted") == 1
+
+    def test_drift_quarantine_inside_serving_path(self):
+        eng = self._chaos_engine()
+        eng.submit(b"warm the geometry")
+        _drain(eng)
+        assert faults.poison_observations(REGISTRY) > 0
+        req = eng.submit(b"post-drift request")
+        _drain(eng)
+        assert req.result(1) == hashlib.sha3_256(
+            b"post-drift request").digest()
+        assert req.backend == "einsum"           # recovered, not degraded
+        assert REGISTRY.quarantine_count("keccak/rho_pi") == 1
+        assert telemetry.counter("resilience_quarantines") == 1
+
+    def test_stats_exposes_counters_and_breakers(self):
+        eng = self._chaos_engine()
+        eng.submit(b"x")
+        _drain(eng)
+        stats = eng.stats()
+        assert stats["queue_depth"] == 0
+        assert stats["serve_completed"] == 1
+        assert stats["breaker_open"] == []
+        assert stats["resilience_backend_einsum"] == 1
+
+
+class TestWorkerThread:
+    def test_threaded_end_to_end(self):
+        eng = BatchingEngine(
+            BatchingOptions(max_batch=4, chain=("einsum", "reference")))
+        try:
+            msgs = [bytes([i]) * (i + 1) for i in range(6)]
+            digests = eng.map(msgs)
+            assert digests == [hashlib.sha3_256(m).digest() for m in msgs]
+        finally:
+            eng.close()
+        assert eng.check_workers() == []         # worker was beating
+
+    def test_close_without_drain_cancels_pending(self):
+        eng = _engine()                          # start=False: never runs
+        req = eng.submit(b"doomed")
+        eng.close(drain=False)
+        with pytest.raises(Cancelled):
+            req.result(timeout=1)
+
+    def test_watchdog_reports_wedged_worker(self):
+        eng = _engine(watchdog_miss_threshold=2)  # start=False: no beats
+        assert eng.check_workers() == []
+        assert eng.check_workers() == [0]
+        assert telemetry.counter("serve_watchdog_misses") == 1
+        eng.heartbeats.beat(0)                   # a beat recovers it
+        assert eng.check_workers() == []

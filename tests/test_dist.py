@@ -46,6 +46,18 @@ class TestElasticPolicy:
             fault.survivor_mesh_shape({"data": 1, "model": 16},
                                       lost_devices=8)
 
+    def test_negative_losses_rejected(self):
+        with pytest.raises(ValueError, match=">= 0"):
+            fault.survivor_mesh_shape({"data": 4}, lost_devices=-1)
+
+    def test_no_survivors_rejected(self):
+        # Losing the whole fleet (or more) is not a shrink — there is
+        # no mesh left; the old code looped shrinking forever.
+        for lost in (4, 5):
+            with pytest.raises(ValueError, match="no survivors"):
+                fault.survivor_mesh_shape({"data": 2, "model": 2},
+                                          lost_devices=lost)
+
 
 class TestStragglerPolicy:
     def test_deadline_tracks_ewma(self):
@@ -78,6 +90,20 @@ class TestHeartbeat:
         hb.beat(1)
         dead = hb.tick()          # host 2 missed twice
         assert dead == [2]
+
+    def test_init_validation(self):
+        with pytest.raises(ValueError, match="at least one host"):
+            fault.HeartbeatTracker(hosts=0)
+        with pytest.raises(ValueError, match="miss_threshold"):
+            fault.HeartbeatTracker(hosts=2, miss_threshold=0)
+
+    def test_out_of_range_beat_rejected(self):
+        hb = fault.HeartbeatTracker(hosts=3)
+        for host in (-1, 3):      # -1 would silently wrap to host 2
+            with pytest.raises(ValueError, match="out of range"):
+                hb.beat(host)
+        hb.beat(2)                # valid edges still work
+        hb.beat(0)
 
 
 class TestInt8Compression:

@@ -1,0 +1,445 @@
+"""Chaos suite: typed faults, fallback chain, breaker, quarantine.
+
+Every test is deterministic — faults come from the seed-driven harness
+in ``core.faults`` (or scripted run callables), clocks and sleeps are
+injected — so the degradation machinery is regression-tested like any
+other code path: bit-exact result via a degraded backend, or a clean
+typed rejection, with telemetry recording exactly what happened.
+"""
+
+import hashlib
+import threading
+
+import pytest
+
+from repro.core import crossbar as xb
+from repro.core import faults, telemetry
+from repro.core.resilience import (CircuitBreaker, CompileFault, DriftFault,
+                                   Fault, LaunchFault, ResilientExecutor,
+                                   RetryPolicy, TimeoutFault, classify,
+                                   default_chain)
+from repro.core.static_registry import FixedLatencyError
+from repro.crypto import keccak
+from repro.crypto.registry import REGISTRY
+
+pytestmark = pytest.mark.chaos
+
+
+# ---------------------------------------------------------------------------
+# Taxonomy
+# ---------------------------------------------------------------------------
+
+class TestClassify:
+    @pytest.mark.parametrize("exc,expected", [
+        (FixedLatencyError("drift"), DriftFault),
+        (TimeoutError("late"), TimeoutFault),
+        (faults.InjectedCompileFailure("boom"), CompileFault),
+        (faults.InjectedLaunchFailure("boom"), LaunchFault),
+        (faults.InjectedProgramFailure("boom"), LaunchFault),
+        (ValueError("anything else"), LaunchFault),
+    ])
+    def test_mapping(self, exc, expected):
+        assert classify(exc) is expected
+
+    def test_typed_faults_pass_through(self):
+        for cls in (CompileFault, LaunchFault, DriftFault, TimeoutFault):
+            assert classify(cls("x")) is cls
+
+    def test_kernel_launch_error_is_launch_fault(self):
+        from repro.kernels.ops import KernelLaunchError
+        assert classify(KernelLaunchError("pallas died")) is LaunchFault
+
+    def test_default_chain_ends_at_reference(self):
+        chain = default_chain()
+        assert chain[-1] == "reference"
+        assert len(set(chain)) == len(chain)
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker (deterministic fake clock)
+# ---------------------------------------------------------------------------
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+class TestCircuitBreaker:
+    def test_trips_after_threshold(self):
+        clk = FakeClock()
+        br = CircuitBreaker(threshold=3, cooldown_s=10.0, clock=clk)
+        key = ("op", (8,), "einsum")
+        assert not br.record_failure(key)
+        assert not br.record_failure(key)
+        assert br.allow(key)                    # still closed at 2 faults
+        assert br.record_failure(key)           # third trips
+        assert br.state(key) == "open"
+        assert not br.allow(key)
+        assert br.open_keys() == [key]
+
+    def test_success_resets_consecutive_count(self):
+        br = CircuitBreaker(threshold=2, clock=FakeClock())
+        key = "k"
+        br.record_failure(key)
+        br.record_success(key)
+        assert not br.record_failure(key)       # count restarted
+        assert br.state(key) == "closed"
+
+    def test_halfopen_probe_success_closes(self):
+        clk = FakeClock()
+        br = CircuitBreaker(threshold=1, cooldown_s=5.0, clock=clk)
+        br.record_failure("k")
+        assert br.state("k") == "open"
+        clk.t = 5.0
+        assert br.state("k") == "half_open"
+        assert br.allow("k")                    # the probe
+        br.record_success("k")
+        assert br.state("k") == "closed"
+        assert br.allow("k")
+
+    def test_halfopen_probe_failure_reopens(self):
+        clk = FakeClock()
+        br = CircuitBreaker(threshold=1, cooldown_s=5.0, clock=clk)
+        br.record_failure("k")
+        clk.t = 5.0
+        assert br.allow("k")
+        assert br.record_failure("k")           # failed probe re-trips
+        assert br.state("k") == "open"
+        assert not br.allow("k")
+        clk.t = 9.0                             # cooldown restarted at t=5
+        assert br.state("k") == "open"
+        clk.t = 10.0
+        assert br.state("k") == "half_open"
+
+    def test_threshold_validation(self):
+        with pytest.raises(ValueError):
+            CircuitBreaker(threshold=0)
+
+
+# ---------------------------------------------------------------------------
+# Executor: retry, fallback, breaker wiring (scripted runs — no engine)
+# ---------------------------------------------------------------------------
+
+def _executor(chain, **kw):
+    kw.setdefault("sleep", lambda s: None)
+    kw.setdefault("breaker", CircuitBreaker(threshold=3, clock=FakeClock()))
+    return ResilientExecutor(chain=chain, **kw)
+
+
+class TestResilientExecutor:
+    def test_transient_fault_retries_same_backend(self):
+        calls = []
+
+        def run(backend):
+            calls.append(backend)
+            if len(calls) == 1:
+                raise faults.InjectedLaunchFailure("transient")
+            return "ok"
+
+        res = _executor(("einsum", "reference")).execute("op", (8,), run)
+        assert res.value == "ok"
+        assert calls == ["einsum", "einsum"]
+        assert (res.backend, res.chain_index, res.attempts) == ("einsum", 0, 2)
+        assert not res.degraded
+        snap = telemetry.snapshot()
+        assert snap["resilience_retries"] == 1
+        assert snap["resilience_backend_einsum"] == 1
+        assert "resilience_fallbacks" not in snap
+
+    def test_persistent_fault_falls_back(self):
+        def run(backend):
+            if backend == "einsum":
+                raise faults.InjectedLaunchFailure("dead backend")
+            return f"answered by {backend}"
+
+        res = _executor(("einsum", "reference")).execute("op", (8,), run)
+        assert res.value == "answered by reference"
+        assert res.degraded and res.chain_index == 1
+        assert [b for b, _, _ in res.faults] == ["einsum", "einsum"]
+        snap = telemetry.snapshot()
+        assert snap["resilience_fallbacks"] == 1
+        assert snap["resilience_backend_reference"] == 1
+
+    def test_chain_exhaustion_raises_last_typed_fault(self):
+        def run(backend):
+            raise faults.InjectedCompileFailure(f"{backend} broken")
+
+        with pytest.raises(CompileFault, match="reference"):
+            _executor(("einsum", "reference")).execute("op", (8,), run)
+        assert telemetry.counter("resilience_exhausted") == 1
+
+    def test_timeout_fault_never_retries(self):
+        calls = []
+
+        def run(backend):
+            calls.append(backend)
+            raise TimeoutError("deadline blown inside the attempt")
+
+        with pytest.raises(TimeoutFault):
+            _executor(("einsum", "reference")).execute("op", (8,), run)
+        assert calls == ["einsum"]              # no retry, no fallback
+
+    def test_deadline_checked_between_attempts(self):
+        clk = FakeClock()
+        ex = _executor(("einsum",), clock=clk,
+                       breaker=CircuitBreaker(clock=clk))
+        clk.t = 100.0
+        with pytest.raises(TimeoutFault, match="deadline expired"):
+            ex.execute("op", (8,), lambda b: "never runs", deadline=50.0)
+
+    def test_backoff_is_exponential(self):
+        sleeps = []
+        ex = ResilientExecutor(
+            chain=("einsum",),
+            retry=RetryPolicy(max_attempts=3, backoff_base_s=0.01,
+                              backoff_factor=2.0),
+            breaker=CircuitBreaker(threshold=99, clock=FakeClock()),
+            sleep=sleeps.append)
+
+        def run(backend):
+            raise faults.InjectedLaunchFailure("always")
+
+        with pytest.raises(LaunchFault):
+            ex.execute("op", (8,), run)
+        assert sleeps == [0.01, 0.02]
+
+    def test_breaker_trips_then_reprobes(self):
+        clk = FakeClock()
+        ex = ResilientExecutor(
+            chain=("einsum", "reference"),
+            retry=RetryPolicy(max_attempts=1),
+            breaker=CircuitBreaker(threshold=2, cooldown_s=30.0, clock=clk),
+            sleep=lambda s: None)
+        healed = False
+
+        def run(backend):
+            if backend == "einsum" and not healed:
+                raise faults.InjectedLaunchFailure("einsum down")
+            return backend
+
+        assert ex.execute("op", (8,), run).backend == "reference"
+        assert ex.execute("op", (8,), run).backend == "reference"  # trips
+        assert telemetry.counter("resilience_breaker_trips") == 1
+        # Open: einsum is skipped without an attempt.
+        res = ex.execute("op", (8,), run)
+        assert res.backend == "reference"
+        assert res.faults[0][1] == "BreakerOpen"
+        assert telemetry.counter("resilience_breaker_skips") == 1
+        # Cooldown elapses, the backend healed: probe succeeds and closes.
+        clk.t = 30.0
+        healed = True
+        res = ex.execute("op", (8,), run)
+        assert res.backend == "einsum" and not res.degraded
+        assert telemetry.counter("resilience_breaker_probes") == 1
+        assert ex.breaker.state(("op", (8,), "einsum")) == "closed"
+
+    def test_all_breakers_open_is_typed(self):
+        clk = FakeClock()
+        ex = ResilientExecutor(
+            chain=("einsum",), retry=RetryPolicy(max_attempts=1),
+            breaker=CircuitBreaker(threshold=1, cooldown_s=30.0, clock=clk),
+            sleep=lambda s: None)
+        with pytest.raises(LaunchFault):
+            ex.execute("op", (8,), lambda b: 1 / 0)
+        with pytest.raises(Fault, match="circuit-open"):
+            ex.execute("op", (8,), lambda b: "unreachable")
+
+
+# ---------------------------------------------------------------------------
+# Injection harness: determinism + restoration
+# ---------------------------------------------------------------------------
+
+class TestFaultInjector:
+    def _drive(self, seed):
+        """Fixed call sequence against the patched sites; returns ledger."""
+        import jax.numpy as jnp
+        plan = xb.gather_plan(jnp.asarray([1, 0, 2]), 3)
+        x = jnp.arange(3.0)
+        with faults.inject_faults(seed=seed, launch_rate=0.4,
+                                  compile_rate=0.4) as inj:
+            for _ in range(8):
+                try:
+                    xb.apply_plan(plan, x)
+                except faults.InjectedFault:
+                    pass
+                try:
+                    xb.compile_plan(plan)
+                except faults.InjectedFault:
+                    pass
+        return inj.injected
+
+    def test_same_seed_same_schedule(self):
+        assert self._drive(7) == self._drive(7)
+        assert len(self._drive(7)) > 0
+
+    def test_different_seed_different_schedule(self):
+        assert self._drive(7) != self._drive(1234)
+
+    def test_patches_are_restored(self):
+        orig_apply, orig_compile = xb.apply_plan, xb.compile_plan
+        with faults.inject_faults(seed=0, launch_rate=1.0):
+            assert xb.apply_plan is not orig_apply
+        assert xb.apply_plan is orig_apply
+        assert xb.compile_plan is orig_compile
+
+    def test_restored_even_on_escape(self):
+        orig = xb.apply_plan
+        with pytest.raises(RuntimeError, match="escaping"):
+            with faults.inject_faults(seed=0):
+                raise RuntimeError("escaping the context")
+        assert xb.apply_plan is orig
+
+    def test_max_faults_bounds_the_burst(self):
+        import jax.numpy as jnp
+        plan = xb.gather_plan(jnp.asarray([1, 0]), 2)
+        x = jnp.arange(2.0)
+        with faults.inject_faults(seed=0, launch_rate=1.0,
+                                  max_faults=2) as inj:
+            hits = 0
+            for _ in range(6):
+                try:
+                    xb.apply_plan(plan, x)
+                except faults.InjectedLaunchFailure:
+                    hits += 1
+        assert hits == 2 and inj.count == 2
+
+
+# ---------------------------------------------------------------------------
+# End-to-end chaos: SHA-3 answers bit-exactly through degradation
+# ---------------------------------------------------------------------------
+
+def _sha3_run(msg):
+    """An executor-shaped run callable: full SHA3-256 on the backend."""
+    def run(backend):
+        return keccak.sha3_256(msg, backend=backend, fixed_latency=True)
+    return run
+
+
+def _keccak_keys(backend):
+    if backend == "megakernel":
+        return (keccak.MEGAKERNEL_PROGRAM_KEY,)
+    return ("keccak/rho_pi",)
+
+
+class TestChaosEndToEnd:
+    MSG = b"chaos, bit-exact or rejected"
+
+    @pytest.mark.parametrize("site,rates", [
+        ("apply", dict(launch_rate=1.0)),
+        ("compile", dict(compile_rate=1.0)),
+    ])
+    def test_injected_faults_degrade_bit_exactly(self, site, rates):
+        """Primary backend poisoned at ``site`` -> reference answers,
+        digest still equals hashlib, telemetry shows who answered."""
+        ex = _executor(("einsum", "reference"),
+                       retry=RetryPolicy(max_attempts=2, backoff_base_s=0.0))
+        # Budget exactly the primary's attempts; the fallback runs clean.
+        with faults.inject_faults(seed=0, max_faults=2, **rates) as inj:
+            res = ex.execute("sha3_256", (1, len(self.MSG)),
+                             _sha3_run(self.MSG))
+        assert res.value == hashlib.sha3_256(self.MSG).digest()
+        assert res.backend == "reference" and res.degraded
+        assert inj.count == 2
+        snap = telemetry.snapshot()
+        assert snap["resilience_backend_reference"] == 1
+        assert snap["resilience_fallbacks"] == 1
+        assert snap["resilience_faults"] == 2
+
+    def test_clean_path_stays_on_primary(self):
+        ex = _executor(("einsum", "reference"))
+        res = ex.execute("sha3_256", (1, len(self.MSG)),
+                         _sha3_run(self.MSG))
+        assert res.value == hashlib.sha3_256(self.MSG).digest()
+        assert res.backend == "einsum" and not res.degraded
+
+    def test_drift_quarantines_and_recovers(self):
+        """Poisoned fixed-latency signatures -> DriftFault -> quarantine
+        -> lazy re-register -> same backend answers bit-exactly."""
+        ex = _executor(("einsum", "reference"), registry=REGISTRY)
+        run = _sha3_run(self.MSG)
+        assert ex.execute("sha3", (1,), run,
+                          registry_keys=_keccak_keys).value == \
+            hashlib.sha3_256(self.MSG).digest()          # warm + observe
+        assert faults.poison_observations(REGISTRY) > 0
+        res = ex.execute("sha3", (1,), run, registry_keys=_keccak_keys)
+        assert res.value == hashlib.sha3_256(self.MSG).digest()
+        assert res.backend == "einsum"                   # same backend
+        assert REGISTRY.quarantine_count("keccak/rho_pi") == 1
+        assert telemetry.counter("resilience_quarantines") == 1
+        assert "keccak/rho_pi" in REGISTRY               # re-registered
+
+    def test_repeat_drift_escalates_to_next_backend(self):
+        ex = _executor(("einsum", "reference"), registry=REGISTRY)
+        run = _sha3_run(self.MSG)
+        ex.execute("sha3", (1,), run, registry_keys=_keccak_keys)  # warm
+        # This entry already burned its one re-registration.
+        REGISTRY.quarantine("keccak/rho_pi")
+        keccak.rho_pi_plan()                             # rebuild the plan
+        faults.poison_observations(REGISTRY)
+        # Re-warm einsum's signature so the poisoned baseline exists.
+        ex.execute("sha3", (1,), run, registry_keys=_keccak_keys)
+        faults.poison_observations(REGISTRY)
+        res = ex.execute("sha3", (1,), run, registry_keys=_keccak_keys)
+        assert res.value == hashlib.sha3_256(self.MSG).digest()
+        assert res.backend == "reference" and res.degraded
+        assert telemetry.counter("resilience_drift_escalations") == 1
+        assert REGISTRY.quarantine_count("keccak/rho_pi") >= 2
+
+
+# ---------------------------------------------------------------------------
+# Telemetry thread safety (satellite regression)
+# ---------------------------------------------------------------------------
+
+class TestTelemetryThreadSafety:
+    def test_two_threads_no_lost_increments(self):
+        n, per = 4, 5000
+
+        def worker():
+            for _ in range(per):
+                telemetry.incr("race_test")
+
+        threads = [threading.Thread(target=worker) for _ in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert telemetry.counter("race_test") == n * per
+        assert telemetry.snapshot()["race_test"] == n * per
+
+    def test_snapshot_during_increments_is_consistent(self):
+        stop = threading.Event()
+
+        def churn():
+            while not stop.is_set():
+                telemetry.incr("churn")
+
+        t = threading.Thread(target=churn)
+        t.start()
+        try:
+            for _ in range(200):
+                snap = telemetry.snapshot()      # must never KeyError/tear
+                assert snap.get("churn", 0) >= 0
+        finally:
+            stop.set()
+            t.join()
+
+    def test_crossbar_counters_locked(self):
+        import jax.numpy as jnp
+        plan = xb.gather_plan(jnp.asarray([1, 0]), 2)
+        x = jnp.arange(2.0)
+        xb.reset_apply_call_count()
+        per = 50
+
+        def worker():
+            for _ in range(per):
+                xb.apply_plan(plan, x)
+
+        threads = [threading.Thread(target=worker) for _ in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert xb.apply_call_count() == 2 * per

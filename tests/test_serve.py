@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.base import ModelConfig
 from repro.models.model_zoo import build
@@ -44,6 +45,20 @@ class TestEngine:
         assert len(outs) == 2
         assert all(len(o) == 5 for o in outs)
         assert all(0 <= t < CFG.padded_vocab for o in outs for t in o)
+
+    def test_empty_prompt_list_rejected(self):
+        api = build(CFG)
+        params = api.init(jax.random.PRNGKey(0))
+        eng = ServingEngine(api, ServeOptions(batch_slots=2), max_seq=32)
+        with pytest.raises(ValueError, match="empty prompt list"):
+            eng.generate(params, [])
+
+    def test_empty_prompt_rejected(self):
+        api = build(CFG)
+        params = api.init(jax.random.PRNGKey(0))
+        eng = ServingEngine(api, ServeOptions(batch_slots=2), max_seq=32)
+        with pytest.raises(ValueError, match="prompt 1 is empty"):
+            eng.generate(params, [[1, 2], []])
 
     def test_greedy_deterministic(self):
         api = build(CFG)
