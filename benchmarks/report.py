@@ -28,11 +28,21 @@ BENCH_FILES = [
     ("BENCH_aes.json", ("speedup_fused_vs_chained",)),
     ("BENCH_keccak_fused.json", ("single_launch_all_b",
                                  "bit_exact_all_b",
-                                 "speedup_megakernel_vs_per_round_B8")),
+                                 "speedup_megakernel_vs_per_round_B8",
+                                 "speedup_megakernel_vs_per_round_B512",
+                                 "megakernel_wins_at_B512")),
     ("BENCH_serving.json", ("hashes_per_s_no_fault",
                             "hashes_per_s_fault_1pct",
                             "p99_ms_fault_1pct",
-                            "fault_overhead_x")),
+                            "fault_overhead_x",
+                            "mesh_hashes_per_s",
+                            "mesh_p99_ms",
+                            "mesh_requests")),
+    ("BENCH_mesh_sharded.json", (
+        "modeled_speedup_8dev_lane_parallel_keccak",
+        "sharded_bit_exact_all",
+        "collective_free_all",
+        "moe_skewed_scheduled_vs_naive_transfers")),
 ]
 
 

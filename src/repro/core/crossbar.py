@@ -545,6 +545,31 @@ AUTO_SPARSE_DENSITY = 0.25
 AUTO_MIN_CELLS = 128 * 128
 
 
+# Optional measured tuning table (core/tuning.py): when installed,
+# backend='auto' prefers what the table has SEEN win for this plan
+# geometry over the density prior below.  Module-level because the
+# choice point is deep inside apply_plan; serving installs its table at
+# engine start and persists it across processes.
+_TUNING_TABLE = None
+_VALID_AUTO_BACKENDS = frozenset({"einsum", "kernel", "sparse", "reference"})
+
+
+def set_tuning_table(table) -> None:
+    """Install (or clear, with None) the measured backend tuning table."""
+    global _TUNING_TABLE
+    _TUNING_TABLE = table
+
+
+def get_tuning_table():
+    return _TUNING_TABLE
+
+
+def plan_geometry(plan: PermutePlan) -> tuple:
+    """The tuning-table geometry key for a plan: everything that shapes
+    backend-relative performance without looking at control values."""
+    return (plan.mode, plan.n_out, plan.n_in, plan.k, plan.semiring.name)
+
+
 def _choose_backend(plan: PermutePlan) -> str:
     """Measured-density heuristic behind ``backend='auto'``.
 
@@ -561,6 +586,10 @@ def _choose_backend(plan: PermutePlan) -> str:
     """
     if not _is_concrete_array(plan.idx):
         return "einsum"
+    if _TUNING_TABLE is not None:
+        measured = _TUNING_TABLE.best("apply_plan", plan_geometry(plan))
+        if measured in _VALID_AUTO_BACKENDS:
+            return measured
     if jax.default_backend() != "tpu":
         return "einsum"
     if plan.n_out * plan.n_in <= AUTO_MIN_CELLS:

@@ -389,6 +389,46 @@ def batch(plan: xb.PermutePlan, b: int) -> xb.PermutePlan:
                  (b, g.n_in, g.n_out, g.semiring.name), build)
 
 
+def shard_restrict(plan: xb.PermutePlan, out_window: tuple[int, int],
+                   in_window: tuple[int, int]) -> xb.PermutePlan:
+    """Restrict a plan to an (output-window, input-window) sub-operator.
+
+    ``out_window``/``in_window`` are ``(start, size)`` half-open ranges on
+    the gather-normal axes.  The result is the ``size_out x size_in``
+    block of the operator matrix in *local* coordinates: selects whose
+    source falls outside the input window become DROP (their contribution
+    belongs to a different block), surviving selects are rebased by the
+    window start, and weights ride along unchanged.  Summing the blocks
+    of a full tiling over the plan's semiring reconstitutes the original
+    operator — the identity mesh-sharded execution relies on.
+    """
+    g = to_gather(plan)
+    o0, o_sz = out_window
+    i0, i_sz = in_window
+    if o0 < 0 or o_sz <= 0 or o0 + o_sz > g.n_out:
+        raise ValueError(
+            f"shard_restrict: output window ({o0}, {o_sz}) out of range "
+            f"for n_out={g.n_out}")
+    if i0 < 0 or i_sz <= 0 or i0 + i_sz > g.n_in:
+        raise ValueError(
+            f"shard_restrict: input window ({i0}, {i_sz}) out of range "
+            f"for n_in={g.n_in}")
+
+    def build():
+        idx = g.idx[o0:o0 + o_sz]
+        inside = (idx >= i0) & (idx < i0 + i_sz)
+        local = jnp.where(inside, idx - i0, DROP).astype(jnp.int32)
+        weights = None
+        if g.weights is not None:
+            weights = g.weights[o0:o0 + o_sz]
+        return xb.gather_plan(local, i_sz, weights=weights,
+                              semiring=g.semiring)
+
+    return _memo("shard_restrict", (g.idx, g.weights),
+                 (o0, o_sz, i0, i_sz, g.n_in, g.n_out, g.semiring.name),
+                 build)
+
+
 def batched_gather_plan(idx: Array, n_in: int, *,
                         weights: Array | None = None,
                         semiring: Semiring = REAL) -> xb.PermutePlan:

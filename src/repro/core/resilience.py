@@ -387,3 +387,69 @@ class ResilientExecutor:
                 f"{op}{geometry}: every backend in {use_chain} is "
                 "circuit-open; no attempt was possible")
         raise last_fault
+
+
+# ---------------------------------------------------------------------------
+# Per-device health: mesh membership as a breaker domain
+# ---------------------------------------------------------------------------
+
+class DeviceHealth:
+    """Per-DEVICE circuit breakers for mesh-sharded execution.
+
+    The backend chain above answers "which *implementation* is healthy";
+    this answers "which *devices* are".  The distinction matters on a
+    mesh: one sick device must not trip the whole backend (the
+    implementation is fine on the seven others) — it should drop out of
+    the mesh, and the serving layer rebuilds on a survivor mesh
+    (``dist.fault.survivor_mesh_shape``) of the remaining devices.
+
+    Reuses ``CircuitBreaker`` under ``("device", index)`` keys, so sick
+    devices re-probe after the cooldown and rejoin on success.  Health
+    reads use ``state()`` (side-effect free); ``allow()`` is reserved
+    for the actual probe attempt because it arms the half-open latch.
+    """
+
+    def __init__(self, n_devices: int, *,
+                 breaker: Optional[CircuitBreaker] = None,
+                 threshold: int = 3, cooldown_s: float = 30.0,
+                 clock: Callable[[], float] = time.monotonic):
+        if n_devices < 1:
+            raise ValueError(f"DeviceHealth: n_devices={n_devices} must be "
+                             ">= 1")
+        self.n_devices = n_devices
+        self.breaker = breaker if breaker is not None else CircuitBreaker(
+            threshold=threshold, cooldown_s=cooldown_s, clock=clock)
+
+    @staticmethod
+    def key(device: int) -> tuple:
+        return ("device", int(device))
+
+    def _check(self, device: int) -> None:
+        if not (0 <= device < self.n_devices):
+            raise ValueError(f"DeviceHealth: device {device} out of range "
+                             f"[0, {self.n_devices})")
+
+    def record_success(self, device: int) -> None:
+        self._check(device)
+        self.breaker.record_success(self.key(device))
+
+    def record_failure(self, device: int) -> bool:
+        """Count a device fault; True when this one trips the device out
+        of the active mesh."""
+        self._check(device)
+        tripped = self.breaker.record_failure(self.key(device))
+        if tripped:
+            telemetry.incr("device_trips")
+        return tripped
+
+    def is_healthy(self, device: int) -> bool:
+        self._check(device)
+        return self.breaker.state(self.key(device)) != "open"
+
+    def healthy(self) -> list:
+        """Device indices currently allowed on the mesh (half-open
+        devices count: they are due a probe)."""
+        return [d for d in range(self.n_devices) if self.is_healthy(d)]
+
+    def lost(self) -> list:
+        return [d for d in range(self.n_devices) if not self.is_healthy(d)]

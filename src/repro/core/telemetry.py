@@ -119,6 +119,7 @@ def reset() -> None:
         xb.clear_compile_cache()
         xb.reset_apply_call_count()
         xb.clear_lift_cache()
+        xb.set_tuning_table(None)
         pa.clear_plan_cache()
         pp.reset_program_counters()
         pp.clear_program_cache()

@@ -15,6 +15,9 @@ import jax.numpy as jnp
 
 def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Symmetric int8 quantisation: returns (q int8, scale f32 scalar)."""
+    if x.size == 0:
+        raise ValueError("quantize_int8: empty tensor has no scale; "
+                         "filter zero-size leaves before compressing")
     xf = x.astype(jnp.float32)
     scale = jnp.maximum(jnp.max(jnp.abs(xf)) / 127.0, jnp.float32(1e-12))
     q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
@@ -33,6 +36,12 @@ def compressed_psum(x: jax.Array, axis_name: str) -> tuple[jax.Array, jax.Array]
     Inside shard_map only; the wire format is int8 + one f32 scale per
     shard (a 4x traffic cut vs f32 all-reduce).
     """
+    try:
+        jax.core.axis_frame(axis_name)
+    except (NameError, KeyError) as e:
+        raise ValueError(
+            f"compressed_psum: axis {axis_name!r} is not bound here; "
+            f"call inside shard_map/pmap with this axis name") from e
     q, scale = quantize_int8(x)
     sent = dequantize_int8(q, scale)
     err = x.astype(jnp.float32) - sent

@@ -24,8 +24,29 @@ def mesh_axis_size(mesh, axes) -> int:
         axes = (axes,)
     size = 1
     for a in axes:
+        if a not in mesh.axis_names:
+            raise ValueError(
+                f"mesh_axis_size: axis {a!r} is not on the mesh; "
+                f"available axes: {tuple(mesh.axis_names)}")
         size *= mesh.shape[a]
     return size
+
+
+def require_divisible(dim: int, mesh, axes, *, what: str = "dimension") -> int:
+    """Validate that ``dim`` splits evenly over the named mesh axes.
+
+    Returns the per-shard size.  Raises a clear ValueError *before* any
+    shard_map tracing starts — the alternative is an opaque
+    ``sharding ... is not divisible`` failure from deep inside XLA's
+    partitioner with no mention of which operand was at fault.
+    """
+    size = mesh_axis_size(mesh, axes)
+    if dim % size != 0:
+        raise ValueError(
+            f"{what} of size {dim} does not divide evenly over mesh "
+            f"axes {axes!r} (total {size} shards); pad the {what} to a "
+            f"multiple of {size} or use a smaller mesh")
+    return dim // size
 
 
 def _entry(mesh, dim, axes):

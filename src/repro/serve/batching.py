@@ -34,6 +34,25 @@ every answer is bit-exact or a clean typed rejection, never a hang.
   supervisor hook (tick + report).  ``dist.fault.StragglerPolicy``
   tracks batch wall times so slow batches are visible as stragglers.
 
+* **Mesh scale-out.**  With ``BatchingOptions(mesh=...)`` each padded
+  bucket's batch axis is sharded over a mesh axis (the collective-free
+  sharded-SHA3 lane pattern — every absorb step is elementwise across
+  lanes, so GSPMD partitions without communication).  Per-DEVICE health
+  (``resilience.DeviceHealth``) sits beside the per-backend breaker: a
+  sick device drops out of the mesh via ``dist.fault.
+  survivor_mesh_shape`` and batches keep flowing on the survivors,
+  rejoining automatically after its breaker cooldown.  Host→device
+  feeds are double-buffered: a prep thread packs/pads the next bucket
+  while the feed thread's absorb is still executing, so admission
+  overlaps device work.
+
+* **Measured backend tuning.**  Every bucket execution records its wall
+  time into a ``core.tuning.TuningTable`` keyed by (op, padded
+  geometry, mesh shape); the table rank-orders the fallback chain
+  measured-fastest-first and is installed into ``crossbar`` so
+  ``backend="auto"`` inside any pass consults the measurements.  The
+  table serialises deterministically for warm restarts.
+
 Synchronous use (tests, benchmarks) can construct the engine with
 ``start=False`` and call ``run_once()`` to process one batch
 deterministically on the caller's thread.
@@ -43,19 +62,25 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import queue as queue_mod
 import threading
 import time
 from typing import Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import crossbar as xb
 from repro.core import telemetry
-from repro.core.resilience import (Fault, ResilientExecutor, TimeoutFault,
-                                   default_chain)
+from repro.core.resilience import (DeviceHealth, Fault, ResilientExecutor,
+                                   TimeoutFault, default_chain)
+from repro.core.tuning import TuningTable
 from repro.crypto import keccak
 from repro.crypto.registry import REGISTRY
-from repro.dist.fault import HeartbeatTracker, StragglerPolicy
+from repro.dist.fault import (HeartbeatTracker, StragglerPolicy,
+                              survivor_mesh_shape)
 
 _RATE_BYTES = 136  # SHA3-256 sponge rate
 
@@ -170,11 +195,68 @@ class BatchingOptions:
     chain: Optional[tuple] = None
     watchdog_miss_threshold: int = 3
     batch_log_cap: int = 256
+    # Mesh scale-out: a jax.sharding.Mesh shards each bucket's batch
+    # axis over ``mesh_axis``; None keeps the single-device path.
+    mesh: Optional[object] = None
+    mesh_axis: str = "data"
+    # Overlap host-side packing with device absorb (threaded mode only;
+    # run_once() stays synchronous regardless).
+    double_buffer: bool = True
+    # Measured backend table; None creates a fresh engine-local one.
+    tuning: Optional[TuningTable] = None
+
+
+def _pack_blocks(payloads: Sequence[bytes]) -> np.ndarray:
+    """Host-side half of a bucket execution: pad10*1 every payload and
+    stack the full-state absorb blocks, (B, n_blocks, STATE_BITS).
+
+    Pure numpy so the prep thread can run it while the feed thread's
+    previous absorb still owns the device — the double-buffering split.
+    """
+    blocks = np.stack([keccak._pad101(m, _RATE_BYTES, 0x06)
+                       for m in payloads])          # (B, n_blocks, rate bits)
+    b, n_blocks = blocks.shape[:2]
+    pad_tail = np.zeros((b, n_blocks, keccak.STATE_BITS - _RATE_BYTES * 8),
+                        np.int32)
+    return np.concatenate([blocks, pad_tail], axis=2)
+
+
+def _absorb_digests(blocks: np.ndarray, backend: str, *,
+                    fixed_latency: bool,
+                    interpret: Optional[bool] = None,
+                    mesh=None, mesh_axis: str = "data") -> list:
+    """Device-side half: sponge-absorb pre-packed blocks, one
+    ``keccak_f1600`` per block, and squeeze the digests.
+
+    With ``mesh`` set, the batch axis is sharded over ``mesh_axis`` —
+    every absorb step (XOR + keccak_f1600 with B as payload width) is
+    elementwise across lanes, so GSPMD compiles it collective-free per
+    shard (the PR 5 sharded-SHA3 pattern).  The megakernel backend runs
+    its own Pallas launch and keeps the unsharded path.
+    """
+    b, n_blocks = blocks.shape[:2]
+    states = jnp.zeros((b, keccak.STATE_BITS), jnp.int32)
+    shard = mesh is not None and backend != "megakernel" and b > 1
+    if shard:
+        sharding = NamedSharding(mesh, P(mesh_axis, None))
+        states = jax.device_put(states, sharding)
+    for i in range(n_blocks):
+        block = jnp.asarray(blocks[:, i])
+        if shard:
+            block = jax.device_put(block, sharding)
+        states = states ^ block
+        states = keccak.keccak_f1600(states, backend=backend,
+                                     batch_mode="payload",
+                                     fixed_latency=fixed_latency,
+                                     interpret=interpret)
+    host = np.asarray(states)
+    return [keccak._squeeze(host[i], _RATE_BYTES)[:32] for i in range(b)]
 
 
 def _bucket_digests(payloads: Sequence[bytes], backend: str, *,
                     fixed_latency: bool,
-                    interpret: Optional[bool] = None) -> list:
+                    interpret: Optional[bool] = None,
+                    mesh=None, mesh_axis: str = "data") -> list:
     """SHA3-256 of a padded bucket on one backend (ragged-capable).
 
     Unlike ``keccak.sha3_256_batched`` the lanes need not share a byte
@@ -184,20 +266,9 @@ def _bucket_digests(payloads: Sequence[bytes], backend: str, *,
     single-state ρ∘π plan for every bucket width and the megakernel
     program handles the batch natively.
     """
-    blocks = np.stack([keccak._pad101(m, _RATE_BYTES, 0x06)
-                       for m in payloads])          # (B, n_blocks, rate bits)
-    b, n_blocks = blocks.shape[:2]
-    pad_tail = np.zeros((b, keccak.STATE_BITS - _RATE_BYTES * 8), np.int32)
-    states = jnp.zeros((b, keccak.STATE_BITS), jnp.int32)
-    for i in range(n_blocks):
-        states = states ^ jnp.asarray(
-            np.concatenate([blocks[:, i], pad_tail], axis=1))
-        states = keccak.keccak_f1600(states, backend=backend,
-                                     batch_mode="payload",
-                                     fixed_latency=fixed_latency,
-                                     interpret=interpret)
-    host = np.asarray(states)
-    return [keccak._squeeze(host[i], _RATE_BYTES)[:32] for i in range(b)]
+    return _absorb_digests(_pack_blocks(payloads), backend,
+                           fixed_latency=fixed_latency, interpret=interpret,
+                           mesh=mesh, mesh_axis=mesh_axis)
 
 
 def _keccak_registry_keys(backend: str) -> tuple:
@@ -225,6 +296,27 @@ class BatchingEngine:
         self._work = threading.Condition(self._lock)
         self._running = False
         self._worker: Optional[threading.Thread] = None
+        self._prep: Optional[threading.Thread] = None
+        # Double-buffer staging between the prep (pack/pad) thread and
+        # the device-feed thread: depth 2 means the next bucket's host
+        # work happens while the current absorb owns the device.
+        self._staging: "queue_mod.Queue" = queue_mod.Queue(maxsize=2)
+        # Mesh scale-out state.  Device index d on the full mesh maps to
+        # ``_mesh_devices[d]``; DeviceHealth tracks per-index breakers
+        # and the active mesh is rebuilt from survivors on demand.
+        self.device_health: Optional[DeviceHealth] = None
+        self._mesh_devices: list = []
+        self._survivor_cache: dict = {}
+        if options.mesh is not None:
+            self._mesh_devices = list(np.asarray(
+                options.mesh.devices).reshape(-1))
+            self.device_health = DeviceHealth(len(self._mesh_devices))
+        # Measured backend tuning (core/tuning.py): records every bucket
+        # wall time, rank-orders the fallback chain, and backs
+        # crossbar's backend="auto" for the passes inside each absorb.
+        self.tuning = options.tuning if options.tuning is not None \
+            else TuningTable()
+        xb.set_tuning_table(self.tuning)
         # Worker watchdog + straggler tracking (reusing the dist-layer
         # policies: the serving worker is host 0 of a 1-host fleet).
         self.heartbeats = HeartbeatTracker(
@@ -243,6 +335,11 @@ class BatchingEngine:
         if self._worker is not None and self._worker.is_alive():
             return
         self._running = True
+        if self.opt.double_buffer:
+            self._prep = threading.Thread(target=self._prep_loop,
+                                          name="batching-host-prep",
+                                          daemon=True)
+            self._prep.start()
         self._worker = threading.Thread(target=self._worker_loop,
                                         name="batching-device-feed",
                                         daemon=True)
@@ -250,7 +347,7 @@ class BatchingEngine:
 
     def close(self, *, drain: bool = True, timeout: Optional[float] = None
               ) -> None:
-        """Stop the worker.  ``drain=True`` finishes queued work first;
+        """Stop the worker(s).  ``drain=True`` finishes queued work first;
         otherwise pending requests complete with ``Cancelled``."""
         with self._work:
             if not drain:
@@ -258,6 +355,9 @@ class BatchingEngine:
                     self._queue.popleft().cancel()
             self._running = False
             self._work.notify_all()
+        if self._prep is not None:
+            self._prep.join(timeout)
+            self._prep = None
         if self._worker is not None:
             self._worker.join(timeout)
             self._worker = None
@@ -343,27 +443,92 @@ class BatchingEngine:
         self._queue.extend(keep)
         return batch, rejected
 
-    def _execute_batch(self, batch: list) -> None:
+    # -- mesh membership ----------------------------------------------------
+
+    def report_device_fault(self, device: int) -> bool:
+        """Feed one device-attributed fault into the per-device breaker
+        (external signal: XLA device error, host watchdog, chaos test).
+        Returns True when this fault trips the device out of the mesh —
+        subsequent batches rebuild onto the survivor mesh."""
+        if self.device_health is None:
+            raise ValueError("report_device_fault: engine has no mesh")
+        tripped = self.device_health.record_failure(device)
+        if tripped:
+            telemetry.incr("serve_mesh_device_drops")
+        return tripped
+
+    def _active_mesh(self):
+        """The mesh batches should run on right now: the full mesh, a
+        survivor mesh excluding tripped devices, or None (single-device
+        fallback when too few survivors remain)."""
+        if self.opt.mesh is None or self.device_health is None:
+            return None
+        lost = self.device_health.lost()
+        if not lost:
+            return self.opt.mesh
+        healthy = tuple(self.device_health.healthy())
+        cached = self._survivor_cache.get(healthy)
+        if cached is not None:
+            return cached
+        try:
+            # survivor_mesh_shape shrinks by name; serving meshes are
+            # 1-axis, so compute under "data" and relabel to our axis.
+            shape = survivor_mesh_shape({"data": len(self._mesh_devices)},
+                                        len(lost))
+        except (ValueError, RuntimeError):
+            telemetry.incr("serve_mesh_collapsed")
+            self._survivor_cache[healthy] = None
+            return None
+        s = shape["data"]
+        devs = [self._mesh_devices[d] for d in healthy[:s]]
+        mesh = jax.sharding.Mesh(np.asarray(devs).reshape(s),
+                                 (self.opt.mesh_axis,))
+        telemetry.incr("serve_mesh_rebuilds")
+        self._survivor_cache[healthy] = mesh
+        return mesh
+
+    def _mesh_lane_floor(self) -> int:
+        """Lane padding must cover the FULL mesh so any pow2 survivor
+        mesh still divides it."""
+        return max(1, len(self._mesh_devices))
+
+    # -- dispatch -----------------------------------------------------------
+
+    def _prepare(self, batch: list) -> tuple:
+        """Host half of a bucket execution: pow2 lane padding + pad10*1
+        block packing.  Runs on the prep thread when double-buffered."""
         op, n_blocks = batch[0].bucket
         # Pad the lane count to the next power of two so bucket shapes
         # come from a fixed set: (b_pad, n_blocks) IS the geometry the
-        # fixed-latency contract and the circuit breaker key on.
-        b_pad = 1
+        # fixed-latency contract and the circuit breaker key on.  On a
+        # mesh the floor is the device count so every shard gets lanes.
+        b_pad = self._mesh_lane_floor()
         while b_pad < len(batch):
             b_pad *= 2
         payloads = [r.payload for r in batch]
         payloads += [_dummy_payload(n_blocks)] * (b_pad - len(batch))
         telemetry.incr("serve_padded_lanes", b_pad - len(batch))
+        return op, n_blocks, b_pad, _pack_blocks(payloads)
+
+    def _execute_batch(self, batch: list,
+                       prepared: Optional[tuple] = None) -> None:
+        op, n_blocks, b_pad, blocks = (prepared if prepared is not None
+                                       else self._prepare(batch))
+        mesh = self._active_mesh()
+        mesh_shape = None if mesh is None else dict(mesh.shape)
 
         def run(backend: str) -> list:
-            return _bucket_digests(payloads, backend,
+            return _absorb_digests(blocks, backend,
                                    fixed_latency=self.opt.fixed_latency,
-                                   interpret=self.interpret)
+                                   interpret=self.interpret,
+                                   mesh=mesh, mesh_axis=self.opt.mesh_axis)
 
+        chain = self.tuning.rank_chain(op, (b_pad, n_blocks), self.chain,
+                                       mesh_shape=mesh_shape)
         t0 = time.perf_counter()
         try:
             res = self.executor.execute(
-                op, (b_pad, n_blocks), run, chain=self.chain,
+                op, (b_pad, n_blocks), run, chain=chain,
                 registry_keys=_keccak_registry_keys)
         except Fault as e:
             telemetry.incr("serve_failed", len(batch))
@@ -371,8 +536,19 @@ class BatchingEngine:
                 req._finish(exc=e)
             return
         finally:
-            self.straggler.observe(time.perf_counter() - t0)
+            wall = time.perf_counter() - t0
+            self.straggler.observe(wall)
             telemetry.incr("serve_batches")
+        self.tuning.record(op, (b_pad, n_blocks), res.backend, wall,
+                           mesh_shape=mesh_shape)
+        if mesh is not None:
+            telemetry.incr("serve_mesh_batches")
+            # A successful mesh batch is a health signal for every
+            # participating device (half-open probes rejoin here).
+            active = set(np.asarray(mesh.devices).reshape(-1).tolist())
+            for d, dev in enumerate(self._mesh_devices):
+                if dev in active:
+                    self.device_health.record_success(d)
         self.batch_log.append((op, (b_pad, n_blocks), res.backend,
                                len(batch)))
         telemetry.incr("serve_completed", len(batch))
@@ -391,7 +567,36 @@ class BatchingEngine:
             self._execute_batch(batch)
         return len(batch) + rejected
 
+    def _prep_loop(self) -> None:
+        """Double-buffer producer: pack/pad the next bucket while the
+        feed thread's current absorb still owns the device.  The bounded
+        staging queue (depth 2) provides the backpressure."""
+        while True:
+            with self._work:
+                while self._running and not self._queue:
+                    self._work.wait(self.opt.poll_interval_s)
+                if not self._running and not self._queue:
+                    break
+                batch, _ = self._take_batch_locked()
+            if batch:
+                self._staging.put((batch, self._prepare(batch)))
+        self._staging.put(None)  # sentinel: feed thread drains then exits
+
     def _worker_loop(self) -> None:
+        if self.opt.double_buffer:
+            while True:
+                try:
+                    item = self._staging.get(
+                        timeout=self.opt.poll_interval_s)
+                except queue_mod.Empty:
+                    self.heartbeats.beat(0)
+                    continue
+                if item is None:
+                    return
+                batch, prepared = item
+                self.heartbeats.beat(0)
+                self._execute_batch(batch, prepared)
+            return
         while True:
             with self._work:
                 while self._running and not self._queue:
@@ -423,4 +628,12 @@ class BatchingEngine:
         out["breaker_open"] = [
             list(map(str, k)) for k in self.executor.breaker.open_keys()]
         out["straggler_deadline_s"] = self.straggler.deadline
+        out["tuning_entries"] = len(self.tuning)
+        if self.device_health is not None:
+            mesh = self._active_mesh()
+            out["mesh_devices"] = len(self._mesh_devices)
+            out["mesh_active"] = (0 if mesh is None
+                                  else int(np.prod(list(
+                                      dict(mesh.shape).values()))))
+            out["mesh_lost"] = self.device_health.lost()
         return out
