@@ -1,0 +1,151 @@
+"""Instrumentation-overhead bound for the disabled tracing path.
+
+The observability layer's core promise is that it is free when off:
+``obs.span()`` with tracing disabled returns a two-slot timer and takes
+no locks.  This benchmark certifies the <5% overhead acceptance bound
+in a way that is honest on any machine (no cross-machine baseline
+comparison, which CI hardware variance would make meaningless):
+
+1. **Microbenchmark** the disabled span call (enter + exit) — ns/call.
+2. **Drain** the serving quick workload with tracing disabled and count
+   how many span() calls took the disabled fast path during it
+   (``obs.disabled_call_count()`` is exactly that counter).
+3. The overhead fraction is (calls x ns_per_call) / drain wall — the
+   total instrumentation cost the engine paid as a fraction of the work
+   it did.  Assert < 5%.
+
+The enabled-path cost is measured alongside for the record (it is NOT
+bounded — recording costs what it costs; the guarantee is only about
+the default-off path).
+
+Results land in BENCH_obs_overhead.json (quick: _quick suffix).
+
+Usage: PYTHONPATH=src python -m benchmarks.bench_obs_overhead [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+from benchmarks.bench_serving import _payloads
+from repro import obs
+from repro.core import telemetry
+from repro.serve.batching import BatchingEngine, BatchingOptions
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_JSON = os.path.join(REPO, "BENCH_obs_overhead.json")
+OUT_JSON_QUICK = os.path.join(REPO, "BENCH_obs_overhead_quick.json")
+
+OVERHEAD_BOUND = 0.05
+
+
+def _span_cost_ns(n: int, enabled: bool) -> float:
+    """Median-of-5 cost of one span() enter/exit, in nanoseconds."""
+    was = obs.enabled()
+    (obs.enable if enabled else obs.disable)()
+    try:
+        reps = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            for _ in range(n):
+                with obs.span("bench_probe"):
+                    pass
+            reps.append((time.perf_counter() - t0) / n * 1e9)
+            obs.reset()  # don't let the enabled runs grow the buffer
+        return float(np.median(reps))
+    finally:
+        (obs.enable if was else obs.disable)()
+
+
+def _drain(payloads, max_batch: int) -> tuple:
+    """Serve the workload synchronously; returns (wall_s, span_calls)."""
+    eng = BatchingEngine(
+        BatchingOptions(max_batch=max_batch, max_queue=len(payloads)),
+        start=False)
+    telemetry.reset()
+    calls0 = obs.disabled_call_count()
+    for p in payloads:
+        eng.submit(p)
+    t0 = time.perf_counter()
+    while eng.run_once():
+        pass
+    wall = time.perf_counter() - t0
+    return wall, obs.disabled_call_count() - calls0
+
+
+def run(quick: bool = False) -> dict:
+    n = 200 if quick else 2000
+    max_batch = 16
+    micro_n = 20_000 if quick else 200_000
+
+    disabled_ns = _span_cost_ns(micro_n, enabled=False)
+    enabled_ns = _span_cost_ns(micro_n // 10, enabled=True)
+
+    obs.disable()
+    payloads = _payloads(n, seed=0)
+    _drain(payloads[: 2 * max_batch], max_batch)       # warm XLA caches
+    wall_s, span_calls = _drain(payloads, max_batch)
+
+    overhead_s = span_calls * disabled_ns * 1e-9
+    frac = overhead_s / wall_s if wall_s > 0 else 0.0
+
+    rec = {
+        "requests": n,
+        "max_batch": max_batch,
+        "wall_s": round(wall_s, 4),
+        "span_calls": span_calls,
+        "span_calls_per_request": round(span_calls / n, 2),
+        "disabled_span_ns": round(disabled_ns, 1),
+        "enabled_span_ns": round(enabled_ns, 1),
+        "overhead_s": round(overhead_s, 6),
+        "overhead_frac": frac,
+    }
+    row("obs_overhead", disabled_ns=rec["disabled_span_ns"],
+        enabled_ns=rec["enabled_span_ns"], span_calls=span_calls,
+        overhead_frac=round(frac, 6))
+
+    acceptance = {
+        "criterion": f"total disabled-span cost during a serving drain "
+                     f"is <{OVERHEAD_BOUND:.0%} of the drain wall "
+                     "(span_calls x ns_per_disabled_call / wall)",
+        "span_overhead_frac": round(frac, 6),
+        "disabled_span_ns": rec["disabled_span_ns"],
+        "enabled_span_ns": rec["enabled_span_ns"],
+        "bound": OVERHEAD_BOUND,
+        "pass": bool(frac < OVERHEAD_BOUND),
+    }
+    assert acceptance["pass"], acceptance
+
+    report = {
+        "benchmark": "obs_overhead",
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "jax_backend": jax.default_backend(),
+        "quick": quick,
+        "rows": [rec],
+        "acceptance": acceptance,
+    }
+    out_path = OUT_JSON_QUICK if quick else OUT_JSON
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {out_path}")
+    print(f"# acceptance: {acceptance}")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -35,9 +35,16 @@ BENCH_FILES = [
                             "hashes_per_s_fault_1pct",
                             "p99_ms_fault_1pct",
                             "fault_overhead_x",
+                            "queue_wait_p50_ms",
+                            "pack_p50_ms",
+                            "absorb_p50_ms",
+                            "absorb_p99_ms",
                             "mesh_hashes_per_s",
                             "mesh_p99_ms",
                             "mesh_requests")),
+    ("BENCH_obs_overhead.json", ("span_overhead_frac",
+                                 "disabled_span_ns",
+                                 "pass")),
     ("BENCH_mesh_sharded.json", (
         "modeled_speedup_8dev_lane_parallel_keccak",
         "sharded_bit_exact_all",

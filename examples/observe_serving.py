@@ -1,0 +1,88 @@
+"""Traced serving walkthrough: spans, metrics, timeline, drift.
+
+Enables ``repro.obs``, serves a burst of SHA3-256 requests through the
+continuous-batching engine, then exports everything an operator would
+look at:
+
+* ``observe_trace.json``   — Chrome/Perfetto timeline (open it at
+  https://ui.perfetto.dev or chrome://tracing) showing each request's
+  lifecycle — queue wait, bucket pack, device absorb — stitched across
+  the engine's threads by request-scoped trace ids;
+* ``observe_metrics.json`` — the JSON metrics snapshot: per-span latency
+  histograms (p50/p90/p99/max), live gauges (queue depth, breaker
+  state, cache sizes), and every engine telemetry counter;
+* Prometheus exposition text + the fixed-latency drift report, printed.
+
+Both exports are validated structurally before being written — the same
+validators the CI ``obs`` smoke job uses.
+
+Run:  PYTHONPATH=src python examples/observe_serving.py
+"""
+
+import hashlib
+import json
+import os
+
+from repro import obs
+from repro.serve.batching import BatchingEngine, BatchingOptions
+
+OUT_DIR = os.path.dirname(os.path.abspath(__file__))
+
+obs.enable()  # equivalent to running with REPRO_OBS=1
+
+# -- serve a burst of variable-length payloads ------------------------------
+payloads = [bytes([i % 256]) * (7 + 23 * i % 400) for i in range(48)]
+engine = BatchingEngine(BatchingOptions(max_batch=8), start=False)
+requests = [engine.submit(p) for p in payloads]
+while engine.run_once():
+    pass
+digests = [r.result(timeout=120) for r in requests]
+assert all(d == hashlib.sha3_256(p).digest()
+           for p, d in zip(payloads, digests)), "digest mismatch"
+print(f"served {len(payloads)} requests bit-exactly "
+      f"({len(obs.finished_spans())} spans recorded)")
+
+# -- per-request timeline ---------------------------------------------------
+sample = requests[0]
+stages = [(s.name, s.duration_s * 1e3) for s in obs.finished_spans()
+          if s.trace_id == sample.trace_id]
+print(f"\nrequest trace_id={sample.trace_id} lifecycle:")
+for name, ms in stages:
+    print(f"  {name:<16} {ms:8.3f} ms")
+
+# -- exports (validated, then written) --------------------------------------
+trace_path = os.path.join(OUT_DIR, "observe_trace.json")
+trace_obj = obs.export_chrome_trace(trace_path)
+summary = obs.validate_chrome_trace(trace_obj)
+print(f"\nwrote {trace_path}: {summary['events']} events across "
+      f"{summary['threads']} threads (valid trace-event JSON)")
+
+snap = obs.snapshot()
+metrics_path = os.path.join(OUT_DIR, "observe_metrics.json")
+with open(metrics_path, "w") as f:
+    json.dump(snap, f, indent=2, default=repr)
+    f.write("\n")
+print(f"wrote {metrics_path}: {len(snap['histograms'])} histograms, "
+      f"{len(snap['gauges'])} gauges, {len(snap['counters'])} counters")
+
+prom = obs.prometheus_text()
+obs.validate_prometheus_text(prom)
+print("\nPrometheus exposition (histogram families + gauges):")
+for line in prom.splitlines():
+    if "_count{" in line or line.startswith("# TYPE repro_serve"):
+        print(f"  {line}")
+
+print("\nper-span latency quantiles:")
+for name, st in sorted(snap["histograms"].items()):
+    print(f"  {name:<18} n={st['count']:<4} p50={st['p50_s']*1e3:8.3f} ms  "
+          f"p99={st['p99_s']*1e3:8.3f} ms  max={st['max_s']*1e3:8.3f} ms")
+
+# -- fixed-latency drift ----------------------------------------------------
+# The drift monitor watched every observed fixed-latency region above;
+# a stable engine reports drifting=False everywhere, with frozen
+# structural signatures (pass counts) per op.
+print("\nfixed-latency drift report:")
+for op, rec in obs.drift_report().items():
+    print(f"  {op}: n_obs={rec['n_obs']} passes={rec['passes']} "
+          f"drifting={rec['drifting']} "
+          f"mismatches={rec['structural_mismatches']}")

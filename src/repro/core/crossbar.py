@@ -63,6 +63,7 @@ from typing import Optional, Union
 import jax
 import jax.numpy as jnp
 
+from repro import obs as _obs
 from repro.core import semiring as sr_mod
 from repro.core import transform as _t
 from repro.core.semiring import GF2, GF2_8, REAL, Semiring
@@ -379,6 +380,11 @@ def compile_cache_info() -> dict:
                 pinned=len(_PINNED_COMPILE))
 
 
+# Cache occupancy as export-time gauges (read lazily at metrics dump).
+_obs.metrics.gauge_fn("compile_cache_size", lambda: len(_COMPILE_CACHE))
+_obs.metrics.gauge_fn("compile_cache_pinned", lambda: len(_PINNED_COMPILE))
+
+
 def clear_compile_cache() -> None:
     _COMPILE_CACHE.clear()
     _PINNED_COMPILE.clear()
@@ -473,8 +479,11 @@ def compile_plan(plan: PermutePlan, *, block_o: int = 128,
             return hit
     _COMPILE_CACHE_STATS["misses"] += 1
 
-    occ, pair_o, pair_n, active, num = _compile_schedule(
-        plan, block_o, block_n)
+    with _obs.span("compile_plan", mode=plan.mode, n_out=plan.n_out,
+                   n_in=plan.n_in, block_o=block_o, block_n=block_n,
+                   pin=pin):
+        occ, pair_o, pair_n, active, num = _compile_schedule(
+            plan, block_o, block_n)
     to = -(-plan.n_out // block_o)
     tn = -(-plan.n_in // block_n)
     # Storing (and the int() demotion) additionally require a clean trace
@@ -642,6 +651,7 @@ def apply_plan(
     else:
         merge2 = None
 
+    requested = backend
     if backend == "auto":
         backend = _choose_backend(plan)
     if backend in ("einsum", "kernel", "sparse", "reference"):
@@ -665,32 +675,38 @@ def apply_plan(
                 or merge2 is not None or out_mask is not None)
     cov = coverage(plan) if need_cov else None
 
-    if backend == "reference":
-        out2 = _apply_reference(plan, x2)
-    elif sr is GF2_8 and backend in ("einsum", "kernel", "sparse"):
-        # GF(2^8)-weighted plans execute as their GF(2) bit lift on the
-        # chosen backend: one crossbar evaluation over 8x the rows.
-        # The take lowering only substitutes for the einsum backend —
-        # an explicitly requested Pallas backend runs its kernel.
-        fast = _take_fastpath(plan, x2) if backend == "einsum" else None
-        out2 = fast if fast is not None else _apply_gf2_8(
-            plan, x2, backend, interpret)
-    elif backend == "kernel":
-        from repro.kernels import ops as _kops  # local import: kernels optional
-        out2 = _kops.crossbar_permute(plan, x2, interpret=interpret)
-    elif backend == "sparse":
-        from repro.kernels import ops as _kops
-        out2 = _kops.crossbar_permute_sparse(plan, x2, interpret=interpret)
-        # The tile-skipping kernel never visits unoccupied output tiles,
-        # so their rows hold whatever was in the buffer — pin them to the
-        # exact zeros every other backend produces.  Redundant when merge
-        # is given: the merge select below overwrites those rows anyway.
-        if merge2 is None:
-            out2 = jnp.where(cov[:, None], out2, 0)
-    elif backend == "einsum":
-        out2 = _apply_einsum(plan, x2)
-    else:
-        raise ValueError(f"unknown backend {backend!r}")
+    with _obs.span("apply_plan", backend=backend, requested=requested,
+                   mode=plan.mode, n_out=plan.n_out, n_in=plan.n_in,
+                   semiring=sr.name):
+        if backend == "reference":
+            out2 = _apply_reference(plan, x2)
+        elif sr is GF2_8 and backend in ("einsum", "kernel", "sparse"):
+            # GF(2^8)-weighted plans execute as their GF(2) bit lift on
+            # the chosen backend: one crossbar evaluation over 8x the
+            # rows.  The take lowering only substitutes for the einsum
+            # backend — an explicitly requested Pallas backend runs its
+            # kernel.
+            fast = _take_fastpath(plan, x2) if backend == "einsum" else None
+            out2 = fast if fast is not None else _apply_gf2_8(
+                plan, x2, backend, interpret)
+        elif backend == "kernel":
+            from repro.kernels import ops as _kops  # kernels optional
+            out2 = _kops.crossbar_permute(plan, x2, interpret=interpret)
+        elif backend == "sparse":
+            from repro.kernels import ops as _kops
+            out2 = _kops.crossbar_permute_sparse(plan, x2,
+                                                 interpret=interpret)
+            # The tile-skipping kernel never visits unoccupied output
+            # tiles, so their rows hold whatever was in the buffer —
+            # pin them to the exact zeros every other backend produces.
+            # Redundant when merge is given: the merge select below
+            # overwrites those rows anyway.
+            if merge2 is None:
+                out2 = jnp.where(cov[:, None], out2, 0)
+        elif backend == "einsum":
+            out2 = _apply_einsum(plan, x2)
+        else:
+            raise ValueError(f"unknown backend {backend!r}")
 
     if out_mask is not None:
         cov = cov & out_mask.astype(bool)

@@ -60,6 +60,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as _obs
 from repro.core import crossbar as xb
 from repro.core import plan_algebra as pa
 from repro.core.semiring import GF2, REAL
@@ -358,6 +359,9 @@ def program_cache_info() -> dict:
                 capacity=_EXEC_CACHE_CAPACITY)
 
 
+_obs.metrics.gauge_fn("program_exec_cache_size", lambda: len(_EXEC_CACHE))
+
+
 def clear_program_cache() -> None:
     _EXEC_CACHE.clear()
     _EXEC_STATS.update(hits=0, misses=0)
@@ -454,7 +458,8 @@ def _run_megakernel(program: PlanProgram, x2: Array,
     d_pad = d + (-d) % 128
     key = (id(program), n_pad, d_pad, str(x2.dtype), bool(interpret))
     hit = _EXEC_CACHE.get(key)
-    if hit is not None and hit[0] is program:
+    cache_hit = hit is not None and hit[0] is program
+    if cache_hit:
         _EXEC_STATS["hits"] += 1
         _EXEC_CACHE.move_to_end(key)
         run = hit[1]
@@ -468,7 +473,10 @@ def _run_megakernel(program: PlanProgram, x2: Array,
         _PROGRAM_LAUNCHES += 1
         _PASSES_AVOIDED += program.passes
     xp = _pad_axis(_pad_axis(x2, 8, 0), 128, 1)
-    return run(xp)[:n, :d]
+    with _obs.span("program_launch", program=program.name,
+                   passes=program.passes, n=n, d=d,
+                   exec_cache_hit=cache_hit):
+        return run(xp)[:n, :d]
 
 
 # ---------------------------------------------------------------------------

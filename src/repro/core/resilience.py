@@ -51,6 +51,7 @@ from typing import Callable, Optional, Sequence, Union
 
 import jax
 
+from repro import obs as _obs
 from repro.core import telemetry
 from repro.core.static_registry import FixedLatencyError, StaticPlanRegistry
 
@@ -316,77 +317,93 @@ class ResilientExecutor:
         attempts = 0
         last_fault: Optional[Fault] = None
 
-        for chain_index, backend in enumerate(use_chain):
-            key = (op, geometry, backend)
-            if not self.breaker.allow(key):
-                telemetry.incr("resilience_breaker_skips")
-                faults.append((backend, "BreakerOpen", "circuit open"))
-                continue
-            if self.breaker.state(key) == "half_open":
-                telemetry.incr("resilience_breaker_probes")
-            drift_quarantined = False
-            attempt = 0
-            while attempt < self.retry.max_attempts:
-                if deadline is not None and self.clock() >= deadline:
-                    telemetry.incr("resilience_timeouts")
-                    raise TimeoutFault(
-                        f"{op}{geometry}: deadline expired before backend "
-                        f"{backend!r} attempt {attempt}")
-                try:
-                    attempts += 1
-                    value = run(backend)
-                except Exception as e:  # noqa: BLE001 — classify, degrade
-                    fault_cls = classify(e)
-                    faults.append((backend, fault_cls.__name__, str(e)))
-                    telemetry.incr("resilience_faults")
-                    if self.breaker.record_failure(key):
-                        telemetry.incr("resilience_breaker_trips")
-                    last_fault = fault_cls(
-                        f"{op}{geometry}: backend {backend!r} failed "
-                        f"(attempt {attempt + 1}): {e}")
-                    last_fault.__cause__ = e
-                    if fault_cls is TimeoutFault:
+        with _obs.span("resilient_execute", op=op) as sp:
+            for chain_index, backend in enumerate(use_chain):
+                key = (op, geometry, backend)
+                if not self.breaker.allow(key):
+                    telemetry.incr("resilience_breaker_skips")
+                    faults.append((backend, "BreakerOpen", "circuit open"))
+                    sp.event("breaker_skip", backend=backend)
+                    continue
+                if self.breaker.state(key) == "half_open":
+                    telemetry.incr("resilience_breaker_probes")
+                    sp.event("breaker_probe", backend=backend)
+                drift_quarantined = False
+                attempt = 0
+                while attempt < self.retry.max_attempts:
+                    if deadline is not None and self.clock() >= deadline:
                         telemetry.incr("resilience_timeouts")
-                        raise last_fault
-                    if fault_cls is DriftFault:
-                        if (self.registry is not None and registry_keys
-                                and not drift_quarantined):
-                            keys = (registry_keys(backend)
-                                    if callable(registry_keys)
-                                    else registry_keys)
-                            counts = [self.registry.quarantine(k)
-                                      for k in keys]
-                            telemetry.incr("resilience_quarantines")
-                            drift_quarantined = True
-                            if counts and max(counts) <= 1:
-                                # First drift of these entries: they were
-                                # evicted and will rebuild lazily — one
-                                # free retry on the same backend.
-                                continue
-                        telemetry.incr("resilience_drift_escalations")
-                        break  # repeat drift: escalate to next backend
-                    attempt += 1
-                    if (attempt < self.retry.max_attempts
-                            and issubclass(fault_cls, self.retry.retryable)):
-                        telemetry.incr("resilience_retries")
-                        backoff = self.retry.backoff_s(attempt - 1)
-                        if backoff > 0:
-                            self.sleep(backoff)
-                        continue
-                    break  # non-retryable or attempts exhausted
-                else:
-                    self.breaker.record_success(key)
-                    telemetry.incr(f"resilience_backend_{backend}")
-                    if chain_index > 0:
-                        telemetry.incr("resilience_fallbacks")
-                    return ResilientResult(value, backend, chain_index,
-                                           attempts, faults)
-        telemetry.incr("resilience_exhausted")
-        if last_fault is None:
-            last_fault = LaunchFault(
-                f"{op}{geometry}: every backend in {use_chain} is "
-                "circuit-open; no attempt was possible")
-        raise last_fault
+                        raise TimeoutFault(
+                            f"{op}{geometry}: deadline expired before "
+                            f"backend {backend!r} attempt {attempt}")
+                    try:
+                        attempts += 1
+                        value = run(backend)
+                    except Exception as e:  # noqa: BLE001 — classify
+                        fault_cls = classify(e)
+                        faults.append((backend, fault_cls.__name__, str(e)))
+                        telemetry.incr("resilience_faults")
+                        sp.event("fault", backend=backend,
+                                 fault=fault_cls.__name__)
+                        if self.breaker.record_failure(key):
+                            telemetry.incr("resilience_breaker_trips")
+                            sp.event("breaker_trip", backend=backend)
+                        last_fault = fault_cls(
+                            f"{op}{geometry}: backend {backend!r} failed "
+                            f"(attempt {attempt + 1}): {e}")
+                        last_fault.__cause__ = e
+                        if fault_cls is TimeoutFault:
+                            telemetry.incr("resilience_timeouts")
+                            raise last_fault
+                        if fault_cls is DriftFault:
+                            if (self.registry is not None and registry_keys
+                                    and not drift_quarantined):
+                                keys = (registry_keys(backend)
+                                        if callable(registry_keys)
+                                        else registry_keys)
+                                counts = [self.registry.quarantine(k)
+                                          for k in keys]
+                                telemetry.incr("resilience_quarantines")
+                                sp.event("quarantine", backend=backend)
+                                drift_quarantined = True
+                                if counts and max(counts) <= 1:
+                                    # First drift of these entries: they
+                                    # were evicted and will rebuild
+                                    # lazily — one free retry on the
+                                    # same backend.
+                                    continue
+                            telemetry.incr("resilience_drift_escalations")
+                            break  # repeat drift: escalate to next backend
+                        attempt += 1
+                        if (attempt < self.retry.max_attempts
+                                and issubclass(fault_cls,
+                                               self.retry.retryable)):
+                            telemetry.incr("resilience_retries")
+                            sp.event("retry", backend=backend,
+                                     attempt=attempt)
+                            backoff = self.retry.backoff_s(attempt - 1)
+                            if backoff > 0:
+                                self.sleep(backoff)
+                            continue
+                        break  # non-retryable or attempts exhausted
+                    else:
+                        self.breaker.record_success(key)
+                        telemetry.incr(f"resilience_backend_{backend}")
+                        if chain_index > 0:
+                            telemetry.incr("resilience_fallbacks")
+                            sp.event("fallback", backend=backend,
+                                     chain_index=chain_index)
+                        sp.set(backend=backend, attempts=attempts,
+                               chain_index=chain_index)
+                        return ResilientResult(value, backend, chain_index,
+                                               attempts, faults)
+            telemetry.incr("resilience_exhausted")
+            sp.set(attempts=attempts, exhausted=True)
+            if last_fault is None:
+                last_fault = LaunchFault(
+                    f"{op}{geometry}: every backend in {use_chain} is "
+                    "circuit-open; no attempt was possible")
+            raise last_fault
 
 
 # ---------------------------------------------------------------------------

@@ -45,10 +45,13 @@ chained per-pass path.
 from __future__ import annotations
 
 import contextlib
+import time
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
 
 import jax
 
+from repro import obs as _obs
+from repro.obs import drift as _drift
 from repro.core import crossbar as xb
 from repro.core import plan_program as pp
 from repro.core import telemetry
@@ -360,8 +363,11 @@ class StaticPlanRegistry:
         """
         audit = (telemetry.no_host_sync() if audit_host_syncs
                  else contextlib.nullcontext())
+        t0 = time.perf_counter()
         try:
-            with telemetry.delta() as d, audit:
+            with _obs.span("registry_observe", op=str(name),
+                           registry=self.name, backend=backend or ""), \
+                    telemetry.delta() as d, audit:
                 yield
         except telemetry.HostSyncError as e:
             raise FixedLatencyError(
@@ -393,6 +399,12 @@ class StaticPlanRegistry:
             sig = sig + (launches,
                          tuple(self.program_fingerprint(k)
                                for k in program_keys))
+        # Feed the streaming drift monitor BEFORE the signature
+        # comparison: a drifting observation must be visible even when
+        # this very call is about to raise FixedLatencyError.
+        _drift.MONITOR.observe(f"{self.name}:{name}",
+                               passes=calls, fingerprint=sig[1:],
+                               wall_s=time.perf_counter() - t0)
         key = (name, tuple(shapes), backend)
         prev = self._observed.get(key)
         if prev is None:

@@ -38,6 +38,7 @@ regions in it and converts violations to ``FixedLatencyError``.
 from __future__ import annotations
 
 import contextlib
+import sys
 import threading
 
 import jax
@@ -124,6 +125,12 @@ def reset() -> None:
         pp.reset_program_counters()
         pp.clear_program_cache()
         _COUNTERS.clear()
+    # Observability state (spans, histograms, drift baselines) resets
+    # with the counters so the conftest fixture isolates it too.  Lazy:
+    # only if the obs package is actually loaded in this process.
+    obs = sys.modules.get("repro.obs")
+    if obs is not None:
+        obs.reset()
 
 
 @contextlib.contextmanager
@@ -164,16 +171,24 @@ def delta():
     """Context manager yielding a callable that returns counter deltas.
 
     Sizes are reported as end-state (not differenced) since cache size is
-    a level, not a flow.  Counters that first appear inside the block
-    (named `incr` counters) difference against an implicit zero.
+    a level, not a flow.  The delta's key set is the UNION of both
+    snapshots with missing sides pre-seeded to 0: a named ``incr``
+    counter that first appears inside the block differences against an
+    implicit zero baseline, and a key present only at baseline (a
+    subsystem counter cleared mid-window) still shows up — as a
+    negative flow or a 0 size — instead of silently vanishing, so
+    consumers never need to ``get()``-guard the result.
     """
     before = snapshot()
 
     def diff() -> dict:
         after = snapshot()
         out = {}
-        for k, v in after.items():
-            out[k] = v if k.endswith("_size") else v - before.get(k, 0)
+        for k in set(before) | set(after):
+            if k.endswith("_size"):
+                out[k] = after.get(k, 0)
+            else:
+                out[k] = after.get(k, 0) - before.get(k, 0)
         return out
 
     yield diff

@@ -75,6 +75,19 @@ class TuningTable:
                 ent["ewma_s"] = a * float(seconds) + (1 - a) * ent["ewma_s"]
                 ent["n"] += 1
 
+    def record_span(self, sp, op: str, geometry, backend: str, *,
+                    mesh_shape=None) -> None:
+        """Fold a finished ``repro.obs`` span's duration into the EWMA.
+
+        The span timing IS the stopwatch: callers wrap the measured
+        region in ``obs.span(...)`` and hand the finished span here —
+        one clock for tracing, metrics, and tuning.  Works whether or
+        not the span was *recorded* (disabled spans still time
+        themselves).
+        """
+        self.record(op, geometry, backend, max(sp.duration_s, 0.0),
+                    mesh_shape=mesh_shape)
+
     # -- queries ------------------------------------------------------------
 
     def best(self, op: str, geometry, *, mesh_shape=None,

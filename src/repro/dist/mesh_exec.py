@@ -45,6 +45,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import obs as _obs
 from repro.core import crossbar as xb
 from repro.core import plan_algebra as pa
 from repro.core import plan_program as pp
@@ -240,11 +241,17 @@ def sharded_apply_fn(plan: xb.PermutePlan, mesh: Mesh, *,
     if s == 1:
         return jax.jit(lambda x: xb.apply_plan(g, x, backend=backend))
 
-    conn = shard_connectivity(g, s)
-    schedule = collective_schedule(conn)
-    n_i_loc = g.n_in // s
-    n_in = g.n_in
-    idx, weights, _, semiring = _stack_restricted(g, s)
+    # Host-side schedule derivation happens once per builder call; the
+    # per-round device work is inside jit and cannot carry host spans,
+    # so this span (with rounds/shards attrs) is the traced unit.
+    with _obs.span("sharded_schedule_derive", shards=s, axis=axis,
+                   n_out=g.n_out, n_in=g.n_in) as _sp:
+        conn = shard_connectivity(g, s)
+        schedule = collective_schedule(conn)
+        _sp.set(rounds=sum(1 for r in schedule if len(r)))
+        n_i_loc = g.n_in // s
+        n_in = g.n_in
+        idx, weights, _, semiring = _stack_restricted(g, s)
     diag = bool(np.diag(conn).any())
     fold_mod2 = semiring is GF2
     # Per-round receive routing, precomputed: src_of[r][dst] = which
@@ -330,11 +337,17 @@ def apply_plan_sharded(plan: xb.PermutePlan, x: Array, mesh: Mesh, *,
             f"apply_plan_sharded: payload leading dim {x.shape[0]} != "
             f"plan n_in {g.n_in}")
     fn = sharded_apply_fn(g, mesh, axis=axis, backend=backend)
-    out = fn(x)
-    telemetry.incr("mesh_apply_calls")
     s = shd.mesh_axis_size(mesh, axis)
-    if s > 1 and not any(
-            len(r) for r in collective_schedule(shard_connectivity(g, s))):
+    rounds = 0
+    if s > 1:
+        rounds = sum(1 for r in collective_schedule(shard_connectivity(g, s))
+                     if len(r))
+    with _obs.span("collective_apply", shards=s, rounds=rounds,
+                   axis=axis, backend=backend, n_out=g.n_out,
+                   n_in=g.n_in):
+        out = fn(x)
+    telemetry.incr("mesh_apply_calls")
+    if s > 1 and rounds == 0:
         telemetry.incr("mesh_apply_collective_free")
     return out
 
@@ -448,7 +461,10 @@ def run_program_sharded(program, x: Array, mesh: Mesh, *,
     fn = sharded_program_fn(program, mesh, axis=axis, backend=backend,
                             pass_backend=pass_backend, interpret=interpret)
     telemetry.incr("mesh_program_launches")
-    return fn(x)
+    with _obs.span("collective_program", program=program.name,
+                   shards=shd.mesh_axis_size(mesh, axis), axis=axis,
+                   backend=backend, columns=x.shape[1]):
+        return fn(x)
 
 
 def sharded_program_fn(program, mesh: Mesh, *, axis: str = "data",

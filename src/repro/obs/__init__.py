@@ -1,0 +1,113 @@
+"""``repro.obs`` — tracing, metrics, timeline export, drift monitoring.
+
+The observability layer for the permutation engine.  Four pieces:
+
+* :mod:`repro.obs.tracing` — thread-safe spans with request-scoped
+  trace IDs; **no-op when disabled** (the default; enable with
+  ``REPRO_OBS=1`` or :func:`enable`).
+* :mod:`repro.obs.metrics` — log-bucketed latency histograms fed from
+  spans, plus gauges; JSON snapshot + Prometheus text export.
+* :mod:`repro.obs.timeline` — Chrome/Perfetto trace-event JSON dump of
+  any traced window.
+* :mod:`repro.obs.drift` — streaming fixed-latency drift monitor
+  (warns on timing drift before the structural contract trips
+  quarantine).
+
+Import-graph note: this package sits *below* ``repro.core`` — the
+crossbar, resilience, registry, and serving modules all import it — so
+nothing here may import ``repro.core`` at module level.  The only
+``repro.core`` uses (telemetry counters in the exporters) are lazy.
+
+Typical use::
+
+    from repro import obs
+
+    obs.enable()
+    with obs.span("apply_plan", op="sha3", backend="auto") as sp:
+        out = apply_plan(plan, x)
+        sp.set(backend=resolved)
+    print(obs.prometheus_text())
+    obs.export_chrome_trace("trace.json")
+    print(obs.drift_report())
+"""
+
+from repro.obs import metrics as _metrics  # registers the span sink
+from repro.obs import tracing as _tracing
+from repro.obs.drift import MONITOR as drift_monitor
+from repro.obs.drift import DriftMonitor
+from repro.obs.metrics import METRICS as metrics
+from repro.obs.metrics import Gauge, Histogram, MetricsRegistry
+from repro.obs.timeline import chrome_trace, export_chrome_trace
+from repro.obs.tracing import (
+    Span,
+    add_sink,
+    current_trace_id,
+    disable,
+    disabled_call_count,
+    dropped_count,
+    enable,
+    enabled,
+    event,
+    finished_spans,
+    new_trace_id,
+    set_buffer_capacity,
+    span,
+    span_at,
+)
+from repro.obs.validate import validate_chrome_trace, validate_prometheus_text
+
+
+def snapshot(**kw) -> dict:
+    """JSON-able metrics snapshot (histograms + gauges + counters)."""
+    return _metrics.METRICS.snapshot(**kw)
+
+
+def prometheus_text(**kw) -> str:
+    """Prometheus exposition-format dump of the metrics registry."""
+    return _metrics.METRICS.prometheus_text(**kw)
+
+
+def drift_report() -> dict:
+    """Per-op fixed-latency drift status from the global monitor."""
+    return drift_monitor.report()
+
+
+def reset() -> None:
+    """Clear spans, metrics, and drift baselines (test isolation;
+    leaves the enabled flag and registered sinks alone)."""
+    from repro.obs import drift as _drift
+    _tracing.clear()
+    _metrics.reset()
+    _drift.reset()
+
+
+__all__ = [
+    "Span",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "DriftMonitor",
+    "span",
+    "span_at",
+    "event",
+    "enable",
+    "disable",
+    "enabled",
+    "new_trace_id",
+    "current_trace_id",
+    "add_sink",
+    "finished_spans",
+    "dropped_count",
+    "disabled_call_count",
+    "set_buffer_capacity",
+    "metrics",
+    "snapshot",
+    "prometheus_text",
+    "chrome_trace",
+    "export_chrome_trace",
+    "drift_monitor",
+    "drift_report",
+    "validate_chrome_trace",
+    "validate_prometheus_text",
+    "reset",
+]

@@ -72,6 +72,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs as _obs
 from repro.core import crossbar as xb
 from repro.core import telemetry
 from repro.core.resilience import (DeviceHealth, Fault, ResilientExecutor,
@@ -115,7 +116,7 @@ class Request:
     """One submitted payload: a thread-safe future with a deadline."""
 
     __slots__ = ("op", "payload", "deadline", "backend", "_event", "_value",
-                 "_exc", "_lock", "t_submit", "t_done")
+                 "_exc", "_lock", "t_submit", "t_done", "trace_id")
 
     def __init__(self, payload: bytes, op: str,
                  deadline: Optional[float]):
@@ -129,6 +130,11 @@ class Request:
         self._lock = threading.Lock()
         self.t_submit = time.perf_counter()
         self.t_done: Optional[float] = None
+        # Request-scoped trace id: every span this request touches —
+        # queue wait on the admission side, pack on the prep thread,
+        # absorb on the device-feed thread — carries it, so a timeline
+        # groups one request's whole lifecycle across threads.
+        self.trace_id = _obs.new_trace_id() if _obs.enabled() else None
 
     @property
     def bucket(self) -> tuple:
@@ -152,7 +158,14 @@ class Request:
             self._value, self._exc, self.backend = value, exc, backend
             self.t_done = time.perf_counter()
             self._event.set()
-            return True
+        # Retroactive lifecycle span (outside the lock): submit ->
+        # completion, tagged with the terminal outcome.
+        _obs.span_at("request", self.t_submit, self.t_done,
+                     trace_id=self.trace_id, op=self.op,
+                     outcome=("ok" if exc is None
+                              else type(exc).__name__),
+                     backend=backend or "")
+        return True
 
     def cancel(self) -> bool:
         """Cancel a queued request; False if it already completed."""
@@ -326,6 +339,27 @@ class BatchingEngine:
         # live_requests) — tests and the benchmark read it.
         self.batch_log: "collections.deque[tuple]" = collections.deque(
             maxlen=options.batch_log_cap)
+        # Export-time gauges: lazy callables evaluated only when a
+        # metrics snapshot/exposition is taken — the admission and
+        # dispatch paths never pay for them.  A newer engine replaces
+        # an older one's registrations (latest engine wins).
+        _obs.metrics.gauge_fn("serve_queue_depth", self.queue_depth)
+        _obs.metrics.gauge_fn(
+            "resilience_breaker_open",
+            lambda: len(self.executor.breaker.open_keys()))
+        _obs.metrics.gauge_fn("serve_tuning_entries",
+                              lambda: len(self.tuning))
+        _obs.metrics.gauge_fn("serve_staging_depth",
+                              self._staging.qsize)
+        if self.device_health is not None:
+            def _mesh_active() -> int:
+                mesh = self._active_mesh()
+                return 0 if mesh is None else int(np.prod(list(
+                    dict(mesh.shape).values())))
+            _obs.metrics.gauge_fn("serve_mesh_active", _mesh_active)
+            _obs.metrics.gauge_fn(
+                "serve_mesh_lost",
+                lambda: len(self.device_health.lost()))
         if start:
             self.start()
 
@@ -441,6 +475,13 @@ class BatchingEngine:
             else:
                 keep.append(req)
         self._queue.extend(keep)
+        if batch and _obs.enabled():
+            # Queue wait is only knowable retroactively: it spans the
+            # admission thread's submit and THIS thread's take.
+            t_take = time.perf_counter()
+            for req in batch:
+                _obs.span_at("queue_wait", req.t_submit, t_take,
+                             trace_id=req.trace_id, op=req.op)
         return batch, rejected
 
     # -- mesh membership ----------------------------------------------------
@@ -508,7 +549,9 @@ class BatchingEngine:
         payloads = [r.payload for r in batch]
         payloads += [_dummy_payload(n_blocks)] * (b_pad - len(batch))
         telemetry.incr("serve_padded_lanes", b_pad - len(batch))
-        return op, n_blocks, b_pad, _pack_blocks(payloads)
+        with _obs.span("bucket_pack", trace_id=batch[0].trace_id, op=op,
+                       n_blocks=n_blocks, lanes=len(batch), b_pad=b_pad):
+            return op, n_blocks, b_pad, _pack_blocks(payloads)
 
     def _execute_batch(self, batch: list,
                        prepared: Optional[tuple] = None) -> None:
@@ -525,22 +568,28 @@ class BatchingEngine:
 
         chain = self.tuning.rank_chain(op, (b_pad, n_blocks), self.chain,
                                        mesh_shape=mesh_shape)
-        t0 = time.perf_counter()
+        # The span IS the batch stopwatch: straggler tracking and the
+        # tuning EWMA both read its duration (works with tracing off —
+        # a disabled span still times itself).
+        sp = _obs.span("device_absorb", trace_id=batch[0].trace_id, op=op,
+                       b_pad=b_pad, n_blocks=n_blocks, lanes=len(batch),
+                       mesh=bool(mesh is not None))
         try:
-            res = self.executor.execute(
-                op, (b_pad, n_blocks), run, chain=chain,
-                registry_keys=_keccak_registry_keys)
+            with sp:
+                res = self.executor.execute(
+                    op, (b_pad, n_blocks), run, chain=chain,
+                    registry_keys=_keccak_registry_keys)
+                sp.set(backend=res.backend)
         except Fault as e:
             telemetry.incr("serve_failed", len(batch))
             for req in batch:
                 req._finish(exc=e)
             return
         finally:
-            wall = time.perf_counter() - t0
-            self.straggler.observe(wall)
+            self.straggler.observe(sp.duration_s)
             telemetry.incr("serve_batches")
-        self.tuning.record(op, (b_pad, n_blocks), res.backend, wall,
-                           mesh_shape=mesh_shape)
+        self.tuning.record_span(sp, op, (b_pad, n_blocks), res.backend,
+                                mesh_shape=mesh_shape)
         if mesh is not None:
             telemetry.incr("serve_mesh_batches")
             # A successful mesh batch is a health signal for every
