@@ -26,6 +26,10 @@ BENCH_FILES = [
                            "speedup_take_vs_matmul_D1",
                            "blockdiag_density_at_B16")),
     ("BENCH_aes.json", ("speedup_fused_vs_chained",)),
+    ("BENCH_aes_gcm.json", ("speedup_fused_vs_chained_B32",
+                            "speedup_fused_vs_chained_headline",
+                            "single_launch_all_b",
+                            "cavp_bit_exact")),
     ("BENCH_keccak_fused.json", ("single_launch_all_b",
                                  "bit_exact_all_b",
                                  "speedup_megakernel_vs_per_round_B8",

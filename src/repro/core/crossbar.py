@@ -184,6 +184,10 @@ def build_onehot(plan: PermutePlan, dtype=None) -> Array:
     Reference path — the Pallas kernel never materialises this matrix.
     """
     sr = plan.semiring
+    if sr.limbs:
+        raise ValueError(
+            f"wide {sr.name} plans have no dense one-hot form; they "
+            "execute through lift_gf2_k")
     if dtype is None:
         dtype = jnp.float32 if sr is REAL else sr.weight_dtype
     if plan.mode == GATHER:
@@ -669,9 +673,9 @@ def apply_plan(
     # One coverage computation serves both the sparse backend's zero
     # pinning and the merge/mask logic (for scatter plans it materialises
     # an (n_in, k, n_out) hit tensor — not something to do twice, and
-    # skipped entirely when nothing needs it).  The GF2_8 matmul paths
-    # pin zeros from the *lifted* plan's coverage inside _apply_gf2_8.
-    need_cov = ((backend == "sparse" and sr is not GF2_8)
+    # skipped entirely when nothing needs it).  The GF(2^k) matmul paths
+    # pin zeros from the *lifted* plan's coverage inside _run_lifted.
+    need_cov = ((backend == "sparse" and not sr.is_gf2k)
                 or merge2 is not None or out_mask is not None)
     cov = coverage(plan) if need_cov else None
 
@@ -680,14 +684,19 @@ def apply_plan(
                    semiring=sr.name):
         if backend == "reference":
             out2 = _apply_reference(plan, x2)
-        elif sr is GF2_8 and backend in ("einsum", "kernel", "sparse"):
-            # GF(2^8)-weighted plans execute as their GF(2) bit lift on
-            # the chosen backend: one crossbar evaluation over 8x the
-            # rows.  The take lowering only substitutes for the einsum
-            # backend — an explicitly requested Pallas backend runs its
-            # kernel.
+        elif sr.limbs and backend in ("einsum", "kernel", "sparse"):
+            # Wide GF(2^width) (GHASH's GF(2^128)): elements ride as
+            # trailing byte-limb axes, the pass executes as ONE lifted
+            # GF(2) crossbar evaluation over width·n bit rows.
+            out2 = _apply_gf2k_wide(plan, x2, backend, interpret)
+        elif sr.is_gf2k and backend in ("einsum", "kernel", "sparse"):
+            # GF(2^k)-weighted plans execute as their GF(2) bit lift on
+            # the chosen backend: one crossbar evaluation over width·x
+            # the rows.  The take lowering only substitutes for the
+            # einsum backend — an explicitly requested Pallas backend
+            # runs its kernel.
             fast = _take_fastpath(plan, x2) if backend == "einsum" else None
-            out2 = fast if fast is not None else _apply_gf2_8(
+            out2 = fast if fast is not None else _apply_gf2k(
                 plan, x2, backend, interpret)
         elif backend == "kernel":
             from repro.kernels import ops as _kops  # kernels optional
@@ -803,25 +812,39 @@ def clear_lift_cache() -> None:
     _LIFT_STATS.update(hits=0, misses=0)
 
 
-def lift_gf2_8(plan: PermutePlan) -> PermutePlan:
-    """The GF(2) bit-level plan equivalent to a GF(2^8) byte-level plan.
+def lift_gf2_k(plan: PermutePlan) -> PermutePlan:
+    """The GF(2) bit-level plan equivalent to a GF(2^width) plan.
+
+    Generalises the GF(2^8) lift to every family width (4, 8, 16, ...
+    128): each select ``(o <- i, weight w)`` becomes, for output bit
+    ``b``, the selects ``{width·i + j : M_w[b, j] = 1}`` where ``M_w``
+    is the constant's bit matrix, assembled from the 8-bit-tile table
+    ``semiring.gf2k_tile_table`` — ``M_w[b, j] = XOR_t E[limb_t, b,
+    j + 8t]`` — so the table stays 256 rows at any width.  Wide widths
+    (limbed weights, GHASH's GF(2^128)) use the same assembly with the
+    limbs read from the weights' trailing axis.
 
     The lift preserves the plan's mode: a scatter plan lifts to a
-    scatter plan (input bit row ``8i+j`` lands on the output bits
-    ``{8o+b : M_w[b,j]=1}``), NOT to its gather normal form — gather
-    normalisation is only exact for output-injective scatters, while
-    the lifted scatter accumulates colliding destinations exactly on
-    every backend (XOR is per-bit parity).
+    scatter plan (input bit row ``width·i+j`` lands on the output bits
+    ``{width·o+b : M_w[b,j]=1}``), NOT to its gather normal form —
+    gather normalisation is only exact for output-injective scatters,
+    while the lifted scatter accumulates colliding destinations exactly
+    on every backend (XOR is per-bit parity).
     """
-    if plan.semiring is not GF2_8:
-        raise ValueError(f"lift_gf2_8 needs a GF2_8 plan, got "
-                         f"{plan.semiring.name!r}")
+    sr = plan.semiring
+    if not sr.is_gf2k:
+        raise ValueError(f"lift_gf2_k needs a GF(2^k) plan (width >= 2), "
+                         f"got {sr.name!r}")
+    width = sr.width
 
     keyable = _is_concrete_array(plan.idx) and (
         plan.weights is None or _is_concrete_array(plan.weights))
     key = None
     if keyable:
-        key = (plan.mode, plan.n_in, plan.n_out, id(plan.idx),
+        # The semiring name is part of the key: two plans sharing the
+        # SAME idx/weight arrays under different widths (with_semiring
+        # rebinds for free) must never collide on a lifted plan.
+        key = (plan.mode, plan.n_in, plan.n_out, sr.name, id(plan.idx),
                id(plan.weights) if plan.weights is not None else None)
         hit = _LIFT_CACHE.get(key)
         if (hit is not None and hit[1] is plan.idx
@@ -834,28 +857,46 @@ def lift_gf2_8(plan: PermutePlan) -> PermutePlan:
     idx = plan.idx                                      # (n_ctrl, k)
     bound = plan.n_in if plan.mode == GATHER else plan.n_out
     valid = (idx >= 0) & (idx < bound)
-    w = (jnp.full(idx.shape, 1, jnp.int32) if plan.weights is None
-         else plan.weights.astype(jnp.int32) & 0xFF)
-    table = jnp.asarray(sr_mod.gf2_8_bit_matrix_table(), jnp.int32)
-    m = jnp.take(table, w, axis=0)                      # (n_ctrl, k, 8b, 8j)
+    n_tiles = sr.limbs if sr.limbs else (width + 7) // 8
+    if plan.weights is None:
+        limbs = [jnp.full(idx.shape, 1 if t == 0 else 0, jnp.int32)
+                 for t in range(n_tiles)]
+    elif sr.limbs:
+        w = plan.weights
+        if w.ndim != 3 or w.shape[:2] != idx.shape \
+                or w.shape[-1] != sr.limbs:
+            raise ValueError(
+                f"wide {sr.name} weights must be shaped "
+                f"{idx.shape + (sr.limbs,)} (idx + limb axis), got "
+                f"{w.shape}")
+        limbs = [w[..., t].astype(jnp.int32) & 0xFF
+                 for t in range(n_tiles)]
+    else:
+        w = plan.weights.astype(jnp.int32) & sr.carrier_mask
+        limbs = [(w >> (8 * t)) & 0xFF for t in range(n_tiles)]
+    table = jnp.asarray(sr_mod.gf2k_tile_table(width, sr.poly))
+    m = None                                   # (n_ctrl, k, width b, width j)
+    for t in range(n_tiles):
+        mt = jnp.take(table, limbs[t], axis=0)[..., 8 * t: 8 * t + width]
+        m = mt if m is None else m ^ mt
     keep = valid[:, :, None, None] & (m != 0)
     safe = jnp.clip(idx, 0, bound - 1)
     if plan.mode == GATHER:
-        # out bit 8o+b selects in bits {8i+j : M[b,j]=1}.
-        src = (8 * safe)[:, :, None, None] \
-            + jnp.arange(8, dtype=jnp.int32)[None, None, None, :]
+        # out bit width·o+b selects in bits {width·i+j : M[b,j]=1}.
+        src = (width * safe)[:, :, None, None] \
+            + jnp.arange(width, dtype=jnp.int32)[None, None, None, :]
         bit_idx = jnp.where(keep, src, _t.DROP)         # (n_out, k, b, j)
         bit_idx = jnp.transpose(bit_idx, (0, 2, 1, 3)).reshape(
-            8 * plan.n_out, 8 * plan.k)
-        lifted = gather_plan(bit_idx, 8 * plan.n_in, semiring=GF2)
+            width * plan.n_out, width * plan.k)
+        lifted = gather_plan(bit_idx, width * plan.n_in, semiring=GF2)
     else:
-        # in bit 8i+j lands on out bits {8o+b : M[b,j]=1}.
-        dst = (8 * safe)[:, :, None, None] \
-            + jnp.arange(8, dtype=jnp.int32)[None, None, :, None]
+        # in bit width·i+j lands on out bits {width·o+b : M[b,j]=1}.
+        dst = (width * safe)[:, :, None, None] \
+            + jnp.arange(width, dtype=jnp.int32)[None, None, :, None]
         bit_idx = jnp.where(keep, dst, _t.DROP)         # (n_in, k, b, j)
         bit_idx = jnp.transpose(bit_idx, (0, 3, 1, 2)).reshape(
-            8 * plan.n_in, 8 * plan.k)
-        lifted = scatter_plan(bit_idx, 8 * plan.n_out, semiring=GF2)
+            width * plan.n_in, width * plan.k)
+        lifted = scatter_plan(bit_idx, width * plan.n_out, semiring=GF2)
 
     if keyable and jax.core.trace_state_clean():
         _LIFT_CACHE[key] = (lifted, plan.idx, plan.weights)
@@ -864,28 +905,109 @@ def lift_gf2_8(plan: PermutePlan) -> PermutePlan:
     return lifted
 
 
-def _apply_gf2_8(plan: PermutePlan, x2: Array, backend: str,
-                 interpret) -> Array:
-    """Unpack bytes -> run the lifted GF2 plan -> pack bytes."""
-    lifted = lift_gf2_8(plan)
-    shifts = jnp.arange(8, dtype=jnp.int32)
-    bits = ((x2.astype(jnp.int32)[:, None, :] >> shifts[None, :, None]) & 1)
-    bits = bits.reshape(8 * plan.n_in, x2.shape[1])
+def lift_gf2_8(plan: PermutePlan) -> PermutePlan:
+    """The original GF(2^8)-only entry point; now the width-8 instance
+    of ``lift_gf2_k`` (same construction, same cached plans)."""
+    if plan.semiring is not GF2_8:
+        raise ValueError(f"lift_gf2_8 needs a GF2_8 plan, got "
+                         f"{plan.semiring.name!r}")
+    return lift_gf2_k(plan)
+
+
+def _run_lifted(lifted: PermutePlan, bits: Array, backend: str,
+                interpret) -> Array:
+    """Execute a lifted GF(2) bit plan on the chosen matmul backend."""
     if backend == "einsum":
-        out_bits = _apply_einsum(lifted, bits)
-    elif backend == "kernel":
+        return _apply_einsum(lifted, bits)
+    if backend == "kernel":
         from repro.kernels import ops as _kops
-        out_bits = _kops.crossbar_permute(lifted, bits, interpret=interpret)
-    elif backend == "sparse":
+        return _kops.crossbar_permute(lifted, bits, interpret=interpret)
+    if backend == "sparse":
         from repro.kernels import ops as _kops
         out_bits = _kops.crossbar_permute_sparse(lifted, bits,
                                                  interpret=interpret)
-        out_bits = jnp.where(coverage(lifted)[:, None], out_bits, 0)
-    else:
-        raise ValueError(f"no GF2_8 path for backend {backend!r}")
-    out_bits = out_bits.astype(jnp.int32).reshape(plan.n_out, 8, -1)
+        return jnp.where(coverage(lifted)[:, None], out_bits, 0)
+    raise ValueError(f"no GF(2^k) path for backend {backend!r}")
+
+
+def _apply_gf2k(plan: PermutePlan, x2: Array, backend: str,
+                interpret) -> Array:
+    """Scalar-carried GF(2^width): unpack elements to bit rows -> run
+    the lifted GF2 plan -> pack back."""
+    width = plan.semiring.width
+    lifted = lift_gf2_k(plan)
+    shifts = jnp.arange(width, dtype=jnp.int32)
+    bits = ((x2.astype(jnp.int32)[:, None, :] >> shifts[None, :, None]) & 1)
+    bits = bits.reshape(width * plan.n_in, x2.shape[1])
+    out_bits = _run_lifted(lifted, bits, backend, interpret)
+    out_bits = out_bits.astype(jnp.int32).reshape(plan.n_out, width, -1)
     out = jnp.sum(out_bits << shifts[None, :, None], axis=1)
     return out.astype(x2.dtype)
+
+
+def _wide_unpack(x2: Array, n: int, limbs: int) -> Array:
+    """(n, D·L) canonical payload -> (width·n, D) bit rows.
+
+    The wide-payload convention: the trailing payload axis is the limb
+    axis (length L, fastest-varying), so bit row ``width·i + 8r + b``
+    is bit ``b`` of limb ``r`` of element ``i``.
+    """
+    d = x2.shape[1] // limbs
+    x3 = x2.astype(jnp.int32).reshape(n, d, limbs)
+    shifts = jnp.arange(8, dtype=jnp.int32)
+    bits = ((jnp.transpose(x3, (0, 2, 1))[:, :, None, :]
+             >> shifts[None, None, :, None]) & 1)       # (n, L, 8, D)
+    return bits.reshape(8 * limbs * n, d)
+
+
+def _wide_pack(bits: Array, n_out: int, limbs: int, dtype) -> Array:
+    """(width·n_out, D) bit rows -> (n_out, D·L) canonical payload."""
+    shifts = jnp.arange(8, dtype=jnp.int32)
+    b4 = bits.astype(jnp.int32).reshape(n_out, limbs, 8, -1)
+    packed = jnp.sum(b4 << shifts[None, None, :, None], axis=2)
+    return jnp.transpose(packed, (0, 2, 1)).reshape(
+        n_out, -1).astype(dtype)
+
+
+def _apply_gf2k_wide(plan: PermutePlan, x2: Array, backend: str,
+                     interpret) -> Array:
+    """Wide (limbed) GF(2^width): elements ride as trailing byte-limb
+    axes; one lifted-GF(2) crossbar evaluation over width·n bit rows."""
+    sr = plan.semiring
+    if x2.shape[1] % sr.limbs:
+        raise ValueError(
+            f"wide {sr.name} payloads need a trailing limb axis of "
+            f"{sr.limbs}; flattened payload width {x2.shape[1]} is not "
+            "divisible by it")
+    bits = _wide_unpack(x2, plan.n_in, sr.limbs)
+    out_bits = _run_lifted(lift_gf2_k(plan), bits, backend, interpret)
+    return _wide_pack(out_bits, plan.n_out, sr.limbs, x2.dtype)
+
+
+def _apply_gf2k_wide_reference(plan: PermutePlan, x2: Array) -> Array:
+    """Direct limbed-arithmetic oracle for wide gather plans (no lift
+    machinery involved); wide scatters run the lifted plan's reference
+    path (per-bit parity scatter-add — itself lift-independent)."""
+    sr = plan.semiring
+    limbs = sr.limbs
+    if plan.mode != GATHER:
+        bits = _wide_unpack(x2, plan.n_in, limbs)
+        out_bits = _apply_reference(lift_gf2_k(plan), bits)
+        return _wide_pack(out_bits, plan.n_out, limbs, x2.dtype)
+    d = x2.shape[1] // limbs
+    x3 = x2.astype(jnp.int32).reshape(plan.n_in, d, limbs) & 0xFF
+    acc = jnp.zeros((plan.n_out, d, limbs), jnp.int32)
+    for j in range(plan.k):
+        src = plan.idx[:, j]
+        valid = (src >= 0) & (src < plan.n_in)
+        vals = jnp.take(x3, jnp.clip(src, 0, plan.n_in - 1), axis=0)
+        if plan.weights is None:
+            prod = vals
+        else:
+            wj = plan.weights[:, j].astype(jnp.int32) & 0xFF  # (n_out, L)
+            prod = sr.mul(wj[:, None, :], vals)
+        acc = acc ^ jnp.where(valid[:, None, None], prod, 0)
+    return acc.reshape(plan.n_out, -1).astype(x2.dtype)
 
 
 def _apply_reference(plan: PermutePlan, x2: Array) -> Array:
@@ -923,6 +1045,8 @@ def _apply_reference(plan: PermutePlan, x2: Array) -> Array:
             # contributions for invalid dests were zeroed above.
         return acc.astype(x2.dtype)
 
+    if sr.limbs:
+        return _apply_gf2k_wide_reference(plan, x2)
     # Finite fields: XOR accumulation of semiring products.  Payloads
     # and weights are folded into the carrier up front so the oracle
     # agrees with the lift/matmul/take lowerings even for out-of-range
@@ -942,7 +1066,7 @@ def _apply_reference(plan: PermutePlan, x2: Array) -> Array:
     # Scatter: XOR has no native scatter op, but XOR accumulation is
     # per-bit parity — scatter-add each contribution's bit planes, fold
     # mod 2, repack.  Exact for arbitrary (non-injective) scatters.
-    nbits = 8 if sr is GF2_8 else 1
+    nbits = max(sr.width, 1)
     shifts = jnp.arange(nbits, dtype=jnp.int32)
     acc = jnp.zeros((plan.n_out, x2.shape[1], nbits), jnp.int32)
     for j in range(k):

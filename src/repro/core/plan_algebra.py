@@ -271,12 +271,14 @@ def compose(p2: xb.PermutePlan, p1: xb.PermutePlan) -> xb.PermutePlan:
             # time, so compose(p2,p1) distributes exactly like P2 @ P1
             # over the semiring.
             wdt = sr.weight_dtype
-            w2 = (jnp.ones_like(g2.idx, wdt) if g2.weights is None
+            w2 = (sr.ones(tuple(g2.idx.shape)) if g2.weights is None
                   else g2.weights.astype(wdt))
-            w1 = (jnp.ones((mid, g1.k), wdt) if g1.weights is None
+            w1 = (sr.ones((mid, g1.k)) if g1.weights is None
                   else g1.weights.astype(wdt))
+            # Wide fields carry a trailing limb axis through the fold:
+            # broadcasting aligns it, the reshape preserves it.
             w = sr.mul(w2[:, :, None], jnp.take(w1, safe, axis=0))
-            weights = w.reshape(p2.n_out, g2.k * g1.k)
+            weights = w.reshape((p2.n_out, g2.k * g1.k) + w.shape[3:])
         return xb.gather_plan(idx, p1.n_in, weights=weights, semiring=sr)
 
     return _memo("compose", (p2.idx, p2.weights, p1.idx, p1.weights),
@@ -311,6 +313,44 @@ def compose_all(plans: Sequence[xb.PermutePlan], *,
     for p in plans[1:]:
         fused = compose(p, fused)
     return fused
+
+
+def compact_selects(plan: xb.PermutePlan) -> xb.PermutePlan:
+    """Pack each row's valid selects to the front; trim all-DROP columns.
+
+    Lifted GF(2^k) plans spread their selects over ``width · k`` slots
+    with DROP wherever the constant's bit matrix has a zero — typically
+    most of them (a MixColumns bit row keeps ~7 of 32 slots; a GHASH
+    multiply-by-H row ~64 of 128).  Select order within a row is free
+    (semiring addition commutes), so stable-sorting valid selects to
+    the front and cutting the all-DROP tail shrinks ``k`` to the true
+    maximum row weight — which is exactly what the megakernel's gather
+    loop and the stacked plan tables pay for.  Traced plans pass
+    through unchanged (compaction is value-dependent).
+    """
+    g = to_gather(plan)
+    if not _concrete(g.idx, g.weights):
+        return g
+
+    def build():
+        idx = np.asarray(g.idx)
+        valid = (idx >= 0) & (idx < g.n_in)
+        order = np.argsort(~valid, axis=1, kind="stable")
+        idx2 = np.where(np.take_along_axis(valid, order, axis=1),
+                        np.take_along_axis(idx, order, axis=1), DROP)
+        k_new = max(1, int(valid.sum(axis=1).max(initial=0)))
+        idx2 = idx2[:, :k_new]
+        weights = None
+        if g.weights is not None:
+            w = np.asarray(g.weights)
+            ord_w = order[..., None] if w.ndim == 3 else order
+            weights = jnp.asarray(
+                np.take_along_axis(w, ord_w, axis=1)[:, :k_new])
+        return xb.gather_plan(jnp.asarray(idx2, jnp.int32), g.n_in,
+                              weights=weights, semiring=g.semiring)
+
+    return _memo("compact_selects", (g.idx, g.weights),
+                 (g.n_in, g.n_out, g.semiring.name), build)
 
 
 # ---------------------------------------------------------------------------

@@ -22,6 +22,10 @@ Keccak-f[1600], per the ROADMAP).
                   rotate carry amount 0),
 * ``XOR_CONST`` — XOR with a constants-table row broadcast over the
                   payload (ι round constants, pre-scheduled keys),
+* ``EQ_CONST``  — 0/1 equality mask against a constants-table row: the
+                  one-hot *encode* primitive (a byte state compared to
+                  row ``u`` is value ``u``'s indicator lane, so table
+                  lookups become PERMUTE gathers in-register),
 
 over a small register file of ``(n, D)`` state buffers.  All control
 information — plans, constants, rotation amounts, the step list itself
@@ -76,9 +80,12 @@ ANDN = "andn"            # dst = (~regs[a]) & regs[b]     (χ's not-and)
 ADD = "add"              # dst = regs[a] + regs[b]        (wrapping)
 ROTLV = "rotlv"          # dst = rotl(regs[a], consts[const])  per-row
 XOR_CONST = "xor_const"  # dst = regs[a] ^ consts[const][:, None]
+EQ_CONST = "eq_const"    # dst = (regs[a] == consts[const][:, None])  0/1
 
 _BINARY_OPS = (XOR, AND, ANDN, ADD)
-_CONST_OPS = (ROTLV, XOR_CONST)
+# EQ_CONST rides last so pre-existing encoded step streams (and the
+# kernel's switch branch numbering) keep their opcode values.
+_CONST_OPS = (ROTLV, XOR_CONST, EQ_CONST)
 OPS = (PERMUTE,) + _BINARY_OPS + _CONST_OPS
 
 
@@ -290,6 +297,17 @@ class ProgramBuilder:
     def rotlv_at(self, dst: int, a: int, slot: int) -> None:
         self._steps.append(Step(ROTLV, dst, a, const=slot))
 
+    def eq_const(self, dst: int, a: int, row) -> None:
+        """dst = 0/1 mask of where ``regs[a]`` equals the constant row
+        broadcast over the payload — the one-hot *encode* primitive (a
+        byte state compared against row u yields the indicator lane for
+        value u, turning table lookups into PERMUTE gathers)."""
+        self._steps.append(
+            Step(EQ_CONST, dst, a, const=self.const_slot(row)))
+
+    def eq_const_at(self, dst: int, a: int, slot: int) -> None:
+        self._steps.append(Step(EQ_CONST, dst, a, const=slot))
+
     def build(self, *, rounds: int = 1,
               const_stride: int = 0) -> PlanProgram:
         consts = (np.stack(self._consts).astype(np.int32)
@@ -399,8 +417,12 @@ def _build_exec(program: PlanProgram, n_pad: int, interpret: bool):
     """Jitted megakernel closure for one (program, geometry) pair.
 
     Control information is encoded once here: the step stream, the
-    DROP-padded plan tables stacked to a common k_max, the per-plan
-    semiring fold flags, and the (optionally strided) constants table.
+    RAGGED flat plan table (every plan's select columns concatenated
+    along one axis, one (n_pad,) row per column, with per-plan
+    offset/count vectors — a k=128 S-box decode no longer pads a dozen
+    k<=2 routing plans to its width), the per-plan semiring fold flags,
+    the ragged weight rows (only weighted plans contribute; offset -1
+    marks the rest), and the (optionally strided) constants table.
     """
     from repro.kernels import plan_program_kernel as ppk  # lazy: kernels opt.
 
@@ -410,27 +432,31 @@ def _build_exec(program: PlanProgram, n_pad: int, interpret: bool):
         f"kernel opcode table {ppk.OPCODES} drifted from the IR's op "
         f"order {OPS}")
 
-    k_max = max((p.k for p in program.plans), default=1)
-    idx_stack, w_stack, folds = [], [], []
-    any_weighted = any(p.weights is not None for p in program.plans)
+    idx_rows, w_rows = [], []
+    koff, kcnt, folds, woff = [], [], [], []
     for plan in program.plans:
         idx = np.asarray(plan.idx, np.int32)
-        idx = np.pad(idx, ((0, n_pad - idx.shape[0]),
-                           (0, k_max - idx.shape[1])),
+        idx = np.pad(idx, ((0, n_pad - idx.shape[0]), (0, 0)),
                      constant_values=pa.DROP)
-        idx_stack.append(idx)
+        koff.append(len(idx_rows))
+        kcnt.append(idx.shape[1])
+        idx_rows.extend(idx.T)
         folds.append(1 if _plan_fold(plan) == "xor" else 0)
-        if any_weighted:
-            w = (np.ones((plan.idx.shape[0], plan.k), np.int32)
-                 if plan.weights is None
-                 else np.asarray(plan.weights, np.int32))
-            w_stack.append(np.pad(w, ((0, n_pad - w.shape[0]),
-                                      (0, k_max - w.shape[1]))))
+        if plan.weights is None:
+            woff.append(-1)
+        else:
+            w = np.asarray(plan.weights, np.int32)
+            w = np.pad(w, ((0, n_pad - w.shape[0]), (0, 0)))
+            woff.append(len(w_rows))
+            w_rows.extend(w.T)
     plan_tbl = jnp.asarray(
-        np.stack(idx_stack) if idx_stack
-        else np.zeros((1, n_pad, 1), np.int32))
+        np.stack(idx_rows) if idx_rows
+        else np.zeros((1, n_pad), np.int32))
+    koff_op = jnp.asarray(np.asarray(koff or [0], np.int32))
+    kcnt_op = jnp.asarray(np.asarray(kcnt or [0], np.int32))
     folds_op = jnp.asarray(np.asarray(folds or [0], np.int32))
-    w_tbl = jnp.asarray(np.stack(w_stack)) if any_weighted else None
+    woff_op = jnp.asarray(np.asarray(woff or [-1], np.int32))
+    w_flat = jnp.asarray(np.stack(w_rows)) if w_rows else None
     consts_np = (np.zeros((1, program.n), np.int32)
                  if program.consts is None else program.consts)
     consts_op = _pad_axis(jnp.asarray(consts_np, jnp.int32), n_pad, 1)
@@ -443,7 +469,8 @@ def _build_exec(program: PlanProgram, n_pad: int, interpret: bool):
 
     @jax.jit
     def run(xp):
-        return call(xp, steps_op, plan_tbl, folds_op, w_tbl, consts_op)
+        return call(xp, steps_op, plan_tbl, koff_op, kcnt_op, folds_op,
+                    w_flat, woff_op, consts_op)
 
     return run
 
@@ -525,6 +552,9 @@ def _run_chained(program: PlanProgram, x2: Array, pass_backend: str,
                 val = a + regs[step.b]
             elif step.op == ROTLV:
                 val = _rotlv_host(a, consts[step.const + off])
+            elif step.op == EQ_CONST:
+                val = (a == consts[step.const + off].astype(a.dtype)[:, None]
+                       ).astype(a.dtype)
             else:  # XOR_CONST
                 val = a ^ consts[step.const + off].astype(a.dtype)[:, None]
             regs[step.dst] = val

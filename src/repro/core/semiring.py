@@ -123,6 +123,179 @@ def gf2_8_bit_matrix_table() -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# GF(2^k) arithmetic for arbitrary widths (the GHASH axis)
+# ---------------------------------------------------------------------------
+#
+# Everything below parameterises the GF(2^8) machinery by (width, poly).
+# Widths up to 31 carry elements as ordinary int32 scalars; wider fields
+# (GHASH's GF(2^128)) carry elements as little-endian 8-bit LIMB arrays
+# — a trailing axis of ``width // 8`` int32 values in [0, 256) — because
+# no JAX integer dtype holds them.  Limb order follows bit order: limb
+# ``r`` holds field bits ``8r .. 8r+7`` (coefficient of x^(8r+b) at bit
+# ``b``), so packing/unpacking is a pure reshape at the bit level.
+
+# Default reduction polynomials per width.  Only the field *ring*
+# structure matters for the lift algebra (mul-by-constant is GF(2)-
+# linear over any modulus); 0x87 is GHASH's x^128 + x^7 + x^2 + x + 1.
+DEFAULT_POLYS = {
+    4: 0x13,                    # x^4 + x + 1
+    8: AES_POLY,                # x^8 + x^4 + x^3 + x + 1 (Rijndael)
+    16: 0x1100B,                # x^16 + x^12 + x^3 + x + 1
+    128: (1 << 128) | 0x87,     # x^128 + x^7 + x^2 + x + 1 (GHASH)
+}
+
+
+def _limb_count(width: int) -> int:
+    """Limbs for a wide width (0 for scalar-carried widths <= 31)."""
+    return 0 if width <= 31 else width // 8
+
+
+def gf2k_xtime(a, width: int, poly: int):
+    """Multiply by x in GF(2^width), scalar carriers (width <= 31)."""
+    mask = (1 << width) - 1
+    if isinstance(a, jax.Array):
+        a = a.astype(jnp.int32)
+    else:
+        a = np.asarray(a, np.int32)
+    return ((a << 1) ^ (((a >> (width - 1)) & 1) * (poly & mask))) & mask
+
+
+def gf2k_mul(a, b, width: int, poly: int):
+    """Elementwise GF(2^width) product, scalar carriers (width <= 31).
+
+    Branch-free xtime chain (``width`` fixed steps); numpy, python int,
+    and traced jax operands all work, broadcasting follows the operands.
+    """
+    if isinstance(a, jax.Array) or isinstance(b, jax.Array):
+        a = jnp.asarray(a, jnp.int32)
+        b = jnp.asarray(b, jnp.int32)
+        where = jnp.where
+    else:
+        a = np.asarray(a, np.int32)
+        b = np.asarray(b, np.int32)
+        where = np.where
+    acc = a * 0
+    for i in range(width):
+        acc = acc ^ where(((b >> i) & 1) != 0, a, 0)
+        a = gf2k_xtime(a, width, poly)
+    return acc
+
+
+def _poly_limbs(poly: int, limbs: int) -> np.ndarray:
+    """The low ``limbs`` bytes of the reduction polynomial (the part
+    XORed in on overflow), little-endian limb order."""
+    return np.asarray([(poly >> (8 * r)) & 0xFF for r in range(limbs)],
+                      np.int32)
+
+
+def gf2k_xtime_limbs(a, width: int, poly: int):
+    """Multiply by x for limbed carriers: per-limb shift with carry
+    ripple, then conditional reduction when bit width-1 falls off."""
+    limbs = width // 8
+    if isinstance(a, jax.Array):
+        xp, where = jnp, jnp.where
+        a = a.astype(jnp.int32)
+        pl = jnp.asarray(_poly_limbs(poly, limbs))
+    else:
+        xp, where = np, np.where
+        a = np.asarray(a, np.int32)
+        pl = _poly_limbs(poly, limbs)
+    carry = (a >> 7) & 1
+    shifted = (a << 1) & 0xFF
+    shifted = xp.concatenate(
+        [shifted[..., :1],
+         shifted[..., 1:] | carry[..., :-1]], axis=-1)
+    overflow = carry[..., -1:]
+    return shifted ^ where(overflow != 0, pl, 0)
+
+
+def gf2k_mul_limbs(a, b, width: int, poly: int):
+    """Elementwise GF(2^width) product over limbed carriers.
+
+    ``a``/``b``: (..., width//8) int32 byte limbs; broadcasting follows
+    the leading axes.  ``width`` fixed xtime steps — host-side table
+    and weight-fold use only, never a payload hot path.
+    """
+    if isinstance(a, jax.Array) or isinstance(b, jax.Array):
+        a = jnp.asarray(a, jnp.int32)
+        b = jnp.asarray(b, jnp.int32)
+        where = jnp.where
+        zeros = jnp.zeros_like
+    else:
+        a = np.asarray(a, np.int32)
+        b = np.asarray(b, np.int32)
+        where = np.where
+        zeros = np.zeros_like
+    acc = zeros(a * 0 + b * 0)   # broadcast shape
+    cur = a + acc
+    for bit in range(width):
+        r, s = divmod(bit, 8)
+        bbit = (b[..., r] >> s) & 1
+        acc = acc ^ where(bbit[..., None] != 0, cur, 0)
+        cur = gf2k_xtime_limbs(cur, width, poly)
+    return acc
+
+
+def gf2k_to_limbs(v: int, width: int) -> np.ndarray:
+    """Python int -> little-endian byte-limb vector (host helper)."""
+    limbs = max(1, width // 8)
+    return np.asarray([(v >> (8 * r)) & 0xFF for r in range(limbs)],
+                      np.int32)
+
+
+def gf2k_from_limbs(limbs_vec) -> int:
+    """Byte-limb vector -> python int (host helper)."""
+    return sum(int(l) << (8 * r) for r, l in enumerate(np.asarray(limbs_vec)))
+
+
+def gf2k_mul_int(a: int, b: int, width: int, poly: int) -> int:
+    """Exact python-int GF(2^width) product — the host-side oracle the
+    differential tests compare every lowering against."""
+    mask = (1 << width) - 1
+    a &= mask
+    b &= mask
+    acc = 0
+    while b:
+        if b & 1:
+            acc ^= a
+        b >>= 1
+        a <<= 1
+        if a >> width:
+            a ^= poly
+    return acc & mask
+
+
+@functools.lru_cache(maxsize=8)
+def gf2k_tile_table(width: int, poly: int) -> np.ndarray:
+    """(256, width, width + 8·(L-1)) int8 tiled bit-lift table.
+
+    ``E[v, b, m]`` = bit ``b`` of ``v · x^m mod P`` for 8-bit tile
+    values ``v``.  A full constant ``w = Σ_t limb_t · x^(8t)`` has bit
+    matrix ``M_w[b, j] = XOR_t E[limb_t, b, j + 8t]`` — the 8-bit-tile
+    decomposition that keeps the table 256 rows regardless of width
+    (a dense (2^128, ...) table being somewhat impractical).  For
+    width 8 this is exactly ``gf2_8_bit_matrix_table``.
+    """
+    limbs = max(1, width // 8 if width > 31 else (width + 7) // 8)
+    n_cols = width + 8 * (limbs - 1)
+    out = np.empty((256, width, n_cols), np.int8)
+    if width <= 31:
+        cur = np.arange(256, dtype=np.int32) & ((1 << width) - 1)
+        for m in range(n_cols):
+            out[:, :, m] = (cur[:, None] >> np.arange(width)) & 1
+            cur = gf2k_xtime(cur, width, poly)
+    else:
+        cur = np.zeros((256, width // 8), np.int32)
+        cur[:, 0] = np.arange(256)
+        shifts = np.arange(8)
+        for m in range(n_cols):
+            bits = (cur[:, :, None] >> shifts) & 1     # (256, L, 8)
+            out[:, :, m] = bits.reshape(256, width)
+            cur = gf2k_xtime_limbs(cur, width, poly)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # The Semiring bundle
 # ---------------------------------------------------------------------------
 
@@ -170,9 +343,22 @@ class Semiring:
     integer_carrier: bool = False
     mod2_fold: bool = False
     carrier_mask: int | None = None
+    # GF(2^width) family metadata (0/None for REAL).  ``limbs`` > 0
+    # marks a wide field whose elements ride as (..., limbs) int32
+    # byte-limb arrays instead of scalars; ``poly`` is the reduction
+    # polynomial the bit lift tiles decompose.
+    width: int = 0
+    poly: int | None = None
+    limbs: int = 0
 
     def __repr__(self) -> str:
         return f"Semiring({self.name!r})"
+
+    @property
+    def is_gf2k(self) -> bool:
+        """True for every GF(2^width) member with width >= 2 — the plans
+        the crossbar executes through the GF(2) bit lift."""
+        return self.width >= 2
 
     def reduce(self, x: Array, axis: int) -> Array:
         """Fold ``add`` along ``axis`` (the crossbar's select axis)."""
@@ -182,6 +368,11 @@ class Semiring:
 
     def ones(self, shape, like=None) -> Array:
         del like
+        if self.limbs:
+            # Wide fields: the multiplicative identity is the limb
+            # vector [1, 0, ..., 0], not a scalar fill.
+            w = jnp.zeros(tuple(shape) + (self.limbs,), self.weight_dtype)
+            return w.at[..., 0].set(1)
         return jnp.full(shape, self.one, self.weight_dtype)
 
     def cast_weights(self, w: Array) -> Array:
@@ -195,14 +386,64 @@ REAL = Semiring(
 GF2 = Semiring(
     name="gf2", add=jnp.bitwise_xor, mul=jnp.bitwise_and,
     zero=0, one=1, weight_dtype=jnp.int32,
-    integer_carrier=True, mod2_fold=True, carrier_mask=1)
+    integer_carrier=True, mod2_fold=True, carrier_mask=1, width=1)
 
 GF2_8 = Semiring(
     name="gf2_8", add=jnp.bitwise_xor, mul=gf2_8_mul,
     zero=0, one=1, weight_dtype=jnp.int32,
-    integer_carrier=True, carrier_mask=0xFF)
+    integer_carrier=True, carrier_mask=0xFF, width=8, poly=AES_POLY)
 
 _BY_NAME = {s.name: s for s in (REAL, GF2, GF2_8)}
+
+
+@functools.lru_cache(maxsize=None)
+def gf2_k(width: int, poly: int | None = None) -> Semiring:
+    """The interned GF(2^width) semiring (default polynomial per width).
+
+    Widths 2..31 carry elements/weights as int32 scalars and flow
+    through every existing plan path; wider widths (multiples of 8 up
+    to 128 — GHASH's GF(2^128)) carry them as (..., width//8) byte-limb
+    arrays and execute exclusively through the tiled GF(2) bit lift.
+    ``gf2_k(8)`` with the Rijndael polynomial IS ``GF2_8`` and
+    ``gf2_k(1)`` is ``GF2`` — one interning for the whole family, so
+    identity comparison and cache keys stay sound.
+    """
+    if width == 1:
+        return GF2
+    if poly is None:
+        poly = DEFAULT_POLYS.get(width)
+        if poly is None:
+            raise ValueError(
+                f"no default polynomial for width {width}; pass poly=")
+    if poly >> width == 0 or poly >> (width + 1):
+        raise ValueError(
+            f"polynomial {poly:#x} is not degree-{width}")
+    if width == 8 and poly == AES_POLY:
+        return GF2_8
+    if width <= 31:
+        sr = Semiring(
+            name=f"gf2_{width}" + (
+                "" if poly == DEFAULT_POLYS.get(width) else f"_p{poly:x}"),
+            add=jnp.bitwise_xor,
+            mul=functools.partial(gf2k_mul, width=width, poly=poly),
+            zero=0, one=1, weight_dtype=jnp.int32,
+            integer_carrier=True, carrier_mask=(1 << width) - 1,
+            width=width, poly=poly)
+    else:
+        if width > 128 or width % 8:
+            raise ValueError(
+                f"wide GF(2^k) widths must be multiples of 8 up to 128, "
+                f"got {width}")
+        sr = Semiring(
+            name=f"gf2_{width}" + (
+                "" if poly == DEFAULT_POLYS.get(width) else f"_p{poly:x}"),
+            add=jnp.bitwise_xor,
+            mul=functools.partial(gf2k_mul_limbs, width=width, poly=poly),
+            zero=0, one=1, weight_dtype=jnp.int32,
+            integer_carrier=True, width=width, poly=poly,
+            limbs=width // 8)
+    _BY_NAME.setdefault(sr.name, sr)
+    return sr
 
 
 def get(name: str) -> Semiring:
@@ -210,8 +451,19 @@ def get(name: str) -> Semiring:
     try:
         return _BY_NAME[name]
     except KeyError:
-        raise ValueError(
-            f"unknown semiring {name!r} (have {sorted(_BY_NAME)})") from None
+        pass
+    # Family members materialise on demand: "gf2_16" parses to
+    # gf2_k(16) with the default polynomial, so fingerprints and
+    # serialised plans round-trip without pre-registration.
+    if name.startswith("gf2_"):
+        try:
+            width = int(name.split("_")[1])
+        except (IndexError, ValueError):
+            width = -1
+        if width > 1 and DEFAULT_POLYS.get(width) is not None:
+            return gf2_k(width)
+    raise ValueError(
+        f"unknown semiring {name!r} (have {sorted(_BY_NAME)})")
 
 
 def join(s1: Semiring, s2: Semiring, *, neutral1: bool = False,

@@ -84,13 +84,13 @@ def schedule_fingerprint(plan: xb.PermutePlan, *, block_o: int = 128,
     fp = (plan.mode, plan.n_in, plan.n_out, plan.k, plan.semiring.name,
           compiled.n_o_tiles, compiled.n_n_tiles,
           int(compiled.num_active))
-    if plan.semiring is xb.GF2_8:
-        # The matmul backends never execute the byte-level schedule —
-        # they run the plan's GF(2) bit lift.  Fingerprint (and pin)
-        # that executed schedule too, or the contract would be checking
-        # a plan the datapath never touches while the real one sits in
-        # the evictable LRU.
-        lifted = xb.lift_gf2_8(plan)
+    if plan.semiring.is_gf2k:
+        # The matmul backends never execute the element-level schedule
+        # of a GF(2^k) plan — they run its GF(2) bit lift.  Fingerprint
+        # (and pin) that executed schedule too, or the contract would
+        # be checking a plan the datapath never touches while the real
+        # one sits in the evictable LRU.
+        lifted = xb.lift_gf2_k(plan)
         lc = xb.compile_plan(lifted, block_o=block_o, block_n=block_n,
                              pin=True)
         fp = fp + (("lift", lifted.n_in, lifted.n_out, lifted.k,
@@ -148,9 +148,9 @@ class StaticPlanRegistry:
             # concrete and must not be staged into that trace.
             with jax.ensure_compile_time_eval():
                 xb.compile_plan(plan, pin=True)
-                if plan.semiring is xb.GF2_8:
+                if plan.semiring.is_gf2k:
                     # Pin the executed (bit-lifted) schedule as well.
-                    xb.compile_plan(xb.lift_gf2_8(plan), pin=True)
+                    xb.compile_plan(xb.lift_gf2_k(plan), pin=True)
         return plan
 
     def get_or_register(self, key: str,

@@ -15,10 +15,10 @@ program executes as a **bytecode VM** over the resident registers:
   int32 rows) rides along as control operands, exactly like the sparse
   kernel's scalar-prefetched schedule;
 * a ``lax.scan`` walks one round's steps, dispatching each through a
-  ``lax.switch`` whose branches implement the seven ops (in-VMEM
-  k-select gather-fold for PERMUTE — integer XOR for GF(2), so bit
-  states never touch the f32 datapath and the MXU's 2^24 exactness
-  bound does not apply; VPU elementwise for the rest);
+  ``lax.switch`` whose branches implement the ops (in-VMEM k-select
+  gather-fold for PERMUTE — integer XOR for GF(2), so bit states never
+  touch the f32 datapath and the MXU's 2^24 exactness bound does not
+  apply; VPU elementwise for the rest);
 * a ``fori_loop`` supplies the trip count, with per-round constants
   indexed as ``const + round * const_stride``;
 * the result is written back once at the end.
@@ -35,13 +35,25 @@ function of the program stream alone and never of payload values —
 every branch of the switch is fixed-shape, and the switch index is
 program data.
 
-Plan tables are stacked to a common select width ``k_max`` (DROP-padded
-columns select nothing), so PERMUTE is one uniform branch; everything
-here targets states of a few thousand rows at payload widths up to a
-few hundred lanes — (1600, 128) int32 is 800 KB, far under VMEM — so a
-single un-gridded launch with whole-array operands is the right shape.
-Wider payloads shard lanes *outside* the kernel (they are independent
-by construction).
+Plan tables use a RAGGED flat layout: the select columns of every plan
+are concatenated along one axis (``plan_tbl``: (K_total, n_pad), one
+row per select column) with per-plan offset/count vectors, and the
+PERMUTE branch runs a ``fori_loop`` over exactly that plan's count.
+The former layout stacked every plan to a common ``k_max`` — fine when
+plans share a width, quadratically wasteful when one k=128 S-box
+decode rides beside a dozen k<=2 routing plans (the AES-GCM program's
+shape: the stacked table would be ~5x the flat one, and every k=1 step
+would gather 128 columns).  Weights are ragged the same way
+(``w_flat`` + per-plan offset, -1 for unweighted plans), so one
+weighted plan no longer forces a full-size weight table for all.  The
+loop bound is *program* data (scalar-prefetch class, payload-
+independent), so fixed latency per program is preserved.
+
+Everything here targets states of a few thousand rows at payload
+widths up to a few hundred lanes — (1600, 128) int32 is 800 KB, far
+under VMEM — so a single un-gridded launch with whole-array operands
+is the right shape.  Wider payloads shard lanes *outside* the kernel
+(they are independent by construction).
 """
 
 from __future__ import annotations
@@ -58,7 +70,10 @@ DROP = -1
 # tuple, and core.plan_program's step-stream encoder asserts its OPS
 # order matches it — insert or reorder an op in one place without the
 # other and programs fail loudly at build time, never silently.
-OPCODES = ("permute", "xor", "and", "andn", "add", "rotlv", "xor_const")
+# ("eq_const" appended last so pre-existing encoded streams keep their
+# numbering.)
+OPCODES = ("permute", "xor", "and", "andn", "add", "rotlv", "xor_const",
+           "eq_const")
 
 
 def _rotlv(v, amt):
@@ -69,15 +84,18 @@ def _rotlv(v, amt):
     return (v << a) | (v >> ((bits - a) & (bits - 1)))
 
 
-def _kernel(state_ref, steps_ref, plans_ref, folds_ref, w_ref, consts_ref,
-            out_ref, *, n_valid, n_regs, k_max, rounds, const_stride,
-            weighted):
+def _kernel(state_ref, steps_ref, plans_ref, koff_ref, kcnt_ref, folds_ref,
+            w_ref, woff_ref, consts_ref, out_ref, *, n_valid, n_regs,
+            rounds, const_stride, weighted):
     """The VM: fori_loop(rounds) { scan(steps) { switch(op) } }."""
     state = state_ref[...]
     steps = steps_ref[...]          # (n_steps, 6) int32 rows
-    plan_tbl = plans_ref[...]       # (n_plans, n_pad, k_max)
+    plan_tbl = plans_ref[...]       # (K_total, n_pad) ragged select rows
+    koff = koff_ref[...]            # (n_plans,) first select row
+    kcnt = kcnt_ref[...]            # (n_plans,) select count
     folds = folds_ref[...]          # (n_plans,) 1 = GF(2) XOR fold
-    w_tbl = w_ref[...] if weighted else None
+    w_flat = w_ref[...] if weighted else None   # (KW_total, n_pad)
+    woff = woff_ref[...]            # (n_plans,) weight row or -1
     consts = consts_ref[...]        # (n_consts, n_pad)
 
     def round_body(rnd, regs):
@@ -91,26 +109,37 @@ def _kernel(state_ref, steps_ref, plans_ref, folds_ref, w_ref, consts_ref,
                     consts, c + rnd * const_stride, 0, keepdims=False)
 
             def f_permute(_):
-                idx = jax.lax.dynamic_index_in_dim(plan_tbl, p, 0,
-                                                   keepdims=False)
-                w = (jax.lax.dynamic_index_in_dim(w_tbl, p, 0,
-                                                  keepdims=False)
-                     if weighted else None)
-                acc_add = acc_xor = None
-                for j in range(k_max):
-                    src = idx[:, j]
+                base = jax.lax.dynamic_index_in_dim(koff, p, 0,
+                                                    keepdims=False)
+                count = jax.lax.dynamic_index_in_dim(kcnt, p, 0,
+                                                     keepdims=False)
+                wbase = jax.lax.dynamic_index_in_dim(woff, p, 0,
+                                                     keepdims=False)
+
+                def body(j, accs):
+                    acc_add, acc_xor = accs
+                    src = jax.lax.dynamic_index_in_dim(
+                        plan_tbl, base + j, 0, keepdims=False)
                     valid = (src >= 0) & (src < n_valid)
                     g = jnp.take(av, jnp.clip(src, 0, n_valid - 1),
                                  axis=0)
-                    if w is not None:
-                        g = g * w[:, j][:, None].astype(g.dtype)
+                    if weighted:
+                        wrow = jax.lax.dynamic_index_in_dim(
+                            w_flat, jnp.maximum(wbase, 0) + j, 0,
+                            keepdims=False)
+                        wsel = jnp.where(wbase >= 0, wrow,
+                                         jnp.ones_like(wrow))
+                        g = g * wsel[:, None].astype(g.dtype)
                     g = jnp.where(valid[:, None], g, jnp.zeros_like(g))
-                    acc_add = g if acc_add is None else acc_add + g
                     # GF(2) accumulates in the carrier: gathered values
                     # fold to bit 0 (out-of-carrier payloads land where
                     # apply_plan's ``sum & 1`` puts them), XOR = parity.
                     gm = g & jnp.ones_like(g)
-                    acc_xor = gm if acc_xor is None else acc_xor ^ gm
+                    return (acc_add + g, acc_xor ^ gm)
+
+                zero = jnp.zeros_like(av)
+                acc_add, acc_xor = jax.lax.fori_loop(
+                    0, count, body, (zero, zero))
                 is_xor = jax.lax.dynamic_index_in_dim(folds, p, 0,
                                                       keepdims=False)
                 return jnp.where(is_xor != 0, acc_xor, acc_add)
@@ -124,6 +153,9 @@ def _kernel(state_ref, steps_ref, plans_ref, folds_ref, w_ref, consts_ref,
                 "rotlv": lambda _: _rotlv(av, const_row()),
                 "xor_const":
                     lambda _: av ^ const_row().astype(av.dtype)[:, None],
+                "eq_const":
+                    lambda _: (av == const_row().astype(av.dtype)[:, None]
+                               ).astype(av.dtype),
             }
             val = jax.lax.switch(op, [dispatch[o] for o in OPCODES], None)
             regs = jax.lax.dynamic_update_index_in_dim(regs, val, dst, 0)
@@ -146,8 +178,11 @@ def plan_program_pallas(
     state: jax.Array,
     steps: jax.Array,
     plan_tbl: jax.Array,
+    koff: jax.Array,
+    kcnt: jax.Array,
     folds: jax.Array,
-    w_tbl: jax.Array | None,
+    w_flat: jax.Array | None,
+    woff: jax.Array,
     consts: jax.Array,
     *,
     n_valid: int,
@@ -160,22 +195,24 @@ def plan_program_pallas(
 
     state: (n_pad, d_pad); steps: (n_steps, 6) int32 rows of
     (opcode, dst, a, b, plan, const) — one round's stream; plan_tbl:
-    (n_plans, n_pad, k_max) int32 stacked gather tables (pad rows and
-    pad columns DROP); folds: (n_plans,) int32, 1 for GF(2) XOR
-    accumulation; w_tbl: like plan_tbl for weighted programs or None;
+    (K_total, n_pad) int32 — every plan's select columns concatenated,
+    one row per column (pad rows DROP); koff/kcnt: (n_plans,) int32
+    per-plan first-row offset / column count into plan_tbl; folds:
+    (n_plans,) int32, 1 for GF(2) XOR accumulation; w_flat: the ragged
+    weight rows for weighted plans (or None when no plan is weighted);
+    woff: (n_plans,) int32 first weight row per plan, -1 = unweighted;
     consts: (n_consts, n_pad) int32 (a 1-row zero table when unused).
     Returns (n_pad, d_pad) in state.dtype.
     """
     kernel = functools.partial(
-        _kernel, n_valid=n_valid, n_regs=n_regs,
-        k_max=plan_tbl.shape[-1], rounds=rounds,
-        const_stride=const_stride, weighted=w_tbl is not None)
+        _kernel, n_valid=n_valid, n_regs=n_regs, rounds=rounds,
+        const_stride=const_stride, weighted=w_flat is not None)
     # Keep the kernel signature fixed: an unweighted program passes a
-    # (n_plans, 1, 1) placeholder the kernel never reads.
-    operands = [state, steps, plan_tbl, folds,
-                (jnp.zeros((plan_tbl.shape[0], 1, 1), jnp.int32)
-                 if w_tbl is None else w_tbl),
-                consts]
+    # (1, 1) placeholder the kernel never reads.
+    operands = [state, steps, plan_tbl, koff, kcnt, folds,
+                (jnp.zeros((1, 1), jnp.int32) if w_flat is None
+                 else w_flat),
+                woff, consts]
     return pl.pallas_call(
         kernel,
         out_shape=jax.ShapeDtypeStruct(state.shape, state.dtype),

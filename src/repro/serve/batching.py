@@ -78,7 +78,7 @@ from repro.core import telemetry
 from repro.core.resilience import (DeviceHealth, Fault, ResilientExecutor,
                                    TimeoutFault, default_chain)
 from repro.core.tuning import TuningTable
-from repro.crypto import keccak
+from repro.crypto import gcm, keccak
 from repro.crypto.registry import REGISTRY
 from repro.dist.fault import (HeartbeatTracker, StragglerPolicy,
                               survivor_mesh_shape)
@@ -98,7 +98,7 @@ class Cancelled(RuntimeError):
 # Requests
 # ---------------------------------------------------------------------------
 
-_SUPPORTED_OPS = ("sha3_256",)
+_SUPPORTED_OPS = ("sha3_256", "gcm_seal")
 
 
 def _n_blocks(payload_len: int) -> int:
@@ -110,6 +110,31 @@ def _n_blocks(payload_len: int) -> int:
 def _dummy_payload(n_blocks: int) -> bytes:
     """A payload whose padded form occupies exactly ``n_blocks``."""
     return b"\x00" * (_RATE_BYTES * n_blocks - 1)
+
+
+# AEAD records ride the same byte-payload admission path as digests.
+# Wire format for op="gcm_seal": nonce(12) || aad_len:u32be || aad ||
+# plaintext; the result is ciphertext || 16-byte tag.  The bucket key
+# is the exact (pt_len, aad_len) record geometry — that is what one
+# fused GCM program instance covers, so a bucket maps 1:1 onto ONE
+# program launch with the batch as payload lanes.
+
+def encode_aead_record(nonce: bytes, plaintext: bytes,
+                       aad: bytes = b"") -> bytes:
+    """Pack one seal request for ``submit(..., op='gcm_seal')``."""
+    if len(nonce) != gcm.IV_BYTES:
+        raise ValueError(f"AEAD nonce must be {gcm.IV_BYTES} bytes")
+    return nonce + len(aad).to_bytes(4, "big") + aad + plaintext
+
+
+def _decode_aead_record(payload: bytes) -> tuple:
+    aad_len = int.from_bytes(payload[12:16], "big")
+    return (payload[:12], payload[16 + aad_len:], payload[16:16 + aad_len])
+
+
+def _aead_bucket(payload: bytes) -> tuple:
+    aad_len = int.from_bytes(payload[12:16], "big")
+    return (len(payload) - 16 - aad_len, aad_len)   # (pt_len, aad_len)
 
 
 class Request:
@@ -138,6 +163,8 @@ class Request:
 
     @property
     def bucket(self) -> tuple:
+        if self.op == "gcm_seal":
+            return (self.op,) + _aead_bucket(self.payload)
         return (self.op, _n_blocks(len(self.payload)))
 
     def done(self) -> bool:
@@ -217,6 +244,9 @@ class BatchingOptions:
     double_buffer: bool = True
     # Measured backend table; None creates a fresh engine-local one.
     tuning: Optional[TuningTable] = None
+    # Engine-held AES-128 key for op="gcm_seal" buckets (per-record
+    # keys would defeat bucketing: the fused program is per-key).
+    aead_key: bytes = b"\x00" * 16
 
 
 def _pack_blocks(payloads: Sequence[bytes]) -> np.ndarray:
@@ -290,6 +320,31 @@ def _keccak_registry_keys(backend: str) -> tuple:
     if backend == "megakernel":
         return (keccak.MEGAKERNEL_PROGRAM_KEY,)
     return ("keccak/rho_pi",)
+
+
+def _bucket_seal(payloads: Sequence[bytes], backend: str, key: bytes, *,
+                 fixed_latency: bool,
+                 interpret: Optional[bool] = None) -> list:
+    """Seal one AEAD bucket: decode the wire records and run the whole
+    batch as ONE fused GCM program launch (backend='megakernel'), or the
+    chained per-block lowering on a crossbar backend when degraded."""
+    recs = [_decode_aead_record(p) for p in payloads]
+    be = "fused" if backend == "megakernel" else backend
+    return gcm.aes128_gcm_seal_batch(
+        key, [r[0] for r in recs], [r[1] for r in recs],
+        [r[2] for r in recs], backend=be,
+        fixed_latency=fixed_latency and be == "fused",
+        interpret=interpret)
+
+
+def _gcm_registry_keys(key: bytes, pt_len: int, aad_len: int):
+    """Quarantine targets for a gcm_seal bucket: the fused program on
+    the megakernel rung, the GHASH plan on the chained rungs."""
+    def keys(backend: str) -> tuple:
+        if backend == "megakernel":
+            return (gcm._program_key(key, pt_len, aad_len, False),)
+        return (gcm._ghash_plan_key(gcm._hash_key(key), "horner", 1),)
+    return keys
 
 
 class BatchingEngine:
@@ -536,49 +591,71 @@ class BatchingEngine:
     # -- dispatch -----------------------------------------------------------
 
     def _prepare(self, batch: list) -> tuple:
-        """Host half of a bucket execution: pow2 lane padding + pad10*1
-        block packing.  Runs on the prep thread when double-buffered."""
-        op, n_blocks = batch[0].bucket
+        """Host half of a bucket execution: pow2 lane padding + payload
+        packing.  Runs on the prep thread when double-buffered."""
+        bucket = batch[0].bucket
+        op, geom = bucket[0], bucket[1:]
         # Pad the lane count to the next power of two so bucket shapes
-        # come from a fixed set: (b_pad, n_blocks) IS the geometry the
+        # come from a fixed set: (b_pad, *geom) IS the geometry the
         # fixed-latency contract and the circuit breaker key on.  On a
         # mesh the floor is the device count so every shard gets lanes.
         b_pad = self._mesh_lane_floor()
         while b_pad < len(batch):
             b_pad *= 2
         payloads = [r.payload for r in batch]
+        if op == "gcm_seal":
+            pt_len, aad_len = geom
+            filler = encode_aead_record(b"\x00" * gcm.IV_BYTES,
+                                        b"\x00" * pt_len,
+                                        b"\x00" * aad_len)
+            payloads += [filler] * (b_pad - len(batch))
+            telemetry.incr("serve_padded_lanes", b_pad - len(batch))
+            # Records stay as wire bytes: the seal path owns its own
+            # bit packing (gcm._pack_records) per backend.
+            return op, geom, b_pad, payloads
+        (n_blocks,) = geom
         payloads += [_dummy_payload(n_blocks)] * (b_pad - len(batch))
         telemetry.incr("serve_padded_lanes", b_pad - len(batch))
         with _obs.span("bucket_pack", trace_id=batch[0].trace_id, op=op,
                        n_blocks=n_blocks, lanes=len(batch), b_pad=b_pad):
-            return op, n_blocks, b_pad, _pack_blocks(payloads)
+            return op, geom, b_pad, _pack_blocks(payloads)
 
     def _execute_batch(self, batch: list,
                        prepared: Optional[tuple] = None) -> None:
-        op, n_blocks, b_pad, blocks = (prepared if prepared is not None
-                                       else self._prepare(batch))
+        op, geom, b_pad, data = (prepared if prepared is not None
+                                 else self._prepare(batch))
+        shape = (b_pad,) + geom
         mesh = self._active_mesh()
         mesh_shape = None if mesh is None else dict(mesh.shape)
 
-        def run(backend: str) -> list:
-            return _absorb_digests(blocks, backend,
-                                   fixed_latency=self.opt.fixed_latency,
-                                   interpret=self.interpret,
-                                   mesh=mesh, mesh_axis=self.opt.mesh_axis)
+        if op == "gcm_seal":
+            def run(backend: str) -> list:
+                return _bucket_seal(data, backend, self.opt.aead_key,
+                                    fixed_latency=self.opt.fixed_latency,
+                                    interpret=self.interpret)
+            registry_keys = _gcm_registry_keys(self.opt.aead_key, *geom)
+        else:
+            def run(backend: str) -> list:
+                return _absorb_digests(data, backend,
+                                       fixed_latency=self.opt.fixed_latency,
+                                       interpret=self.interpret,
+                                       mesh=mesh,
+                                       mesh_axis=self.opt.mesh_axis)
+            registry_keys = _keccak_registry_keys
 
-        chain = self.tuning.rank_chain(op, (b_pad, n_blocks), self.chain,
+        chain = self.tuning.rank_chain(op, shape, self.chain,
                                        mesh_shape=mesh_shape)
         # The span IS the batch stopwatch: straggler tracking and the
         # tuning EWMA both read its duration (works with tracing off —
         # a disabled span still times itself).
         sp = _obs.span("device_absorb", trace_id=batch[0].trace_id, op=op,
-                       b_pad=b_pad, n_blocks=n_blocks, lanes=len(batch),
+                       b_pad=b_pad, geom=str(geom), lanes=len(batch),
                        mesh=bool(mesh is not None))
         try:
             with sp:
                 res = self.executor.execute(
-                    op, (b_pad, n_blocks), run, chain=chain,
-                    registry_keys=_keccak_registry_keys)
+                    op, shape, run, chain=chain,
+                    registry_keys=registry_keys)
                 sp.set(backend=res.backend)
         except Fault as e:
             telemetry.incr("serve_failed", len(batch))
@@ -588,7 +665,7 @@ class BatchingEngine:
         finally:
             self.straggler.observe(sp.duration_s)
             telemetry.incr("serve_batches")
-        self.tuning.record_span(sp, op, (b_pad, n_blocks), res.backend,
+        self.tuning.record_span(sp, op, shape, res.backend,
                                 mesh_shape=mesh_shape)
         if mesh is not None:
             telemetry.incr("serve_mesh_batches")
@@ -598,8 +675,7 @@ class BatchingEngine:
             for d, dev in enumerate(self._mesh_devices):
                 if dev in active:
                     self.device_health.record_success(d)
-        self.batch_log.append((op, (b_pad, n_blocks), res.backend,
-                               len(batch)))
+        self.batch_log.append((op, shape, res.backend, len(batch)))
         telemetry.incr("serve_completed", len(batch))
         for req, digest in zip(batch, res.value):
             req._finish(value=digest, backend=res.backend)

@@ -16,8 +16,10 @@ from repro.core.resilience import (CircuitBreaker, LaunchFault,
                                    ResilientExecutor, RetryPolicy,
                                    TimeoutFault)
 from repro.crypto.registry import REGISTRY
+from repro.crypto import gcm
 from repro.serve.batching import (BatchingEngine, BatchingOptions, Cancelled,
-                                  Overloaded, _dummy_payload, _n_blocks)
+                                  Overloaded, _dummy_payload, _n_blocks,
+                                  encode_aead_record)
 
 pytestmark = pytest.mark.chaos
 
@@ -182,6 +184,62 @@ class TestDegradation:
         assert stats["serve_completed"] == 1
         assert stats["breaker_open"] == []
         assert stats["resilience_backend_einsum"] == 1
+
+
+class TestAEADRecords:
+    """The gcm_seal op: (pt_len, aad_len)-geometry buckets sealing
+    AEAD records through the same admission/degradation machinery."""
+
+    KEY = bytes(range(16))
+
+    def test_mixed_geometries_bucket_and_seal_bit_exactly(self):
+        eng = _engine(aead_key=self.KEY, max_batch=8)
+        recs = [(bytes([i]) * 12, bytes([0x40 + i]) * pt, b"ad" * i)
+                for i, pt in enumerate((20, 20, 33, 33, 5))]
+        reqs = [eng.submit(encode_aead_record(n, p, a), op="gcm_seal")
+                for n, p, a in recs]
+        _drain(eng)
+        for req, (n, p, a) in zip(reqs, recs):
+            want = gcm.aes128_gcm_seal(self.KEY, n, p, a,
+                                       backend="einsum")
+            assert req.result(timeout=5) == want
+
+    def test_bucket_key_is_op_and_geometry(self):
+        eng = _engine(aead_key=self.KEY, max_batch=2)
+        same = [encode_aead_record(bytes([i]) * 12, b"x" * 24, b"aa")
+                for i in range(2)]
+        other = encode_aead_record(b"\x07" * 12, b"x" * 24)  # no AAD
+        reqs = [eng.submit(r, op="gcm_seal") for r in same + [other]]
+        eng.run_once()                           # full (24, 2) bucket
+        assert reqs[0].done() and reqs[1].done() and not reqs[2].done()
+        _drain(eng)
+        assert reqs[2].done()
+
+    def test_filler_records_never_leak_into_results(self):
+        # 3 records pad to a 4-lane batch; the filler lane must not
+        # perturb any real lane (sealed output is per-record exact).
+        eng = _engine(aead_key=self.KEY, max_batch=8)
+        recs = [(bytes([9 - i]) * 12, bytes(range(16)), b"")
+                for i in range(3)]
+        reqs = [eng.submit(encode_aead_record(n, p, a), op="gcm_seal")
+                for n, p, a in recs]
+        _drain(eng)
+        for req, (n, p, a) in zip(reqs, recs):
+            got = req.result(timeout=5)
+            assert got[-16:] == gcm.aes128_gcm_seal(
+                self.KEY, n, p, a, backend="einsum")[-16:]
+            assert gcm.aes128_gcm_open(self.KEY, n, got) == p
+
+    def test_sha3_and_gcm_interleave_in_one_engine(self):
+        eng = _engine(aead_key=self.KEY, max_batch=8)
+        msg = b"hash me"
+        rec = encode_aead_record(b"\x01" * 12, b"seal me")
+        h = eng.submit(msg)
+        s = eng.submit(rec, op="gcm_seal")
+        _drain(eng)
+        assert h.result(timeout=5) == hashlib.sha3_256(msg).digest()
+        assert s.result(timeout=5) == gcm.aes128_gcm_seal(
+            self.KEY, b"\x01" * 12, b"seal me", backend="einsum")
 
 
 class TestWorkerThread:

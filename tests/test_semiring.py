@@ -497,3 +497,85 @@ class TestConstantTimeAudit:
         with pytest.raises(jax.errors.JAXTypeError):
             with reg.observe("concretize-noaudit"):
                 jax.jit(lambda v: int(v))(jnp.int32(3))
+
+
+class TestGF2KLiftLaws:
+    """Deterministic slices of the hypothesis sweeps in
+    test_semiring_props.py (which skip when hypothesis is absent):
+    lift∘compose == compose∘lift at every family width, and the lift
+    cache never crossing width/polynomial lines."""
+
+    @pytest.mark.parametrize("width", [4, 8, 16, 128])
+    def test_lift_commutes_with_compose(self, width):
+        g = sr.gf2_k(width)
+        rng = np.random.default_rng(7 + width)
+        n, k = 5, 2
+        limbs = max(1, width // 8 if width > 31 else 1)
+
+        def rand_plan():
+            idx = jnp.asarray(rng.integers(-1, n, (n, k)), jnp.int32)
+            if width <= 31:
+                w = jnp.asarray(rng.integers(0, 1 << width, (n, k)),
+                                jnp.int32)
+            else:
+                w = jnp.asarray(rng.integers(0, 256, (n, k, limbs)),
+                                jnp.int32)
+            return xb.gather_plan(idx, n, weights=w, semiring=g)
+
+        def as_int(wv) -> int:
+            if width <= 31:
+                return int(wv)
+            return int.from_bytes(bytes(int(x) for x in wv), "little")
+
+        def oracle(plan, xs):
+            idx = np.asarray(plan.idx)
+            wts = np.asarray(plan.weights)
+            out = []
+            for o in range(n):
+                acc = 0
+                for s in range(idx.shape[1]):
+                    i = int(idx[o, s])
+                    if 0 <= i < n:
+                        acc ^= sr.gf2k_mul_int(as_int(wts[o, s]), xs[i],
+                                               width, g.poly)
+                out.append(acc)
+            return out
+
+        def bits(xs):
+            m = np.zeros((n * width, 1), np.int32)
+            for i, v in enumerate(xs):
+                for j in range(width):
+                    m[width * i + j, 0] = (v >> j) & 1
+            return jnp.asarray(m)
+
+        p1, p2 = rand_plan(), rand_plan()
+        xs = [int(v) for v in rng.integers(0, 1 << min(width, 62), n)]
+        want = np.asarray(bits(oracle(p2, oracle(p1, xs))))
+        fused = xb.apply_plan(xb.lift_gf2_k(pa.compose(p2, p1)), bits(xs))
+        chained = xb.apply_plan(
+            xb.lift_gf2_k(p2), xb.apply_plan(xb.lift_gf2_k(p1), bits(xs)))
+        np.testing.assert_array_equal(np.asarray(fused), want)
+        np.testing.assert_array_equal(np.asarray(chained), want)
+
+    def test_lift_cache_keys_width_and_poly(self):
+        """Regression: rebinding ONE idx/weights array pair under a
+        different width or polynomial must not hit the other's cached
+        lift (the cache key carries the semiring name)."""
+        idx = jnp.zeros((1, 1), jnp.int32)
+        w = jnp.full((1, 1), 8, jnp.int32)      # x^3, so xtime reduces
+        lifted = {}
+        for g in (sr.gf2_k(4), sr.gf2_k(5, poly=0x25),
+                  sr.gf2_k(4, poly=0x19)):
+            plan = xb.gather_plan(idx, 1, weights=w, semiring=g)
+            lifted[g.name] = xb.lift_gf2_k(plan)
+        assert len({id(p) for p in lifted.values()}) == 3
+        x2 = jnp.asarray([[0], [1], [0], [0]], jnp.int32)   # element 2
+        got_a = np.asarray(xb.apply_plan(lifted["gf2_4"], x2))[:, 0]
+        got_b = np.asarray(xb.apply_plan(lifted["gf2_4_p19"], x2))[:, 0]
+
+        def val(bs):
+            return sum(int(b) << j for j, b in enumerate(bs))
+
+        assert val(got_a) == sr.gf2k_mul_int(8, 2, 4, 0x13)
+        assert val(got_b) == sr.gf2k_mul_int(8, 2, 4, 0x19)
+        assert val(got_a) != val(got_b)

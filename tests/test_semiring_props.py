@@ -133,6 +133,92 @@ class TestPlanLaws:
         got = np.asarray(xb.apply_plan(big, x.reshape(b * n, 2)))
         np.testing.assert_array_equal(got, np.concatenate(rows, axis=0))
 
+    @given(st.integers(0, 10_000), st.sampled_from([4, 8, 16, 128]))
+    @settings(max_examples=20, deadline=None)
+    def test_lift_commutes_with_compose(self, seed, width):
+        """lift∘compose == compose∘lift, at every family width.
+
+        The tiled GF(2) bit lift of a fused GF(2^k) plan must act
+        identically to chaining the lifted factors — and both must
+        match the python-int field oracle.  This is the property that
+        makes GHASH-by-H a single weighted pass safe to fuse.
+        """
+        g = sr.gf2_k(width)
+        rng = np.random.default_rng(seed)
+        n, k = 5, 2
+        limbs = max(1, width // 8 if width > 31 else 1)
+
+        def rand_plan():
+            idx = jnp.asarray(rng.integers(-1, n, (n, k)), jnp.int32)
+            if width <= 31:
+                w = jnp.asarray(rng.integers(0, 1 << width, (n, k)),
+                                jnp.int32)
+            else:
+                w = jnp.asarray(rng.integers(0, 256, (n, k, limbs)),
+                                jnp.int32)
+            return xb.gather_plan(idx, n, weights=w, semiring=g)
+
+        def as_int(wv) -> int:
+            if width <= 31:
+                return int(wv)
+            return int.from_bytes(bytes(int(x) for x in wv), "little")
+
+        def oracle(plan, xs):
+            idx = np.asarray(plan.idx)
+            wts = np.asarray(plan.weights)
+            out = []
+            for o in range(n):
+                acc = 0
+                for s in range(idx.shape[1]):
+                    i = int(idx[o, s])
+                    if 0 <= i < n:
+                        acc ^= sr.gf2k_mul_int(as_int(wts[o, s]), xs[i],
+                                               width, g.poly)
+                out.append(acc)
+            return out
+
+        def bits(xs):
+            # Bit row width*i + j = coefficient j of element i (limb r,
+            # bit b of a wide carrier sits at j = 8r + b — same order).
+            m = np.zeros((n * width, 1), np.int32)
+            for i, v in enumerate(xs):
+                for j in range(width):
+                    m[width * i + j, 0] = (v >> j) & 1
+            return jnp.asarray(m)
+
+        p1, p2 = rand_plan(), rand_plan()
+        xs = [int(v) for v in rng.integers(0, 1 << min(width, 62), n)]
+        want = bits(oracle(p2, oracle(p1, xs)))
+
+        lifted_fused = xb.lift_gf2_k(pa.compose(p2, p1))
+        chained = xb.apply_plan(xb.lift_gf2_k(p2),
+                                xb.apply_plan(xb.lift_gf2_k(p1), bits(xs)))
+        np.testing.assert_array_equal(
+            np.asarray(xb.apply_plan(lifted_fused, bits(xs))),
+            np.asarray(want))
+        np.testing.assert_array_equal(np.asarray(chained), np.asarray(want))
+
+    def test_lift_cache_keys_width_and_poly(self):
+        """Regression: one idx/weights array pair rebound under a
+        different width or polynomial must never hit the other's cached
+        lift (the cache key carries the semiring name)."""
+        idx = jnp.zeros((1, 1), jnp.int32)
+        w = jnp.full((1, 1), 8, jnp.int32)       # x^3: xtime wraps
+        lifted = {}
+        for g in (sr.gf2_k(4), sr.gf2_k(5, poly=0x25),
+                  sr.gf2_k(4, poly=0x19)):
+            plan = xb.gather_plan(idx, 1, weights=w, semiring=g)
+            lifted[g.name] = xb.lift_gf2_k(plan)
+        assert len({id(p) for p in lifted.values()}) == 3
+        # Same width, different modulus: 8*2 = 0x10 reduces differently.
+        x2 = jnp.asarray([[0], [1], [0], [0]], jnp.int32)   # element 2
+        got_a = np.asarray(xb.apply_plan(lifted["gf2_4"], x2))[:, 0]
+        got_b = np.asarray(xb.apply_plan(lifted["gf2_4_p19"], x2))[:, 0]
+        val = lambda bs: sum(int(b) << j for j, b in enumerate(bs))
+        assert val(got_a) == sr.gf2k_mul_int(8, 2, 4, 0x13)
+        assert val(got_b) == sr.gf2k_mul_int(8, 2, 4, 0x19)
+        assert val(got_a) != val(got_b)
+
     @given(st.integers(0, 10_000), st.sampled_from(["gf2", "gf2_8"]))
     @settings(max_examples=25, deadline=None)
     def test_neutral_identity_is_compose_unit(self, seed, ring):
