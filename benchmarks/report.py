@@ -54,6 +54,11 @@ BENCH_FILES = [
         "sharded_bit_exact_all",
         "collective_free_all",
         "moe_skewed_scheduled_vs_naive_transfers")),
+    ("BENCH_recovery.json", ("replay_p50_ms",
+                             "whole_batch_p50_ms",
+                             "speedup_replay_vs_whole_batch",
+                             "lanes_replayed_per_fault",
+                             "all_exact")),
 ]
 
 

@@ -64,6 +64,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import obs as _obs
+from repro.core import integrity as _integrity
 from repro.core import semiring as sr_mod
 from repro.core import transform as _t
 from repro.core.semiring import GF2, GF2_8, REAL, Semiring
@@ -389,7 +390,24 @@ _obs.metrics.gauge_fn("compile_cache_size", lambda: len(_COMPILE_CACHE))
 _obs.metrics.gauge_fn("compile_cache_pinned", lambda: len(_PINNED_COMPILE))
 
 
+def _schedule_parts(compiled: "CompiledPlan") -> tuple:
+    """The digest-relevant content of a cached schedule: everything the
+    sparse kernel's launch geometry and tile routing are derived from.
+    The embedded plan arrays are deliberately excluded — they are the
+    *source* the schedule would be recompiled from, and are covered by
+    the registry fingerprint / drift checks instead."""
+    return (compiled.block_o, compiled.block_n, compiled.n_o_tiles,
+            compiled.n_n_tiles, compiled.occupancy, compiled.pair_o,
+            compiled.pair_n, compiled.active,
+            compiled.num_active if isinstance(compiled.num_active, int)
+            else None)
+
+
 def clear_compile_cache() -> None:
+    for key in list(_COMPILE_CACHE):
+        _integrity.SCHEDULE_GUARD.drop(key)
+    for key in list(_PINNED_COMPILE):
+        _integrity.SCHEDULE_GUARD.drop(key)
     _COMPILE_CACHE.clear()
     _PINNED_COMPILE.clear()
     _COMPILE_CACHE_STATS.update(hits=0, misses=0)
@@ -408,6 +426,7 @@ def unpin_plan(plan: "PermutePlan") -> int:
         if (compiled.plan.idx is plan.idx
                 and compiled.plan.weights is plan.weights):
             del _PINNED_COMPILE[key]
+            _integrity.SCHEDULE_GUARD.drop(key)
             removed += 1
     return removed
 
@@ -473,6 +492,13 @@ def compile_plan(plan: PermutePlan, *, block_o: int = 128,
         if (hit is not None and hit.plan.idx is plan.idx
                 and hit.plan.weights is plan.weights
                 and hit.plan.semiring is plan.semiring):
+            # Sampled digest check of the cached schedule content; a
+            # mismatch evicts the entry and raises IntegrityError (the
+            # executor retries, which recompiles from the plan arrays).
+            _integrity.SCHEDULE_GUARD.verify(
+                key, lambda: _schedule_parts(hit),
+                evict=lambda: (_PINNED_COMPILE.pop(key, None),
+                               _COMPILE_CACHE.pop(key, None)))
             _COMPILE_CACHE_STATS["hits"] += 1
             if in_lru:
                 if pin:  # promote: from now on immune to LRU churn
@@ -500,12 +526,14 @@ def compile_plan(plan: PermutePlan, *, block_o: int = 128,
     compiled = CompiledPlan(plan, block_o, block_n, to, tn, occ,
                             pair_o, pair_n, active, num_active)
     if cacheable:
+        _integrity.SCHEDULE_GUARD.seal(key, _schedule_parts(compiled))
         if pin:
             _PINNED_COMPILE[key] = compiled
         else:
             _COMPILE_CACHE[key] = compiled
             while len(_COMPILE_CACHE) > _COMPILE_CACHE_CAPACITY:
-                _COMPILE_CACHE.popitem(last=False)
+                evicted_key, _ = _COMPILE_CACHE.popitem(last=False)
+                _integrity.SCHEDULE_GUARD.drop(evicted_key)
     return compiled
 
 
@@ -808,6 +836,8 @@ def lift_cache_info() -> dict:
 
 
 def clear_lift_cache() -> None:
+    for key in list(_LIFT_CACHE):
+        _integrity.LIFT_GUARD.drop(key)
     _LIFT_CACHE.clear()
     _LIFT_STATS.update(hits=0, misses=0)
 
@@ -849,6 +879,14 @@ def lift_gf2_k(plan: PermutePlan) -> PermutePlan:
         hit = _LIFT_CACHE.get(key)
         if (hit is not None and hit[1] is plan.idx
                 and hit[2] is plan.weights):
+            # Sampled digest check of the lifted bit plan's arrays —
+            # the key ids reference the *source* arrays, so a flipped
+            # bit in the lifted idx keeps hitting this entry and must
+            # be caught here, not by a key miss.
+            lifted_hit = hit[0]
+            _integrity.LIFT_GUARD.verify(
+                key, lambda: (lifted_hit.idx, lifted_hit.weights),
+                evict=lambda: _LIFT_CACHE.pop(key, None))
             _LIFT_CACHE.move_to_end(key)
             _LIFT_STATS["hits"] += 1
             return hit[0]
@@ -899,9 +937,11 @@ def lift_gf2_k(plan: PermutePlan) -> PermutePlan:
         lifted = scatter_plan(bit_idx, width * plan.n_out, semiring=GF2)
 
     if keyable and jax.core.trace_state_clean():
+        _integrity.LIFT_GUARD.seal(key, (lifted.idx, lifted.weights))
         _LIFT_CACHE[key] = (lifted, plan.idx, plan.weights)
         while len(_LIFT_CACHE) > _LIFT_CACHE_CAPACITY:
-            _LIFT_CACHE.popitem(last=False)
+            evicted_key, _ = _LIFT_CACHE.popitem(last=False)
+            _integrity.LIFT_GUARD.drop(evicted_key)
     return lifted
 
 

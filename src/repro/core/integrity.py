@@ -1,0 +1,301 @@
+"""Corruption-aware cache integrity for the permutation engine.
+
+The engine's hot paths are built on caches of *control information*:
+pinned tile schedules (``crossbar._PINNED_COMPILE``), GF(2^k) bit-lift
+plans (``crossbar._LIFT_CACHE``), megakernel executables and their
+program constant blocks (``plan_program._EXEC_CACHE``), and the static
+registries' program tables.  A single flipped bit in any of them
+produces *well-formed but wrong* output — for the crypto workloads,
+catastrophically wrong — and the fixed-latency observation contract
+only notices after a full (poisoned) execution.  This module makes
+cache content self-verifying:
+
+* **Content digests at insert.**  Every guarded cache entry is sealed
+  with a stdlib ``hashlib`` digest of its content (arrays are digested
+  over dtype/shape/bytes) exactly once, when it is inserted.  Seals are
+  overwrite-on-insert, so a recycled cache key can never be compared
+  against a stale baseline.
+
+* **Lazy sampled verification.**  Fast-path hits re-digest and compare
+  on a sampling knob: the first hit of an entry always verifies, then
+  every ``sample_every``-th hit (default 16), and — after *any* engine
+  fault (``force_verify``, armed by ``ResilientExecutor`` on every
+  classified fault) — the next hit of every entry verifies regardless.
+  A clean hit between samples costs one dict lookup and an increment.
+
+* **Evict + recompile, never serve poison.**  A digest mismatch drops
+  the cache entry (via the caller-supplied evictor), counts an
+  ``integrity_faults`` telemetry tick, emits an obs instant event, and
+  raises ``IntegrityError`` — classified by ``core.resilience`` as the
+  retryable ``IntegrityFault``, whose handling quarantines the
+  backing registry entries so the rebuild starts from clean sources.
+
+Limitation (by design): a digest proves the cached content still
+matches what was inserted; if the *source* arrays a cache entry was
+built from are themselves corrupted before first insert, the seal is
+over poisoned content.  The shadow-audit path in ``core.resilience``
+(reference-backend re-execution) is the independent end-to-end check
+that covers that case.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import hashlib
+import threading
+from typing import Callable, Iterable, Optional
+
+import numpy as np
+
+from repro import obs as _obs
+
+
+class IntegrityError(RuntimeError):
+    """A guarded cache entry failed its content-digest verification.
+
+    Carries the guard name and cache key; classified as the retryable
+    ``resilience.IntegrityFault``.  By the time this is raised the
+    poisoned entry has already been evicted — a retry recompiles.
+    """
+
+    def __init__(self, guard: str, key) -> None:
+        super().__init__(
+            f"integrity: cached {guard} entry failed digest verification "
+            f"(key={key!r}); entry evicted — retry recompiles")
+        self.guard = guard
+        self.key = key
+
+
+# ---------------------------------------------------------------------------
+# Content digests
+# ---------------------------------------------------------------------------
+
+def content_digest(parts: Iterable) -> str:
+    """One hex digest over heterogeneous content parts.
+
+    Arrays (numpy or JAX) contribute dtype, shape, and raw bytes;
+    ``bytes`` contribute themselves; ``None`` and scalars contribute
+    their repr.  Part boundaries are length-prefixed so adjacent parts
+    cannot alias (``(b"ab", b"c")`` != ``(b"a", b"bc")``).
+    """
+    h = hashlib.sha256()
+    for part in parts:
+        if part is None:
+            chunk = b"\x00none"
+        elif isinstance(part, (bytes, bytearray)):
+            chunk = bytes(part)
+        elif isinstance(part, (str, int, float, bool)):
+            chunk = repr(part).encode()
+        else:
+            arr = np.asarray(part)
+            chunk = (str(arr.dtype).encode() + b"|"
+                     + repr(arr.shape).encode() + b"|" + arr.tobytes())
+        h.update(len(chunk).to_bytes(8, "big"))
+        h.update(chunk)
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Sampling policy
+# ---------------------------------------------------------------------------
+
+_LOCK = threading.RLock()
+_SAMPLE_EVERY = 16        # verify hit 1, N+1, 2N+1, ... of each entry
+_FORCE_EPOCH = 0          # bumped on every engine fault
+
+
+def set_sample_every(n: int) -> int:
+    """Set the global verify-sampling knob; returns the previous value.
+    ``1`` verifies every hit (chaos tests); large N amortises the
+    re-digest cost over N fast-path hits."""
+    global _SAMPLE_EVERY
+    if n < 1:
+        raise ValueError(f"sample_every must be >= 1, got {n}")
+    with _LOCK:
+        prev, _SAMPLE_EVERY = _SAMPLE_EVERY, int(n)
+    return prev
+
+
+def sample_every() -> int:
+    with _LOCK:
+        return _SAMPLE_EVERY
+
+
+@contextlib.contextmanager
+def always_verify():
+    """Scope with sampling forced to every hit (test helper)."""
+    prev = set_sample_every(1)
+    try:
+        yield
+    finally:
+        set_sample_every(prev)
+
+
+def force_verify() -> int:
+    """Arm always-verify-on-next-hit for every guarded entry.
+
+    Called by ``ResilientExecutor`` on every classified fault: after
+    anything went wrong, the next touch of each cached schedule / lift
+    / program verifies its digest regardless of the sampling phase.
+    Returns the new fault epoch.
+    """
+    global _FORCE_EPOCH
+    with _LOCK:
+        _FORCE_EPOCH += 1
+        return _FORCE_EPOCH
+
+
+# ---------------------------------------------------------------------------
+# Cache guards
+# ---------------------------------------------------------------------------
+
+class _Entry:
+    __slots__ = ("digest", "hits", "epoch")
+
+    def __init__(self, digest: str, epoch: int) -> None:
+        self.digest = digest
+        self.hits = 0
+        self.epoch = epoch
+
+
+class CacheGuard:
+    """Digest ledger for one cache family (schedules, lifts, programs).
+
+    The guarded cache keeps calling ``seal`` at insert and ``verify``
+    at hit; the guard owns the digests, hit counts, and sampling state.
+    ``verify`` takes the content *lazily* (a zero-arg callable) so
+    unsampled hits never pay the digest cost.
+    """
+
+    def __init__(self, name: str,
+                 sample_every: Optional[int] = None) -> None:
+        self.name = name
+        self._sample_every = sample_every   # None -> module knob
+        self._entries: dict = {}
+        self._stats = {"sealed": 0, "hits": 0, "checks": 0, "faults": 0}
+
+    # -- knobs --------------------------------------------------------------
+
+    def _effective_sample(self) -> int:
+        return (self._sample_every if self._sample_every is not None
+                else sample_every())
+
+    # -- ledger -------------------------------------------------------------
+
+    def seal(self, key, parts: Optional[Iterable] = None, *,
+             digest: Optional[str] = None) -> str:
+        """Record the content digest for ``key`` (overwrite-on-insert)."""
+        if digest is None:
+            digest = content_digest(parts if parts is not None else ())
+        with _LOCK:
+            self._entries[key] = _Entry(digest, _FORCE_EPOCH)
+            self._stats["sealed"] += 1
+        return digest
+
+    def verify(self, key, parts_fn: Optional[Callable[[], Iterable]] = None,
+               *, digest_fn: Optional[Callable[[], str]] = None,
+               evict: Optional[Callable[[], None]] = None) -> bool:
+        """Check one cache hit against its seal (sampled).
+
+        Returns True when a digest comparison actually ran and matched,
+        False when the hit was unsampled or the key was never sealed.
+        On mismatch: drops the seal, runs ``evict`` (which must remove
+        the poisoned cache entry), counts, and raises
+        ``IntegrityError``.
+        """
+        with _LOCK:
+            entry = self._entries.get(key)
+            if entry is None:
+                return False
+            hit_index = entry.hits
+            entry.hits += 1
+            self._stats["hits"] += 1
+            check = (entry.epoch < _FORCE_EPOCH
+                     or hit_index % self._effective_sample() == 0)
+            if not check:
+                return False
+            entry.epoch = _FORCE_EPOCH
+            self._stats["checks"] += 1
+            want = entry.digest
+        _telemetry_incr("integrity_checks")
+        if digest_fn is not None:
+            got = digest_fn()
+        else:
+            got = content_digest(parts_fn() if parts_fn is not None else ())
+        if got == want:
+            return True
+        with _LOCK:
+            self._entries.pop(key, None)
+            self._stats["faults"] += 1
+        if evict is not None:
+            evict()
+        _telemetry_incr("integrity_faults")
+        _obs.event("integrity_fault", guard=self.name, key=str(key))
+        raise IntegrityError(self.name, key)
+
+    def drop(self, key) -> None:
+        with _LOCK:
+            self._entries.pop(key, None)
+
+    def clear(self) -> None:
+        with _LOCK:
+            self._entries.clear()
+
+    def depth(self) -> int:
+        with _LOCK:
+            return len(self._entries)
+
+    def info(self) -> dict:
+        with _LOCK:
+            return dict(self._stats, size=len(self._entries),
+                        sample_every=self._effective_sample())
+
+
+def _telemetry_incr(name: str) -> None:
+    # Lazy: telemetry imports crossbar imports this module.
+    from repro.core import telemetry
+    telemetry.incr(name)
+
+
+# The engine's guard instances — one per cache family.  The guarded
+# modules (crossbar, plan_program, static_registry) seal/verify through
+# these; chaos tests and the fault injector read their stats.
+SCHEDULE_GUARD = CacheGuard("schedule")    # pinned + LRU tile schedules
+LIFT_GUARD = CacheGuard("lift")            # GF(2^k) bit-lift plans
+PROGRAM_GUARD = CacheGuard("program")      # megakernel executables
+CONST_GUARD = CacheGuard("const")          # registry program const blocks
+
+GUARDS = (SCHEDULE_GUARD, LIFT_GUARD, PROGRAM_GUARD, CONST_GUARD)
+
+
+def integrity_info() -> dict:
+    """Aggregated guard stats (tests, dashboards)."""
+    out = {g.name: g.info() for g in GUARDS}
+    hits = sum(v["hits"] for v in out.values())
+    checks = sum(v["checks"] for v in out.values())
+    out["verify_rate"] = (checks / hits) if hits else 0.0
+    return out
+
+
+def reset() -> None:
+    """Drop every seal and rewind the sampling state (test isolation)."""
+    global _FORCE_EPOCH
+    with _LOCK:
+        for g in GUARDS:
+            g._entries.clear()
+            g._stats.update(sealed=0, hits=0, checks=0, faults=0)
+        _FORCE_EPOCH = 0
+
+
+# Export-time gauges: the effective sampling knob and the measured
+# verified-hit fraction (checks / hits across all guards) — the two
+# numbers a dashboard needs to see that lazy verification is actually
+# sampling, not silently disabled.
+_obs.metrics.gauge_fn("integrity_sample_every", sample_every)
+_obs.metrics.gauge_ratio(
+    "integrity_verify_rate",
+    lambda: sum(g.info()["checks"] for g in GUARDS),
+    lambda: sum(g.info()["hits"] for g in GUARDS))
+_obs.metrics.gauge_fn(
+    "integrity_sealed_entries",
+    lambda: sum(g.depth() for g in GUARDS))

@@ -66,6 +66,7 @@ import numpy as np
 
 from repro import obs as _obs
 from repro.core import crossbar as xb
+from repro.core import integrity as _integrity
 from repro.core import plan_algebra as pa
 from repro.core.semiring import GF2, REAL
 
@@ -381,8 +382,22 @@ _obs.metrics.gauge_fn("program_exec_cache_size", lambda: len(_EXEC_CACHE))
 
 
 def clear_program_cache() -> None:
+    for key in list(_EXEC_CACHE):
+        _integrity.PROGRAM_GUARD.drop(key)
     _EXEC_CACHE.clear()
     _EXEC_STATS.update(hits=0, misses=0)
+
+
+def _control_digest(program: "PlanProgram") -> str:
+    """Digest of the control content a cached executable was built from
+    (step stream, constants, plan idx/weight arrays).  The kernel owns
+    the digest recipe so the opcode numbering salts it."""
+    from repro.kernels import plan_program_kernel as ppk  # lazy: kernels opt.
+    parts = []
+    for plan in program.plans:
+        parts.append(plan.idx)
+        parts.append(plan.weights)
+    return ppk.control_digest(encode_steps(program), program.consts, parts)
 
 
 def _pad_axis(x, mult, axis, value=0):
@@ -487,15 +502,25 @@ def _run_megakernel(program: PlanProgram, x2: Array,
     hit = _EXEC_CACHE.get(key)
     cache_hit = hit is not None and hit[0] is program
     if cache_hit:
+        # Sampled re-digest of the program's control content (steps,
+        # consts, plan arrays) against the seal taken at insert — a
+        # flipped const bit keeps the id-keyed hit alive, so only a
+        # content check can catch it before launch.
+        _integrity.PROGRAM_GUARD.verify(
+            key, digest_fn=lambda: _control_digest(program),
+            evict=lambda: _EXEC_CACHE.pop(key, None))
         _EXEC_STATS["hits"] += 1
         _EXEC_CACHE.move_to_end(key)
         run = hit[1]
     else:
         _EXEC_STATS["misses"] += 1
         run = _build_exec(program, n_pad, interpret)
+        _integrity.PROGRAM_GUARD.seal(
+            key, digest=_control_digest(program))
         _EXEC_CACHE[key] = (program, run)
         while len(_EXEC_CACHE) > _EXEC_CACHE_CAPACITY:
-            _EXEC_CACHE.popitem(last=False)
+            evicted_key, _ = _EXEC_CACHE.popitem(last=False)
+            _integrity.PROGRAM_GUARD.drop(evicted_key)
     with _COUNT_LOCK:
         _PROGRAM_LAUNCHES += 1
         _PASSES_AVOIDED += program.passes

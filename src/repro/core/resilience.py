@@ -8,15 +8,17 @@ slower-but-exact backend, never to a wrong answer or a hung queue.
 Three pieces:
 
 * **Error taxonomy** — every engine failure is classified into one of
-  four typed ``Fault``s (``classify``):
+  five typed ``Fault``s (``classify``):
 
-    - ``CompileFault``  — schedule/executable compilation failed
+    - ``CompileFault``   — schedule/executable compilation failed
       (``compile_plan``, megakernel build, injected compile failures);
-    - ``LaunchFault``   — an execution failed (kernel launch, XLA
+    - ``LaunchFault``    — an execution failed (kernel launch, XLA
       runtime error, ``kernels.ops.KernelLaunchError``);
-    - ``DriftFault``    — the fixed-latency contract was violated
+    - ``DriftFault``     — the fixed-latency contract was violated
       (wraps ``static_registry.FixedLatencyError``);
-    - ``TimeoutFault``  — a deadline expired before/while the work ran.
+    - ``IntegrityFault`` — a cached schedule/lift/program failed its
+      content-digest check (wraps ``integrity.IntegrityError``);
+    - ``TimeoutFault``   — a deadline expired before/while the work ran.
 
 * **Fallback chain** — ``ResilientExecutor.execute`` runs an operation
   through an ordered backend chain (megakernel → sparse → kernel →
@@ -50,9 +52,12 @@ import time
 from typing import Callable, Optional, Sequence, Union
 
 import jax
+import numpy as np
 
 from repro import obs as _obs
+from repro.core import integrity as _integrity
 from repro.core import telemetry
+from repro.core.integrity import IntegrityError
 from repro.core.static_registry import FixedLatencyError, StaticPlanRegistry
 
 
@@ -76,6 +81,14 @@ class DriftFault(Fault):
     """The fixed-latency contract was violated (wraps FixedLatencyError)."""
 
 
+class IntegrityFault(Fault):
+    """A cached schedule/lift/program failed its content-digest check
+    (wraps ``integrity.IntegrityError``).  Retryable: the poisoned
+    entry is already evicted when this is raised, so a retry
+    recompiles; with declared registry keys the backing entries are
+    quarantined first so the rebuild starts from clean sources."""
+
+
 class TimeoutFault(Fault):
     """A deadline expired before the operation completed."""
 
@@ -93,6 +106,8 @@ def classify(exc: BaseException) -> type:
         return type(exc)
     if isinstance(exc, FixedLatencyError):
         return DriftFault
+    if isinstance(exc, IntegrityError):
+        return IntegrityFault
     if isinstance(exc, TimeoutError):
         return TimeoutFault
     from repro.core import faults as _faults
@@ -236,7 +251,7 @@ class RetryPolicy:
     max_attempts: int = 2
     backoff_base_s: float = 0.01
     backoff_factor: float = 2.0
-    retryable: tuple = (LaunchFault, CompileFault)
+    retryable: tuple = (LaunchFault, CompileFault, IntegrityFault)
 
     def backoff_s(self, attempt: int) -> float:
         return self.backoff_base_s * (self.backoff_factor ** attempt)
@@ -272,16 +287,32 @@ class ResilientExecutor:
                  breaker: Optional[CircuitBreaker] = None,
                  registry: Optional[StaticPlanRegistry] = None,
                  sleep: Callable[[float], None] = time.sleep,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 shadow_rate: float = 0.0, shadow_seed: int = 0,
+                 shadow_backend: str = "reference"):
         self.chain = tuple(chain) if chain is not None else default_chain()
         if not self.chain:
             raise ValueError("fallback chain must name at least one backend")
+        if not 0.0 <= shadow_rate <= 1.0:
+            raise ValueError(f"shadow_rate must be in [0, 1], got "
+                             f"{shadow_rate}")
         self.retry = retry
         self.breaker = breaker if breaker is not None else CircuitBreaker(
             clock=clock)
         self.registry = registry
         self.sleep = sleep
         self.clock = clock
+        # Shadow audits: a seed-deterministic fraction of successful
+        # executions is re-run on the reference backend and compared
+        # bit-exactly — the end-to-end check that catches corruption a
+        # cache digest cannot see (e.g. a source array poisoned before
+        # its first seal).  One RNG draw per audited-eligible success
+        # keeps the sampled batch indices reproducible under a seed.
+        self.shadow_rate = shadow_rate
+        self.shadow_seed = shadow_seed
+        self.shadow_backend = shadow_backend
+        self._shadow_rng = np.random.default_rng(shadow_seed)
+        self._shadow_lock = threading.Lock()
 
     # -- core ---------------------------------------------------------------
 
@@ -343,6 +374,11 @@ class ResilientExecutor:
                         fault_cls = classify(e)
                         faults.append((backend, fault_cls.__name__, str(e)))
                         telemetry.incr("resilience_faults")
+                        # Any fault arms always-verify-on-next-hit for
+                        # every guarded cache entry: whatever just went
+                        # wrong, the next touch of each cached schedule
+                        # / lift / program re-checks its digest.
+                        _integrity.force_verify()
                         sp.event("fault", backend=backend,
                                  fault=fault_cls.__name__)
                         if self.breaker.record_failure(key):
@@ -355,7 +391,7 @@ class ResilientExecutor:
                         if fault_cls is TimeoutFault:
                             telemetry.incr("resilience_timeouts")
                             raise last_fault
-                        if fault_cls is DriftFault:
+                        if fault_cls in (DriftFault, IntegrityFault):
                             if (self.registry is not None and registry_keys
                                     and not drift_quarantined):
                                 keys = (registry_keys(backend)
@@ -364,16 +400,24 @@ class ResilientExecutor:
                                 counts = [self.registry.quarantine(k)
                                           for k in keys]
                                 telemetry.incr("resilience_quarantines")
-                                sp.event("quarantine", backend=backend)
+                                sp.event("quarantine", backend=backend,
+                                         fault=fault_cls.__name__)
                                 drift_quarantined = True
                                 if counts and max(counts) <= 1:
-                                    # First drift of these entries: they
-                                    # were evicted and will rebuild
-                                    # lazily — one free retry on the
-                                    # same backend.
+                                    # First drift/corruption of these
+                                    # entries: they were evicted and
+                                    # will rebuild lazily — one free
+                                    # retry on the same backend.
                                     continue
-                            telemetry.incr("resilience_drift_escalations")
-                            break  # repeat drift: escalate to next backend
+                            if fault_cls is DriftFault:
+                                telemetry.incr(
+                                    "resilience_drift_escalations")
+                                break  # repeat drift: escalate
+                            # IntegrityFault without registry keys (or
+                            # a repeat): the poisoned cache entry was
+                            # already evicted when the error was
+                            # raised, so the bounded-retry path below
+                            # recompiles — fall through.
                         attempt += 1
                         if (attempt < self.retry.max_attempts
                                 and issubclass(fault_cls,
@@ -388,6 +432,10 @@ class ResilientExecutor:
                         break  # non-retryable or attempts exhausted
                     else:
                         self.breaker.record_success(key)
+                        if self._shadow_due(backend):
+                            value, backend = self._shadow_audit(
+                                op, geometry, backend, run, value,
+                                registry_keys, sp)
                         telemetry.incr(f"resilience_backend_{backend}")
                         if chain_index > 0:
                             telemetry.incr("resilience_fallbacks")
@@ -404,6 +452,71 @@ class ResilientExecutor:
                     f"{op}{geometry}: every backend in {use_chain} is "
                     "circuit-open; no attempt was possible")
             raise last_fault
+
+    # -- shadow audits ------------------------------------------------------
+
+    def _shadow_due(self, backend: str) -> bool:
+        """Seed-deterministic per-success sampling decision.  Results
+        produced *by* the shadow backend are never audited against
+        themselves."""
+        if self.shadow_rate <= 0.0 or backend == self.shadow_backend:
+            return False
+        with self._shadow_lock:
+            return float(self._shadow_rng.random()) < self.shadow_rate
+
+    def _shadow_audit(self, op: str, geometry: tuple, backend: str,
+                      run: Callable[[str], object], value, registry_keys,
+                      sp) -> tuple:
+        """Re-execute on the shadow (reference) backend and compare
+        bit-exactly.  On mismatch: count, trace, arm always-verify,
+        quarantine the declared registry entries, and serve the
+        *reference* value — a suspect primary result never leaves the
+        executor.  Returns (value, backend_name)."""
+        telemetry.incr("shadow_audits")
+        sp.event("shadow_audit", backend=backend)
+        try:
+            ref = run(self.shadow_backend)
+        except Exception as e:  # noqa: BLE001 — audit must not fail serving
+            telemetry.incr("shadow_audit_errors")
+            sp.event("shadow_audit_error", backend=self.shadow_backend,
+                     error=type(e).__name__)
+            return value, backend
+        if _bit_exact(value, ref):
+            return value, backend
+        telemetry.incr("shadow_mismatches")
+        sp.event("shadow_mismatch", backend=backend)
+        _obs.event("shadow_mismatch", op=op, backend=backend,
+                   shadow=self.shadow_backend)
+        _integrity.force_verify()
+        if self.registry is not None and registry_keys:
+            keys = (registry_keys(backend) if callable(registry_keys)
+                    else registry_keys)
+            for k in keys:
+                self.registry.quarantine(k)
+            if keys:
+                telemetry.incr("resilience_quarantines")
+        return ref, self.shadow_backend
+
+
+def _bit_exact(a, b) -> bool:
+    """Bit-exact structural equality for audit comparisons: bytes
+    compare as bytes, arrays as (shape, dtype, raw bytes), containers
+    recursively.  The engine's backends promise bit-exact agreement
+    (integer/GF(2^k) datapaths), so any difference is a defect, not
+    tolerance noise."""
+    if a is None or b is None:
+        return a is b
+    if isinstance(a, (bytes, bytearray)):
+        return isinstance(b, (bytes, bytearray)) and bytes(a) == bytes(b)
+    if isinstance(a, (tuple, list)):
+        return (isinstance(b, (tuple, list)) and len(a) == len(b)
+                and all(_bit_exact(x, y) for x, y in zip(a, b)))
+    if isinstance(a, dict):
+        return (isinstance(b, dict) and a.keys() == b.keys()
+                and all(_bit_exact(v, b[k]) for k, v in a.items()))
+    aa, bb = np.asarray(a), np.asarray(b)
+    return (aa.shape == bb.shape and aa.dtype == bb.dtype
+            and aa.tobytes() == bb.tobytes())
 
 
 # ---------------------------------------------------------------------------

@@ -53,6 +53,7 @@ import jax
 from repro import obs as _obs
 from repro.obs import drift as _drift
 from repro.core import crossbar as xb
+from repro.core import integrity as _integrity
 from repro.core import plan_program as pp
 from repro.core import telemetry
 
@@ -225,6 +226,11 @@ class StaticPlanRegistry:
         for i, plan in enumerate(program.plans):
             _require_static(plan, f"{key}[plan {i}]")
         self._programs[key] = program
+        # Seal the constants table at registration: ``program()`` hits
+        # re-verify on the sampling knob, so an in-place bit flip in the
+        # consts block is caught before the program fingerprint (which
+        # embeds a consts digest) would even be recomputed.
+        _integrity.CONST_GUARD.seal((self.name, key), (program.consts,))
         if precompile:
             with jax.ensure_compile_time_eval():
                 for plan in program.plans:
@@ -241,15 +247,34 @@ class StaticPlanRegistry:
                 built = builder()
             program = self.register_program(key, built,
                                             precompile=precompile)
+        else:
+            self._verify_program(key, program)
         return program
 
     def program(self, key: str) -> "pp.PlanProgram":
         try:
-            return self._programs[key]
+            program = self._programs[key]
         except KeyError:
             raise KeyError(
                 f"no program {key!r} in static registry {self.name!r} "
                 f"(registered: {sorted(self._programs)})") from None
+        self._verify_program(key, program)
+        return program
+
+    def _verify_program(self, key: str, program: "pp.PlanProgram") -> None:
+        """Sampled consts-digest check on program lookup.  A mismatch
+        evicts the program (no quarantine tick — the IntegrityError
+        reaches ``ResilientExecutor``, whose quarantine call records the
+        single count that keeps the first retry free) and raises."""
+        _integrity.CONST_GUARD.verify(
+            (self.name, key), lambda: (program.consts,),
+            evict=lambda: self._evict_program(key))
+
+    def _evict_program(self, key: str) -> None:
+        program = self._programs.pop(key, None)
+        if program is not None:
+            for plan in program.plans:
+                xb.unpin_plan(plan)
 
     def program_fingerprint(self, key: str) -> tuple:
         """Value-level identity of a whole program's schedule.
@@ -303,6 +328,7 @@ class StaticPlanRegistry:
         for k in list(self._programs):
             if k == key or k.startswith(key + "_x"):
                 evicted.extend(self._programs.pop(k).plans)
+                _integrity.CONST_GUARD.drop((self.name, k))
         for plan in evicted:
             xb.unpin_plan(plan)
         self._observed.clear()

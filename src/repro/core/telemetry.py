@@ -44,6 +44,7 @@ import threading
 import jax
 
 from repro.core import crossbar as xb
+from repro.core import integrity as _integrity
 from repro.core import plan_algebra as pa
 from repro.core import plan_program as pp
 
@@ -124,6 +125,7 @@ def reset() -> None:
         pa.clear_plan_cache()
         pp.reset_program_counters()
         pp.clear_program_cache()
+        _integrity.reset()
         _COUNTERS.clear()
     # Observability state (spans, histograms, drift baselines) resets
     # with the counters so the conftest fixture isolates it too.  Lazy:

@@ -216,6 +216,34 @@ def _local_apply(idx_block, w_block, x_block, n_i_loc, semiring, backend):
     return xb.apply_plan(plan, x_block, backend=backend)
 
 
+def shard_bounds(n: int, n_shards: int) -> list:
+    """Per-shard ``(lo, hi)`` row boundaries of an evenly sharded axis.
+
+    The slicing contract the serving layer's partial-batch recovery is
+    built on: shard ``s`` of a mesh-sharded batch owns exactly rows
+    ``[lo, hi)`` of the padded batch axis, so a completed shard's rows
+    can be salvaged — and a lost shard's rows replayed — by plain
+    slicing, without re-deriving any device placement.
+    """
+    if n_shards < 1:
+        raise ValueError(f"shard_bounds: n_shards={n_shards} must be >= 1")
+    if n % n_shards:
+        raise ValueError(f"shard_bounds: axis size {n} not divisible by "
+                         f"{n_shards} shards")
+    per = n // n_shards
+    return [(s * per, (s + 1) * per) for s in range(n_shards)]
+
+
+def _collective_round(round_index: int, pairs: tuple) -> None:
+    """Per-round hook on the host-side collective schedule derivation.
+
+    A no-op in production; ``core.faults.inject_faults`` patches this
+    module attribute to raise ``InjectedCollectiveFailure`` at
+    seed-chosen rounds, so collective-bearing mesh plans have a chaos
+    interception point just like apply/compile/megakernel do.
+    """
+
+
 def sharded_apply_fn(plan: xb.PermutePlan, mesh: Mesh, *,
                      axis: str = "data", backend: str = "einsum"):
     """Build the jit-able mesh executor for a plan: ``fn(x) -> out``.
@@ -248,6 +276,9 @@ def sharded_apply_fn(plan: xb.PermutePlan, mesh: Mesh, *,
                    n_out=g.n_out, n_in=g.n_in) as _sp:
         conn = shard_connectivity(g, s)
         schedule = collective_schedule(conn)
+        for r_i, rnd in enumerate(schedule):
+            if len(rnd):
+                _collective_round(r_i, tuple(rnd))
         _sp.set(rounds=sum(1 for r in schedule if len(r)))
         n_i_loc = g.n_in // s
         n_in = g.n_in

@@ -76,6 +76,17 @@ OPCODES = ("permute", "xor", "and", "andn", "add", "rotlv", "xor_const",
            "eq_const")
 
 
+def control_digest(steps, consts, plan_parts=()) -> str:
+    """Content digest of one program's kernel-visible control state:
+    the encoded step stream, the constants table, and the per-plan
+    idx/weight arrays, salted with the opcode numbering so a reordered
+    OPCODES tuple invalidates every sealed digest rather than letting
+    an old stream verify against a renumbered switch."""
+    from repro.core import integrity
+    return integrity.content_digest(
+        ("|".join(OPCODES), steps, consts) + tuple(plan_parts))
+
+
 def _rotlv(v, amt):
     """Per-row rotate-left; amount 0 is the identity (the masked ``&``
     keeps the ``v >> bits`` shift out of UB territory at amt == 0)."""

@@ -176,6 +176,21 @@ class MetricsRegistry:
         with self._lock:
             self._gauge_fns[name] = fn
 
+    def gauge_ratio(self, name: str, num_fn: Callable[[], float],
+                    den_fn: Callable[[], float]) -> None:
+        """Register a lazy ratio gauge: ``num_fn() / den_fn()`` at
+        export time, 0.0 when the denominator is zero.  The standard
+        shape for sampled-fraction observables (e.g. integrity verify
+        rate = digest checks / cache hits, journal occupancy = depth /
+        capacity) — the division lives here so every caller reports
+        the empty case the same way."""
+
+        def ratio() -> float:
+            den = den_fn()
+            return (num_fn() / den) if den else 0.0
+
+        self.gauge_fn(name, ratio)
+
     def unregister_gauge_fn(self, name: str) -> None:
         with self._lock:
             self._gauge_fns.pop(name, None)

@@ -62,6 +62,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import itertools
+import math
 import queue as queue_mod
 import threading
 import time
@@ -82,6 +84,7 @@ from repro.crypto import gcm, keccak
 from repro.crypto.registry import REGISTRY
 from repro.dist.fault import (HeartbeatTracker, StragglerPolicy,
                               survivor_mesh_shape)
+from repro.dist import mesh_exec as mx
 
 _RATE_BYTES = 136  # SHA3-256 sponge rate
 
@@ -137,17 +140,24 @@ def _aead_bucket(payload: bytes) -> tuple:
     return (len(payload) - 16 - aad_len, aad_len)   # (pt_len, aad_len)
 
 
+_RID_COUNTER = itertools.count(1)
+
+
 class Request:
     """One submitted payload: a thread-safe future with a deadline."""
 
     __slots__ = ("op", "payload", "deadline", "backend", "_event", "_value",
-                 "_exc", "_lock", "t_submit", "t_done", "trace_id")
+                 "_exc", "_lock", "t_submit", "t_done", "trace_id", "rid")
 
     def __init__(self, payload: bytes, op: str,
                  deadline: Optional[float]):
         self.op = op
         self.payload = payload
         self.deadline = deadline
+        # Process-unique request id: the key of the partial-batch
+        # result journal (idempotent replay needs an identity that
+        # survives requeue/recovery, which list position does not).
+        self.rid = next(_RID_COUNTER)
         self.backend: Optional[str] = None
         self._event = threading.Event()
         self._value: Optional[bytes] = None
@@ -247,6 +257,66 @@ class BatchingOptions:
     # Engine-held AES-128 key for op="gcm_seal" buckets (per-record
     # keys would defeat bucketing: the fused program is per-key).
     aead_key: bytes = b"\x00" * 16
+    # Partial-batch recovery on a mesh: execute each shard's lane
+    # window as its own journaled unit, so a device fault mid-batch
+    # salvages completed shards and replays only the lost lanes on the
+    # survivors.  False restores whole-batch sharded execution.
+    partial_results: bool = True
+    # Result-journal capacity (completed lanes kept for idempotent
+    # replay; oldest entries age out).
+    journal_cap: int = 4096
+
+
+class ResultJournal:
+    """Completed-lane journal for partial-batch recovery.
+
+    Maps request id -> result bytes for lanes whose shard completed,
+    so a replay after a mid-batch device fault is idempotent: windows
+    whose live lanes are all journaled are skipped, and a lane that
+    somehow replays anyway just re-records the same bytes.  Bounded
+    (FIFO aging) — the journal is a recovery scratchpad, not a cache.
+    """
+
+    def __init__(self, cap: int = 4096):
+        if cap < 1:
+            raise ValueError(f"journal cap must be >= 1, got {cap}")
+        self.cap = cap
+        self._lock = threading.Lock()
+        self._entries: "collections.OrderedDict[int, bytes]" = \
+            collections.OrderedDict()
+
+    def record(self, rid: int, value: bytes) -> None:
+        with self._lock:
+            self._entries[rid] = value
+            self._entries.move_to_end(rid)
+            while len(self._entries) > self.cap:
+                self._entries.popitem(last=False)
+
+    def get(self, rid: int) -> Optional[bytes]:
+        with self._lock:
+            return self._entries.get(rid)
+
+    def forget(self, rid: int) -> None:
+        with self._lock:
+            self._entries.pop(rid, None)
+
+    def depth(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+
+def _shard_probe(shard_index: int, device_index: int) -> None:
+    """Per-shard dispatch hook, called just before a shard's lanes
+    execute on ``device_index``.  A no-op in production;
+    ``core.faults.inject_device_fault`` patches this module attribute
+    to kill a chosen device mid-batch."""
+
+
+def _staging_put(queue, item) -> None:
+    """Staging-queue insertion hook (prep thread -> device feed).  A
+    plain ``put`` in production; ``core.faults.inject_faults`` patches
+    this module attribute to stall or drop prepared batches."""
+    queue.put(item)
 
 
 def _pack_blocks(payloads: Sequence[bytes]) -> np.ndarray:
@@ -267,7 +337,8 @@ def _pack_blocks(payloads: Sequence[bytes]) -> np.ndarray:
 def _absorb_digests(blocks: np.ndarray, backend: str, *,
                     fixed_latency: bool,
                     interpret: Optional[bool] = None,
-                    mesh=None, mesh_axis: str = "data") -> list:
+                    mesh=None, mesh_axis: str = "data",
+                    device=None) -> list:
     """Device-side half: sponge-absorb pre-packed blocks, one
     ``keccak_f1600`` per block, and squeeze the digests.
 
@@ -275,7 +346,10 @@ def _absorb_digests(blocks: np.ndarray, backend: str, *,
     every absorb step (XOR + keccak_f1600 with B as payload width) is
     elementwise across lanes, so GSPMD compiles it collective-free per
     shard (the PR 5 sharded-SHA3 pattern).  The megakernel backend runs
-    its own Pallas launch and keeps the unsharded path.
+    its own Pallas launch and keeps the unsharded path.  ``device``
+    pins the whole absorb to ONE device instead — the partial-batch
+    recovery path executes each shard's lane window as its own
+    journaled unit this way.
     """
     b, n_blocks = blocks.shape[:2]
     states = jnp.zeros((b, keccak.STATE_BITS), jnp.int32)
@@ -283,10 +357,14 @@ def _absorb_digests(blocks: np.ndarray, backend: str, *,
     if shard:
         sharding = NamedSharding(mesh, P(mesh_axis, None))
         states = jax.device_put(states, sharding)
+    elif device is not None:
+        states = jax.device_put(states, device)
     for i in range(n_blocks):
         block = jnp.asarray(blocks[:, i])
         if shard:
             block = jax.device_put(block, sharding)
+        elif device is not None:
+            block = jax.device_put(block, device)
         states = states ^ block
         states = keccak.keccak_f1600(states, backend=backend,
                                      batch_mode="payload",
@@ -379,6 +457,8 @@ class BatchingEngine:
             self._mesh_devices = list(np.asarray(
                 options.mesh.devices).reshape(-1))
             self.device_health = DeviceHealth(len(self._mesh_devices))
+        # Partial-batch recovery journal: completed lanes by request id.
+        self.journal = ResultJournal(cap=options.journal_cap)
         # Measured backend tuning (core/tuning.py): records every bucket
         # wall time, rank-orders the fallback chain, and backs
         # crossbar's backend="auto" for the passes inside each absorb.
@@ -406,6 +486,7 @@ class BatchingEngine:
                               lambda: len(self.tuning))
         _obs.metrics.gauge_fn("serve_staging_depth",
                               self._staging.qsize)
+        _obs.metrics.gauge_fn("serve_journal_depth", self.journal.depth)
         if self.device_health is not None:
             def _mesh_active() -> int:
                 mesh = self._active_mesh()
@@ -627,6 +708,14 @@ class BatchingEngine:
         shape = (b_pad,) + geom
         mesh = self._active_mesh()
         mesh_shape = None if mesh is None else dict(mesh.shape)
+        if (self.opt.partial_results and mesh is not None
+                and op != "gcm_seal"
+                and int(np.prod(list(mesh_shape.values()))) > 1):
+            # Per-shard journaled execution: a device fault mid-batch
+            # loses one lane window, not the batch.  (gcm_seal keeps
+            # the single-launch fused path — it never shards.)
+            return self._execute_batch_partial(batch, op, geom, b_pad,
+                                               data, mesh)
 
         if op == "gcm_seal":
             def run(backend: str) -> list:
@@ -680,6 +769,187 @@ class BatchingEngine:
         for req, digest in zip(batch, res.value):
             req._finish(value=digest, backend=res.backend)
 
+    # -- partial-batch recovery --------------------------------------------
+
+    def _force_trip(self, device_index: int) -> None:
+        """Take a device out of the mesh NOW: a device-attributed fault
+        mid-batch is definitive, not a strike toward a threshold."""
+        while self.device_health.is_healthy(device_index):
+            self.device_health.record_failure(device_index)
+        telemetry.incr("serve_mesh_device_drops")
+
+    def _run_shard(self, op: str, geom: tuple, window: np.ndarray,
+                   shard_index: int, device_index: int):
+        """Execute one shard's lane window on one device through the
+        resilient chain.  Returns the ResilientResult."""
+        device = self._mesh_devices[device_index]
+
+        def run(backend: str) -> list:
+            _shard_probe(shard_index, device_index)
+            return _absorb_digests(window, backend,
+                                   fixed_latency=self.opt.fixed_latency,
+                                   interpret=self.interpret,
+                                   device=device)
+
+        chain = self.tuning.rank_chain(
+            op, (window.shape[0],) + geom, self.chain)
+        telemetry.incr("serve_shard_launches")
+        return self.executor.execute(op, (window.shape[0],) + geom, run,
+                                     chain=chain,
+                                     registry_keys=_keccak_registry_keys)
+
+    @staticmethod
+    def _device_of_fault(exc: BaseException) -> Optional[int]:
+        """Walk the cause chain for a device-attributed failure."""
+        seen = 0
+        while exc is not None and seen < 16:
+            device = getattr(exc, "device", None)
+            if isinstance(device, int):
+                return device
+            exc = exc.__cause__ or exc.__context__
+            seen += 1
+        return None
+
+    def _execute_batch_partial(self, batch: list, op: str, geom: tuple,
+                               b_pad: int, data: np.ndarray, mesh) -> None:
+        """Mesh execution with per-shard journaling and lost-lane replay.
+
+        Each shard of the padded batch axis runs as its own resilient
+        execution pinned to its device.  A completed shard's real lanes
+        finish (and journal) immediately — they are salvaged no matter
+        what later shards do.  A faulted shard force-trips its device
+        and queues ONLY its window for replay on a surviving device:
+        idempotent (journaled lanes are skipped), deadline-aware (lanes
+        that cannot make their deadline on the survivors shed with
+        ``Overloaded``), and geometry-stable (the replay window keeps
+        the per-shard shape, so no new compilation is triggered).
+        """
+        devices = list(np.asarray(mesh.devices).reshape(-1))
+        bounds = mx.shard_bounds(b_pad, len(devices))
+        by_lane: list = list(batch) + [None] * (b_pad - len(batch))
+        telemetry.incr("serve_partial_batches")
+        sp = _obs.span("partial_batch", trace_id=batch[0].trace_id, op=op,
+                       b_pad=b_pad, shards=len(devices), lanes=len(batch))
+        backend_used = None
+        lost: list = []
+        last_fault: Optional[Fault] = None
+
+        def finish_window(lo: int, hi: int, values: list,
+                          backend: str) -> None:
+            for lane in range(lo, hi):
+                req = by_lane[lane]
+                if req is None:
+                    continue
+                self.journal.record(req.rid, values[lane - lo])
+                if req._finish(value=values[lane - lo], backend=backend):
+                    telemetry.incr("serve_completed")
+
+        with sp:
+            for s, (lo, hi) in enumerate(bounds):
+                device_index = self._mesh_devices.index(devices[s])
+                try:
+                    res = self._run_shard(op, geom, data[lo:hi], s,
+                                          device_index)
+                except Fault as e:
+                    at_fault = self._device_of_fault(e)
+                    self._force_trip(at_fault if at_fault is not None
+                                     else device_index)
+                    sp.event("shard_lost", shard=s, device=device_index)
+                    lost.append((s, lo, hi))
+                    last_fault = e
+                    continue
+                backend_used = backend_used or res.backend
+                self.device_health.record_success(device_index)
+                finish_window(lo, hi, res.value, res.backend)
+            if lost:
+                telemetry.incr("serve_shards_salvaged",
+                               len(bounds) - len(lost))
+                self._replay_lost(op, geom, data, by_lane, lost,
+                                  last_fault, sp)
+        # Span closed: its duration is the whole batch (salvage + any
+        # replay), which is what the straggler EWMA should see.
+        self.straggler.observe(sp.duration_s)
+        telemetry.incr("serve_batches")
+        telemetry.incr("serve_mesh_batches")
+        self.batch_log.append((op, (b_pad,) + geom,
+                               backend_used or "replay", len(batch)))
+
+    def _replay_lost(self, op: str, geom: tuple, data: np.ndarray,
+                     by_lane: list, lost: list,
+                     last_fault: Optional[Fault], sp) -> None:
+        """Replay only the lost shards' lane windows on the survivors."""
+        survivors = [d for d in range(len(self._mesh_devices))
+                     if self.device_health.is_healthy(d)]
+        if not survivors:
+            telemetry.incr("serve_mesh_collapsed")
+            for s, lo, hi in lost:
+                for lane in range(lo, hi):
+                    req = by_lane[lane]
+                    if req is not None:
+                        telemetry.incr("serve_failed")
+                        req._finish(exc=last_fault)
+            return
+        # Deadline-aware resubmission: the straggler EWMA (scaled by
+        # its deadline factor) estimates one replay window's wall time;
+        # lanes that cannot make their deadline shed NOW with
+        # Overloaded instead of wasting survivor capacity.
+        est_s = self.straggler.deadline
+        now = time.monotonic()
+        for s, lo, hi in lost:
+            for lane in range(lo, hi):
+                req = by_lane[lane]
+                if req is None or req.deadline is None:
+                    continue
+                if now >= req.deadline or (math.isfinite(est_s)
+                                           and now + est_s > req.deadline):
+                    if req._finish(exc=Overloaded(
+                            "survivor mesh cannot absorb the replay "
+                            "before this request's deadline")):
+                        telemetry.incr("serve_shed")
+                        by_lane[lane] = None
+        rr = itertools.cycle(survivors)
+        for s, lo, hi in lost:
+            live = [lane for lane in range(lo, hi)
+                    if by_lane[lane] is not None
+                    and not by_lane[lane].done()]
+            # Idempotent replay: a window whose live lanes all have
+            # journaled results (an earlier replay got them) re-serves
+            # from the journal without re-executing.
+            pending = [lane for lane in live
+                       if self.journal.get(by_lane[lane].rid) is None]
+            if live and not pending:
+                for lane in live:
+                    req = by_lane[lane]
+                    if req._finish(value=self.journal.get(req.rid),
+                                   backend="journal"):
+                        telemetry.incr("serve_completed")
+                continue
+            if not live:
+                continue  # nothing real in this window survived
+            device_index = next(rr)
+            try:
+                res = self._run_shard(op, geom, data[lo:hi], s,
+                                      device_index)
+            except Fault as e:
+                at_fault = self._device_of_fault(e)
+                self._force_trip(at_fault if at_fault is not None
+                                 else device_index)
+                sp.event("replay_lost", shard=s, device=device_index)
+                for lane in live:
+                    telemetry.incr("serve_failed")
+                    by_lane[lane]._finish(exc=e)
+                continue
+            telemetry.incr("lanes_replayed", len(live))
+            sp.event("replayed", shard=s, lanes=len(live),
+                     device=device_index)
+            self.device_health.record_success(device_index)
+            for lane in live:
+                req = by_lane[lane]
+                self.journal.record(req.rid, res.value[lane - lo])
+                if req._finish(value=res.value[lane - lo],
+                               backend=res.backend):
+                    telemetry.incr("serve_completed")
+
     def run_once(self) -> int:
         """Process one batch synchronously (deterministic test hook).
 
@@ -704,7 +974,18 @@ class BatchingEngine:
                     break
                 batch, _ = self._take_batch_locked()
             if batch:
-                self._staging.put((batch, self._prepare(batch)))
+                try:
+                    _staging_put(self._staging,
+                                 (batch, self._prepare(batch)))
+                except Exception:  # noqa: BLE001 — staging drop/chaos
+                    # A dropped staging put must not lose requests: the
+                    # batch goes back to the FRONT of the admission
+                    # queue (it still holds the oldest requests) and is
+                    # re-taken — and re-prepared — on the next pass.
+                    telemetry.incr("serve_staging_drops")
+                    with self._work:
+                        self._queue.extendleft(reversed(batch))
+                        self._work.notify()
         self._staging.put(None)  # sentinel: feed thread drains then exits
 
     def _worker_loop(self) -> None:
@@ -754,6 +1035,7 @@ class BatchingEngine:
             list(map(str, k)) for k in self.executor.breaker.open_keys()]
         out["straggler_deadline_s"] = self.straggler.deadline
         out["tuning_entries"] = len(self.tuning)
+        out["journal_depth"] = self.journal.depth()
         if self.device_health is not None:
             mesh = self._active_mesh()
             out["mesh_devices"] = len(self._mesh_devices)

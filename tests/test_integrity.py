@@ -1,0 +1,456 @@
+"""Integrity-checked execution: digest guards, shadow audits, and the
+expanded fault-injection sites.
+
+The guards live in ``core.integrity`` and are wired into the compile /
+lift / program caches; the fault injector (``core.faults``) supplies the
+corruption these tests expect them to catch.  Everything is seeded and
+clock-free, so corruption-and-heal is a regression test like any other:
+a flipped bit is detected, evicted, quarantined, and the recompiled
+answer is bit-exact.
+"""
+
+import hashlib
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs as _obs
+from repro.core import crossbar as xb
+from repro.core import faults, integrity
+from repro.core import plan_program as pp
+from repro.core import telemetry
+from repro.core.integrity import IntegrityError
+from repro.core.resilience import (CircuitBreaker, IntegrityFault,
+                                   ResilientExecutor, RetryPolicy, classify)
+from repro.core.semiring import GF2, GF2_8
+from repro.crypto import keccak
+from repro.crypto.registry import REGISTRY
+from repro.dist import mesh_exec as mx
+from repro.obs.metrics import MetricsRegistry
+
+pytestmark = pytest.mark.chaos
+
+
+@pytest.fixture(autouse=True)
+def _clean():
+    telemetry.reset()        # also clears program caches + integrity state
+    xb.clear_compile_cache()
+    xb.clear_lift_cache()
+    yield
+    telemetry.reset()
+    xb.clear_compile_cache()
+    xb.clear_lift_cache()
+
+
+def _perm_plan(n=64, seed=0, semiring=GF2):
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.permutation(n).astype(np.int32))[:, None]
+    return xb.gather_plan(idx, n, semiring=semiring)
+
+
+# ---------------------------------------------------------------------------
+# Content digests
+# ---------------------------------------------------------------------------
+
+class TestContentDigest:
+    def test_deterministic(self):
+        parts = (b"abc", np.arange(8, dtype=np.int32), 7, None)
+        assert integrity.content_digest(parts) == \
+            integrity.content_digest(parts)
+
+    def test_part_boundaries_do_not_alias(self):
+        assert integrity.content_digest((b"ab", b"c")) != \
+            integrity.content_digest((b"a", b"bc"))
+
+    def test_dtype_and_shape_matter(self):
+        a32 = np.arange(4, dtype=np.int32)
+        a64 = np.arange(4, dtype=np.int64)
+        assert integrity.content_digest((a32,)) != \
+            integrity.content_digest((a64,))
+        assert integrity.content_digest((a32,)) != \
+            integrity.content_digest((a32.reshape(2, 2),))
+
+    def test_single_bit_flip_changes_digest(self):
+        arr = np.zeros(16, np.int32)
+        before = integrity.content_digest((arr,))
+        flipped = arr.copy()
+        faults._flip_random_bit(flipped, np.random.default_rng(0))
+        assert integrity.content_digest((flipped,)) != before
+
+    def test_jax_and_numpy_agree(self):
+        host = np.arange(32, dtype=np.int32)
+        assert integrity.content_digest((host,)) == \
+            integrity.content_digest((jnp.asarray(host),))
+
+    def test_none_distinct_from_empty(self):
+        assert integrity.content_digest((None,)) != \
+            integrity.content_digest((b"",))
+
+
+# ---------------------------------------------------------------------------
+# CacheGuard semantics (unit)
+# ---------------------------------------------------------------------------
+
+class TestCacheGuard:
+    def test_first_hit_always_verifies(self):
+        g = integrity.CacheGuard("t", sample_every=1000)
+        g.seal("k", (b"content",))
+        assert g.verify("k", lambda: (b"content",)) is True
+        assert g.verify("k", lambda: (b"content",)) is False  # unsampled
+
+    def test_sampling_cadence(self):
+        g = integrity.CacheGuard("t", sample_every=4)
+        g.seal("k", (b"c",))
+        checked = [g.verify("k", lambda: (b"c",)) for _ in range(9)]
+        # hits 0, 4, 8 verify; the rest are free
+        assert checked == [True, False, False, False, True,
+                           False, False, False, True]
+        info = g.info()
+        assert info["hits"] == 9 and info["checks"] == 3
+
+    def test_unknown_key_is_unchecked(self):
+        g = integrity.CacheGuard("t")
+        assert g.verify("never-sealed", lambda: (b"x",)) is False
+
+    def test_mismatch_evicts_counts_and_raises(self):
+        g = integrity.CacheGuard("t", sample_every=1)
+        g.seal("k", (b"good",))
+        evicted = []
+        with pytest.raises(IntegrityError) as ei:
+            g.verify("k", lambda: (b"bad",),
+                     evict=lambda: evicted.append("k"))
+        assert ei.value.guard == "t" and ei.value.key == "k"
+        assert evicted == ["k"]
+        # the seal is gone: the key now reads as never-sealed
+        assert g.verify("k", lambda: (b"bad",)) is False
+        assert telemetry.snapshot().get("integrity_faults") == 1
+        assert classify(ei.value) is IntegrityFault
+
+    def test_reseal_overwrites_stale_digest(self):
+        g = integrity.CacheGuard("t", sample_every=1)
+        g.seal("k", (b"v1",))
+        g.seal("k", (b"v2",))          # recycled key, new content
+        assert g.verify("k", lambda: (b"v2",)) is True
+
+    def test_force_verify_arms_every_entry(self):
+        g = integrity.CacheGuard("t", sample_every=1000)
+        g.seal("k", (b"c",))
+        assert g.verify("k", lambda: (b"c",)) is True    # first hit
+        assert g.verify("k", lambda: (b"c",)) is False   # unsampled
+        integrity.force_verify()
+        assert g.verify("k", lambda: (b"c",)) is True    # armed
+        assert g.verify("k", lambda: (b"c",)) is False   # disarmed again
+
+    def test_always_verify_scope(self):
+        prev = integrity.sample_every()
+        with integrity.always_verify():
+            assert integrity.sample_every() == 1
+        assert integrity.sample_every() == prev
+
+    def test_sample_every_validation(self):
+        with pytest.raises(ValueError):
+            integrity.set_sample_every(0)
+
+    def test_integrity_info_rate(self):
+        g = integrity.SCHEDULE_GUARD
+        g.seal("k", (b"c",))
+        for _ in range(4):
+            g.verify("k", lambda: (b"c",))
+        info = integrity.integrity_info()
+        assert info["schedule"]["hits"] == 4
+        assert 0.0 < info["verify_rate"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Guarded engine caches: corrupt -> catch -> heal
+# ---------------------------------------------------------------------------
+
+class TestGuardedCaches:
+    def test_schedule_corruption_caught_and_recompiled(self):
+        plan = _perm_plan()
+        want = np.asarray(xb.compile_plan(plan).pair_o)
+        with integrity.always_verify():
+            assert faults.corrupt_cache(
+                np.random.default_rng(0), target="schedule") is not None
+            with pytest.raises(IntegrityError) as ei:
+                xb.compile_plan(plan)
+            assert ei.value.guard == "schedule"
+            # the poisoned entry was evicted: this compile is a clean miss
+            again = np.asarray(xb.compile_plan(plan).pair_o)
+        np.testing.assert_array_equal(again, want)
+
+    def test_lift_corruption_caught_and_rebuilt(self):
+        plan = _perm_plan(n=16, semiring=GF2_8)
+        want = np.asarray(xb.lift_gf2_k(plan).idx)
+        with integrity.always_verify():
+            assert faults.corrupt_cache(
+                np.random.default_rng(1), target="lift") is not None
+            with pytest.raises(IntegrityError) as ei:
+                xb.lift_gf2_k(plan)
+            assert ei.value.guard == "lift"
+            again = np.asarray(xb.lift_gf2_k(plan).idx)
+        np.testing.assert_array_equal(again, want)
+
+    def test_const_corruption_heals_through_executor(self):
+        """The full loop: a flipped bit in the cached Keccak program
+        constants is caught by a digest guard, the registry entry is
+        quarantined, and the executor's free retry serves a bit-exact
+        digest — the poison never reaches a caller."""
+        msg = b"integrity checked execution"
+        want = hashlib.sha3_256(msg).digest()
+
+        def run(backend):
+            return keccak.sha3_256(msg, backend=backend)
+
+        ex = ResilientExecutor(
+            chain=("megakernel",), registry=REGISTRY,
+            retry=RetryPolicy(max_attempts=2, backoff_base_s=0.0),
+            breaker=CircuitBreaker(threshold=10), sleep=lambda s: None)
+        keys = (keccak.MEGAKERNEL_PROGRAM_KEY,)
+        with integrity.always_verify():
+            assert ex.execute("sha3_256", (1,), run,
+                              registry_keys=keys).value == want
+            assert faults.corrupt_cache(
+                np.random.default_rng(2), target="const") is not None
+            res = ex.execute("sha3_256", (1,), run, registry_keys=keys)
+        assert res.value == want
+        snap = telemetry.snapshot()
+        assert snap.get("integrity_faults", 0) >= 1
+        assert snap.get("resilience_quarantines", 0) >= 1
+
+    def test_fault_arms_always_verify_on_next_hit(self):
+        """Any executor fault (here an injected launch failure) forces
+        the next hit of every sealed entry to verify, regardless of the
+        sampling phase — corruption that rode in WITH the fault is
+        caught on the very next touch."""
+        plan = _perm_plan(seed=3)
+        integrity.set_sample_every(10_000)
+        try:
+            xb.compile_plan(plan)        # seal
+            xb.compile_plan(plan)        # hit 0: verified (first hit)
+            before = integrity.SCHEDULE_GUARD.info()["checks"]
+            xb.compile_plan(plan)        # unsampled
+            assert integrity.SCHEDULE_GUARD.info()["checks"] == before
+
+            ex = ResilientExecutor(
+                chain=("einsum",),
+                retry=RetryPolicy(max_attempts=1, backoff_base_s=0.0),
+                breaker=CircuitBreaker(threshold=10), sleep=lambda s: None)
+
+            def boom(backend):
+                raise faults.InjectedLaunchFailure("chaos")
+
+            from repro.core.resilience import Fault
+            with pytest.raises(Fault):
+                ex.execute("op", (8,), boom)
+            xb.compile_plan(plan)        # armed: this hit verifies
+            assert integrity.SCHEDULE_GUARD.info()["checks"] == before + 1
+        finally:
+            integrity.set_sample_every(16)
+
+    def test_corrupt_cache_empty_returns_none(self):
+        assert faults.corrupt_cache(np.random.default_rng(0)) is None
+
+
+# ---------------------------------------------------------------------------
+# Shadow audits
+# ---------------------------------------------------------------------------
+
+def _executor(**kw):
+    kw.setdefault("retry", RetryPolicy(max_attempts=1, backoff_base_s=0.0))
+    kw.setdefault("breaker", CircuitBreaker(threshold=100))
+    kw.setdefault("sleep", lambda s: None)
+    return ResilientExecutor(**kw)
+
+
+class TestShadowAudit:
+    def test_clean_audit_keeps_primary(self):
+        ex = _executor(chain=("einsum",), shadow_rate=1.0)
+        res = ex.execute("op", (4,), lambda backend: [b"same"])
+        assert res.value == [b"same"] and res.backend == "einsum"
+        snap = telemetry.snapshot()
+        assert snap.get("shadow_audits") == 1
+        assert snap.get("shadow_mismatches", 0) == 0
+
+    def test_mismatch_serves_reference_value(self):
+        calls = []
+
+        def run(backend):
+            calls.append(backend)
+            return [b"WRONG" if backend == "einsum" else b"right"]
+
+        ex = _executor(chain=("einsum",), shadow_rate=1.0)
+        res = ex.execute("op", (4,), run)
+        assert res.value == [b"right"]
+        assert res.backend == "reference"
+        assert calls == ["einsum", "reference"]
+        snap = telemetry.snapshot()
+        assert snap.get("shadow_mismatches") == 1
+
+    def test_shadow_backend_never_audits_itself(self):
+        ex = _executor(chain=("reference",), shadow_rate=1.0)
+        ex.execute("op", (4,), lambda backend: [b"x"])
+        assert telemetry.snapshot().get("shadow_audits", 0) == 0
+
+    def test_audit_error_does_not_fail_serving(self):
+        def run(backend):
+            if backend == "reference":
+                raise RuntimeError("shadow lane down")
+            return [b"primary"]
+
+        ex = _executor(chain=("einsum",), shadow_rate=1.0)
+        res = ex.execute("op", (4,), run)
+        assert res.value == [b"primary"] and res.backend == "einsum"
+        assert telemetry.snapshot().get("shadow_audit_errors") == 1
+
+    def test_sampling_is_seed_deterministic(self):
+        def audited(ex, n=24):
+            out = []
+            for _ in range(n):
+                telemetry.reset()
+                ex.execute("op", (4,), lambda backend: [b"v"])
+                out.append(telemetry.snapshot().get("shadow_audits", 0))
+            return out
+
+        a = audited(_executor(chain=("einsum",), shadow_rate=0.5,
+                              shadow_seed=7))
+        b = audited(_executor(chain=("einsum",), shadow_rate=0.5,
+                              shadow_seed=7))
+        assert a == b and 0 < sum(a) < 24
+
+    def test_rate_validation(self):
+        with pytest.raises(ValueError):
+            _executor(chain=("einsum",), shadow_rate=1.5)
+
+    def test_mismatch_quarantines_registry_keys(self):
+        name = "test/shadow_quarantine"
+
+        def run(backend):
+            return [b"A" if backend == "einsum" else b"B"]
+
+        ex = _executor(chain=("einsum",), shadow_rate=1.0,
+                       registry=REGISTRY)
+        before = REGISTRY.quarantine_count(name)
+        res = ex.execute("op", (4,), run, registry_keys=(name,))
+        assert res.value == [b"B"]
+        assert telemetry.snapshot().get("resilience_quarantines") == 1
+        assert REGISTRY.quarantine_count(name) == before + 1
+
+
+# ---------------------------------------------------------------------------
+# Injection sites: filtering, the new choke points
+# ---------------------------------------------------------------------------
+
+class TestInjectionSites:
+    def test_unknown_site_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault sites"):
+            with faults.inject_faults(sites=("warp-core",)):
+                pass
+
+    def test_staging_mode_validated(self):
+        with pytest.raises(ValueError, match="staging_mode"):
+            with faults.inject_faults(staging_mode="explode"):
+                pass
+
+    def test_site_whitelist_disarms_other_rates(self):
+        plan = _perm_plan(seed=8)
+        x = jnp.ones(64, jnp.int32)
+        with faults.inject_faults(seed=0, launch_rate=1.0,
+                                  program_rate=1.0,
+                                  sites=("program",)) as inj:
+            # apply is disarmed by the whitelist: this must NOT raise
+            xb.apply_plan(plan, x, backend="einsum")
+        assert inj.rates["apply"] == 0.0
+        assert inj.rates["program"] == 1.0
+        assert all(site == "program" for site, _ in inj.injected)
+
+    def test_collective_site_patches_and_restores(self):
+        orig = mx._collective_round
+        with faults.inject_faults(seed=0, collective_rate=1.0):
+            assert mx._collective_round is not orig
+            with pytest.raises(faults.InjectedCollectiveFailure,
+                               match="round 0"):
+                mx._collective_round(0, ((0, 1), (1, 2)))
+        assert mx._collective_round is orig
+        mx._collective_round(0, ((0, 1),))   # production hook: a no-op
+
+    def test_collective_round_fires_per_nonempty_round(self):
+        """A rotation plan schedules exactly one ppermute round, so the
+        derivation loop calls the hook once."""
+        seen = []
+        orig = mx._collective_round
+        mx._collective_round = lambda r, pairs: seen.append((r, len(pairs)))
+        try:
+            conn = np.roll(np.eye(4, dtype=np.int64), -1, axis=1)
+            schedule = mx.collective_schedule(conn)
+            for r_i, rnd in enumerate(schedule):
+                if len(rnd):
+                    mx._collective_round(r_i, tuple(rnd))
+        finally:
+            mx._collective_round = orig
+        assert seen == [(0, 4)]
+
+    def test_device_fault_patches_shard_probe(self):
+        from repro.serve import batching as sb
+        orig = sb._shard_probe
+        with faults.inject_device_fault(3, max_fires=2) as state:
+            sb._shard_probe(0, 0)            # wrong device: no fire
+            with pytest.raises(faults.InjectedDeviceFailure) as ei:
+                sb._shard_probe(1, 3)
+            assert ei.value.device == 3
+            with pytest.raises(faults.InjectedDeviceFailure):
+                sb._shard_probe(2, 3)
+            sb._shard_probe(3, 3)            # budget exhausted
+            assert state["fired"] == 2
+        assert sb._shard_probe is orig
+
+    def test_poison_observations_site_filter(self):
+        class Stub:
+            _observed = {
+                ("keccak/rho_pi", ((1600,),), "einsum"): ("sig",),
+                ("gcm/absorb", ((8,),), "megakernel"): ("sig",),
+                ("gcm/ghash", ((8,),), "einsum"): ("sig",),
+            }
+
+        stub = Stub()
+        assert faults.poison_observations(stub, site="gcm") == 2
+        assert stub._observed[
+            ("keccak/rho_pi", ((1600,),), "einsum")] == ("sig",)
+        assert faults.poison_observations(stub) == 3   # everything
+
+    def test_shard_bounds(self):
+        assert mx.shard_bounds(8, 4) == [(0, 2), (2, 4), (4, 6), (6, 8)]
+        with pytest.raises(ValueError):
+            mx.shard_bounds(10, 4)
+        with pytest.raises(ValueError):
+            mx.shard_bounds(8, 0)
+
+
+# ---------------------------------------------------------------------------
+# Observability wiring
+# ---------------------------------------------------------------------------
+
+class TestGauges:
+    def test_gauge_ratio(self):
+        reg = MetricsRegistry()
+        num, den = [3.0], [4.0]
+        reg.gauge_ratio("r", lambda: num[0], lambda: den[0])
+        assert reg.snapshot(include_telemetry=False)["gauges"]["r"] == 0.75
+        den[0] = 0.0
+        assert reg.snapshot(include_telemetry=False)["gauges"]["r"] == 0.0
+
+    def test_integrity_gauges_registered(self):
+        gauges = _obs.metrics.snapshot(
+            include_telemetry=False)["gauges"]
+        assert gauges["integrity_sample_every"] == integrity.sample_every()
+        for name in ("integrity_verify_rate", "integrity_sealed_entries"):
+            assert name in gauges
+            assert not math.isnan(gauges[name])
+
+    def test_sealed_entries_gauge_tracks_compiles(self):
+        base = sum(g.depth() for g in integrity.GUARDS)
+        xb.compile_plan(_perm_plan(seed=11))
+        gauges = _obs.metrics.snapshot(include_telemetry=False)["gauges"]
+        assert gauges["integrity_sealed_entries"] == base + 1

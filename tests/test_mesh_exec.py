@@ -433,3 +433,78 @@ def test_survivor_mesh_keeps_answering():
     """8 fake devices: tripping two devices re-homes serving onto a
     survivor mesh and every digest still equals hashlib."""
     _run_sub(SURVIVOR_SCRIPT, "SURVIVOR-OK")
+
+
+PARTIAL_REPLAY_SCRIPT = _MESH_COMPAT + textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import hashlib
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.core import faults, telemetry
+    from repro.serve.batching import BatchingEngine, BatchingOptions
+
+    mesh = Mesh(np.asarray(jax.devices()), ("data",))
+    eng = BatchingEngine(
+        BatchingOptions(max_batch=64, max_queue=256, mesh=mesh,
+                        double_buffer=False),
+        start=False)
+    rng = np.random.default_rng(0)
+    payloads = [rng.bytes(int(l)) for l in rng.integers(1, 100, 64)]
+
+    def drain():
+        reqs = [eng.submit(p) for p in payloads]
+        while eng.run_once():
+            pass
+        return reqs
+
+    def check(reqs, label):
+        assert all(r.result() == hashlib.sha3_256(p).digest()
+                   for p, r in zip(payloads, reqs)), label
+
+    # Warm pass: 64 lanes over 8 devices = 8 per-shard launches, all
+    # journaled per lane.
+    check(drain(), "warm full mesh")
+    assert telemetry.counter("serve_shard_launches") == 8
+    assert telemetry.counter("serve_partial_batches") == 1
+
+    # Kill device 3 mid-batch.  max_fires is generous: the dead device
+    # must fail EVERY retry and fallback rung, or the shard would heal
+    # in place and nothing would need replaying.
+    base = telemetry.snapshot()
+    with faults.inject_device_fault(3, max_fires=64) as state:
+        reqs = drain()
+    check(reqs, "post-fault results")
+    snap = telemetry.snapshot()
+    d = lambda k: snap.get(k, 0) - base.get(k, 0)
+    # The launch-count ledger: 8 shard dispatches + exactly 1 replay of
+    # the lost window — the 7 salvaged shards are NOT re-executed.
+    assert d("serve_shard_launches") == 9, d("serve_shard_launches")
+    assert d("serve_shards_salvaged") == 7
+    assert d("lanes_replayed") == 8, d("lanes_replayed")
+    assert d("serve_completed") == 64
+    assert d("serve_mesh_device_drops") == 1
+    assert state["fired"] >= 1
+    assert eng.stats()["mesh_lost"] == [3]
+
+    # The tripped device stays out: the next batch runs on the survivor
+    # mesh with one launch per surviving shard and no replays.
+    base = telemetry.snapshot()
+    check(drain(), "survivor mesh")
+    active = eng.stats()["mesh_active"]
+    snap = telemetry.snapshot()
+    d = lambda k: snap.get(k, 0) - base.get(k, 0)
+    assert 0 < active < 8
+    assert d("serve_shard_launches") == active, (active, snap)
+    assert d("lanes_replayed") == 0
+    print("PARTIAL-REPLAY-OK")
+""")
+
+
+def test_partial_batch_replay_after_device_fault():
+    """8 fake devices: a device killed mid-batch loses exactly one
+    shard; its lanes replay on a survivor while the 7 completed shards'
+    results are salvaged from the per-lane journal — asserted through
+    the launch-count ledger (8 + 1 launches, never 16)."""
+    _run_sub(PARTIAL_REPLAY_SCRIPT, "PARTIAL-REPLAY-OK")
